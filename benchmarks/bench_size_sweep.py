@@ -1,0 +1,43 @@
+"""Paper Table 2 — NeighborHash vs dataset size: MOPS, exact APCL, and the
+bytes-per-lookup model (APCL × 64 B line + query/result traffic).  The paper
+measured BPL with PCM hardware counters; ours is exact accounting from the
+probe traces (DESIGN.md §2 'what does not transfer')."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import block, row, timeit
+from benchmarks.table_cache import get_kv, get_table, query_mix
+from repro.core import hashcore as hc
+from repro.core import lookup as lk
+
+SIZES = {"16K": 1 << 14, "64K": 1 << 16, "256K": 1 << 18, "1M": 1 << 20}
+N_QUERIES = 1 << 16
+LINE_BYTES = 64
+
+
+def main(quick: bool = False) -> list[str]:
+    rows = []
+    sizes = dict(list(SIZES.items())[:2]) if quick else SIZES
+    for label, n in sizes.items():
+        t = get_table(n, "neighborhash")
+        keys, _ = get_kv(n)
+        q = query_mix(keys, N_QUERIES)
+        qh, ql = hc.key_split_np(q)
+        qh, ql = jnp.asarray(qh), jnp.asarray(ql)
+        arrs = {k: jnp.asarray(v) for k, v in t.device_arrays().items()}
+        mp = max(t.max_probe_len() + 1, 2)
+        us = timeit(lambda: block(lk.lookup(
+            arrs["key_hi"], arrs["key_lo"], arrs["val_hi"], arrs["val_lo"],
+            None, qh, ql, home_capacity=t.home_capacity, inline=True,
+            host_check=True, max_probes=mp)))
+        apcl = t.apcl(q[:2000])
+        bpl = apcl * LINE_BYTES
+        rows.append(row(f"t2_neighborhash_{label}", us,
+                        f"mops={N_QUERIES / us:.1f};apcl={apcl:.3f};"
+                        f"bpl_model={bpl:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

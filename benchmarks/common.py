@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing.  Output contract (benchmarks/run.py):
+``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall microseconds per call (fn must block on completion)."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def block(x):
+    import jax
+    return jax.block_until_ready(x)
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line, flush=True)
+    return line

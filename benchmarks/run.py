@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks datasets."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: t1,t2,t3,t4,f9,f10")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_scalar_tables, bench_size_sweep,
+                            bench_ablation, bench_batch_latency,
+                            bench_vectorization, bench_consistency,
+                            bench_resource)
+    suites = {
+        "t1": bench_scalar_tables.main,
+        "t2": bench_size_sweep.main,
+        "t3": bench_ablation.main,
+        "t4": bench_batch_latency.main,
+        "f9": bench_vectorization.main,
+        "f10": bench_consistency.main,
+        "t5": bench_resource.main,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, fn in suites.items():
+        if key not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+        except Exception as e:     # noqa: BLE001
+            failures += 1
+            print(f"{key}_SUITE_FAILED,0,{type(e).__name__}:{e}",
+                  flush=True)
+        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Serving demo (deliverable b): a NeighborKV feature store behind the
+batch-query subsystem serving batched CTR scoring, surviving a rolling
+update mid-traffic with strong version consistency and hedged requests.
+
+Run:  PYTHONPATH=src python examples/serve_cluster.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.cluster_sim import ClusterSim, SimConfig
+from repro.core.sharding import TableSpec, plan_shards
+from repro.core.versioning import (ConsistentBatchClient, Generation,
+                                   ShardReplica, rolling_update)
+from repro.data import synthetic
+from repro.launch import mesh as mesh_mod
+from repro.models import common as cm
+from repro.models import recsys as rec_mod
+
+# --- feature store: versioned, sharded, replicated -------------------------
+fs_cfg = registry.get("bili-feature-store").smoke
+keys = np.arange(1, fs_cfg.n_items + 1, dtype=np.uint64)
+rng = np.random.default_rng(0)
+feats = rng.normal(size=(fs_cfg.n_items, 8)).astype(np.float32)
+plan = plan_shards(TableSpec("item-feats", fs_cfg.n_items, 32),
+                   fs_cfg.max_shard_bytes)
+replicas = [[ShardReplica(s, r) for r in range(3)]
+            for s in range(plan.n_shards)]
+parts = plan.partition(keys)
+for s, rows in enumerate(parts):
+    for rep in replicas[s]:
+        rep.publish(Generation(1, keys[rows], feats[rows]))
+client = ConsistentBatchClient(replicas, plan.shard_of, enforce=True)
+print(f"feature store: {fs_cfg.n_items} items, {plan.n_shards} shards x3 "
+      "replicas, v1 live")
+
+# --- model: smoke DeepFM scoring batches fed by the store -------------------
+mesh = mesh_mod.make_local_mesh()
+mi = cm.MeshInfo.from_mesh(mesh)
+cfg = registry.get("deepfm").smoke
+params, _ = cm.unbox(rec_mod.recsys_init(jax.random.key(0), cfg))
+score = jax.jit(lambda p, b: rec_mod.recsys_score(p, cfg, b, mi))
+
+new_gens = [Generation(2, keys[rows], feats[rows] * 1.01) for rows in parts]
+updater = rolling_update(replicas, new_gens)
+update_done = False
+
+lat, versions_seen = [], set()
+with jax.set_mesh(mesh):
+    for req in range(60):
+        if not update_done and req >= 10:       # update starts mid-traffic
+            try:
+                next(updater)
+            except StopIteration:
+                update_done = True
+        t0 = time.perf_counter()
+        q = keys[rng.choice(len(keys), 64)]
+        found, vals, versions = client.query(q)
+        assert found.all() and len(set(versions)) == 1
+        versions_seen.add(versions[0])
+        batch = synthetic.recsys_batch(rng, cfg, 64)
+        batch["dense"][:, :8] = vals[:, :8]     # features from the store
+        probs = score(params, {k: jnp.asarray(v) for k, v in batch.items()
+                               if k != "label"})
+        jax.block_until_ready(probs)
+        lat.append((time.perf_counter() - t0) * 1e3)
+
+print(f"60 scoring batches served; versions used (never mixed within a "
+      f"batch): {sorted(versions_seen)}")
+print(f"latency p50={np.percentile(lat, 50):.2f}ms "
+      f"p99={np.percentile(lat, 99):.2f}ms; "
+      f"client re-pins during update: {client.report.repins}")
+
+# --- straggler mitigation at datacenter scale (simulated) -------------------
+sim_cfg = SimConfig(straggler_prob=0.1, seed=1)
+sim = ClusterSim(sim_cfg, protocol="paper")
+for _ in range(500):
+    sim.query_batch()
+m = sim.metrics
+print(f"cluster-sim with 10% stragglers: hedged {m.hedges} sub-queries, "
+      f"p90={m.latency_quantile(0.90) / 1e3:.1f}ms p99={m.latency_quantile(0.99) / 1e3:.1f}ms "
+      f"(straggler tail would be {sim_cfg.straggler_latency_us / 1e3:.0f}ms)")
+print("OK")

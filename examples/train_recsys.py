@@ -1,0 +1,98 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter DIN CTR model
+for a few hundred steps, checkpointing periodically and publishing touched
+embedding rows as versioned generations to the serving tier — the paper's
+real-time incremental-learning loop in miniature.
+
+Run:  PYTHONPATH=src python examples/train_recsys.py --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import synthetic
+from repro.launch import mesh as mesh_mod
+from repro.models import common as cm
+from repro.models import recsys as rec_mod
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+from repro.core.publish import DeltaPublisher
+from repro.core.versioning import Generation, ShardReplica
+from repro.core.sharding import TableSpec, plan_shards
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--publish-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default="artifacts/example_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: 5M-item × 18-dim table dominates (90M) + towers
+    cfg = dataclasses.replace(
+        registry.get("din").config,
+        item_vocab=5_000_000, cat_vocab=50_000, seq_len=50)
+    mesh = mesh_mod.make_local_mesh()
+    mi = cm.MeshInfo.from_mesh(mesh)
+    params, _ = cm.unbox(rec_mod.recsys_init(jax.random.key(0), cfg))
+    n_params = cm.count_params(params)
+    print(f"DIN with {n_params / 1e6:.1f}M parameters "
+          f"({cfg.item_vocab / 1e6:.0f}M-row item table)")
+    ocfg = opt.OptConfig(lr=0.003)
+    state = opt.init_opt_state(params, ocfg)
+    step_fn = jax.jit(ts.make_train_step(
+        lambda p, b: rec_mod.recsys_loss(p, cfg, b, mi), ocfg))
+
+    # serving tier: one shard service for the item table, 2 replicas
+    plan = plan_shards(TableSpec("item", cfg.item_vocab, cfg.embed_dim * 4),
+                       1 << 26)
+    replicas = [[ShardReplica(s, r) for r in range(2)]
+                for s in range(plan.n_shards)]
+    publisher = DeltaPublisher(plan, replicas, start_version=0)
+
+    rng = np.random.default_rng(0)
+    st = jnp.int32(0)
+    if ckpt.exists(args.ckpt_dir):
+        params, state, step0, _ = ckpt.restore(
+            args.ckpt_dir, params_like=params, opt_like=state)
+        st = jnp.int32(step0)
+        print(f"resumed from checkpoint at step {step0}")
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        for i in range(int(st), args.steps):
+            batch_np = synthetic.recsys_batch(rng, cfg, args.batch)
+            publisher.touch(batch_np["hist_items"])
+            publisher.touch(batch_np["target_item"])
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, state, st, metrics = step_fn(params, state, st, batch)
+            if (i + 1) % 20 == 0:
+                print(f"step {i + 1:4d} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"({(time.time() - t0) / (i + 1 - int(0)):.2f}s/step)")
+            if (i + 1) % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, params=params, opt_state=state,
+                          step=int(st), meta={"arch": "din-100M"},
+                          async_save=False)
+            if (i + 1) % args.publish_every == 0:
+                # incremental publish: only touched rows, one new version,
+                # rolling across replicas (serving stays consistent)
+                n = publisher.pending
+                table = np.asarray(params["item_table"])
+                v = publisher.publish(lambda rows: table[rows])
+                print(f"  published v{v}: {n} touched rows "
+                      f"-> {plan.n_shards} shards")
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
+          f"serving tier at version {publisher.version} "
+          f"({publisher.stats.rows_published} rows total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Architecture registry: 10 assigned archs (+ the paper's own feature-store
+config).  Each arch module defines CONFIG (exact public config), SMOKE
+(reduced same-family config for CPU tests) and the registry maps its four
+assigned shape cells.
+
+``--arch <id>`` everywhere resolves through ``get(arch_id)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    kind: str          # train | prefill | decode | rec_train | rec_serve |
+    #                    rec_retrieval | gnn_full | gnn_minibatch | gnn_molecule
+    dims: dict
+
+
+LM_CELLS = (
+    Cell("train_4k", "train", {"seq": 4096, "batch": 256}),
+    Cell("prefill_32k", "prefill", {"seq": 32768, "batch": 32}),
+    Cell("decode_32k", "decode", {"seq": 32768, "batch": 128}),
+    Cell("long_500k", "decode", {"seq": 524288, "batch": 1}),
+)
+
+GNN_CELLS = (
+    Cell("full_graph_sm", "gnn_full",
+         {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433, "n_classes": 7}),
+    Cell("minibatch_lg", "gnn_minibatch",
+         {"batch_nodes": 1024, "fanouts": (15, 10), "d_feat": 602,
+          "n_classes": 41, "n_nodes": 232_965, "n_edges": 114_615_892}),
+    Cell("ogb_products", "gnn_full",
+         {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100,
+          "n_classes": 47}),
+    Cell("molecule", "gnn_molecule",
+         {"n_graphs": 128, "n_nodes": 30, "n_edges": 64, "d_feat": 32,
+          "n_classes": 10}),
+)
+
+REC_CELLS = (
+    Cell("train_batch", "rec_train", {"batch": 65536}),
+    Cell("serve_p99", "rec_serve", {"batch": 512}),
+    Cell("serve_bulk", "rec_serve", {"batch": 262144}),
+    Cell("retrieval_cand", "rec_retrieval",
+         {"batch": 1, "n_candidates": 1_000_000}),
+)
+
+ARCHS = {
+    "deepseek-7b": ("repro.configs.deepseek_7b", "lm", LM_CELLS),
+    "qwen3-14b": ("repro.configs.qwen3_14b", "lm", LM_CELLS),
+    "nemotron-4-340b": ("repro.configs.nemotron_4_340b", "lm", LM_CELLS),
+    "deepseek-v3-671b": ("repro.configs.deepseek_v3_671b", "lm", LM_CELLS),
+    "qwen3-moe-235b-a22b": ("repro.configs.qwen3_moe_235b", "lm", LM_CELLS),
+    "graphsage-reddit": ("repro.configs.graphsage_reddit", "gnn", GNN_CELLS),
+    "din": ("repro.configs.din", "recsys", REC_CELLS),
+    "bst": ("repro.configs.bst", "recsys", REC_CELLS),
+    "two-tower-retrieval": ("repro.configs.two_tower_retrieval", "recsys",
+                            REC_CELLS),
+    "deepfm": ("repro.configs.deepfm", "recsys", REC_CELLS),
+    # the paper's own workload (feature-store serving; benchmarks/T4)
+    "bili-feature-store": ("repro.configs.bili_feature_store", "kv", ()),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str
+    config: Any
+    smoke: Any
+    cells: tuple
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    module, family, cells = ARCHS[arch_id]
+    mod = importlib.import_module(module)
+    return ArchSpec(arch_id=arch_id, family=family, config=mod.CONFIG,
+                    smoke=mod.SMOKE, cells=cells)
+
+
+def all_arch_ids(include_kv: bool = False) -> list[str]:
+    return [a for a, (_, fam, _) in ARCHS.items()
+            if include_kv or fam != "kv"]
+
+
+def cell_by_name(spec: ArchSpec, name: str) -> Cell:
+    for c in spec.cells:
+        if c.name == name:
+            return c
+    raise KeyError(f"{spec.arch_id} has no cell {name!r}")

@@ -1,0 +1,71 @@
+"""Single-host batch-query orchestration (paper Fig 2, query side).
+
+Composes: automatic sharding (core/sharding.py) -> per-shard NeighborHash
+tables -> batched device lookup (core/lookup.py) -> merge, with the strong-
+version pinning protocol layered on top by core/versioning.py.  The mesh-
+distributed equivalent (ICI all_to_all instead of RPC fan-out) lives in
+core/distributed.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import hashcore as hc
+from repro.core import neighborhash as nh
+from repro.core import lookup as lk
+from repro.core.sharding import ShardPlan, TableSpec, plan_shards
+
+
+@dataclasses.dataclass
+class QueryStats:
+    batches: int = 0
+    keys: int = 0
+    hits: int = 0
+    dropped: int = 0
+
+
+class BatchQueryService:
+    """One table's query service: N shards, each a NeighborHash index over
+    that shard's rows, answering merged batch queries."""
+
+    def __init__(self, keys: np.ndarray, payloads: np.ndarray, *,
+                 name: str = "table", max_shard_bytes: int = 1 << 22,
+                 variant: str = "neighborhash", load_factor: float = 0.8,
+                 plan: Optional[ShardPlan] = None):
+        keys = np.asarray(keys, dtype=np.uint64)
+        payloads = np.asarray(payloads, dtype=np.uint64)
+        spec = TableSpec(name=name, n_rows=len(keys), bytes_per_row=16)
+        self.plan = plan or plan_shards(spec, max_shard_bytes)
+        self.shards: list[nh.HashTable] = []
+        parts = self.plan.partition(keys)
+        for rows in parts:
+            self.shards.append(
+                nh.build(keys[rows], payloads[rows], variant=variant,
+                         load_factor=load_factor))
+        self.stats = QueryStats()
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
+
+    def query(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Route keys to owning shards, batch-query each shard on device,
+        merge results back into request order."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        owners = self.plan.shard_of_np(keys)
+        found = np.zeros(len(keys), dtype=bool)
+        payloads = np.zeros(len(keys), dtype=np.uint64)
+        for s in range(self.n_shards):
+            mask = owners == s
+            if not mask.any():
+                continue
+            f, p = lk.lookup_table(self.shards[s], keys[mask])
+            found[mask] = f
+            payloads[mask] = p
+        self.stats.batches += 1
+        self.stats.keys += len(keys)
+        self.stats.hits += int(found.sum())
+        return found, payloads

@@ -1,0 +1,305 @@
+"""Deterministic discrete-event simulator of the serving cluster (paper §2.2).
+
+Models the parts of the paper's architecture that have no on-chip analogue:
+replica fleets per shard, a naming service with propagation delay, rolling
+updates, stragglers, node failures, and the two client designs under test —
+naming-service-driven version discovery (baseline) vs. version metadata in the
+query protocol (the paper's).  Drives benchmarks/bench_consistency.py (Fig 10)
+and the fault-tolerance tests.
+
+Time is integer microseconds; all randomness is seeded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: int
+    seq: int
+    fn: Callable = dataclasses.field(compare=False)
+
+
+class Sim:
+    def __init__(self):
+        self.now = 0
+        self._q: list[_Event] = []
+        self._seq = 0
+
+    def at(self, t: int, fn: Callable):
+        heapq.heappush(self._q, _Event(int(t), self._seq, fn))
+        self._seq += 1
+
+    def after(self, dt: int, fn: Callable):
+        self.at(self.now + int(dt), fn)
+
+    def run_until(self, t_end: int):
+        while self._q and self._q[0].time <= t_end:
+            ev = heapq.heappop(self._q)
+            self.now = ev.time
+            ev.fn()
+        self.now = max(self.now, t_end)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_shards: int = 8
+    n_replicas: int = 3
+    retain_versions: int = 2
+    rpc_latency_us: tuple[int, int] = (200, 800)       # uniform range
+    straggler_prob: float = 0.02
+    straggler_latency_us: int = 50_000
+    hedge_deadline_us: int = 5_000                     # backup request fire
+    naming_propagation_us: int = 2_000_000             # metadata staleness
+    load_seconds_us: int = 3_000_000                   # replica reload time
+    update_interval_us: int = 60_000_000               # publish cadence
+    fail_prob_per_update: float = 0.0                  # replica crash chance
+    repair_us: int = 30_000_000                        # node replacement time
+    seed: int = 0
+
+
+class Replica:
+    def __init__(self, shard: int, idx: int, retain: int):
+        self.shard = shard
+        self.idx = idx
+        self.retain = retain
+        self.versions: list[int] = [0]
+        self.serving = True
+        self.alive = True
+
+    def publish(self, v: int):
+        self.versions.append(v)
+        self.versions = sorted(set(self.versions))[-self.retain:]
+
+    def has(self, v: int) -> bool:
+        return self.alive and self.serving and v in self.versions
+
+    @property
+    def latest(self) -> int:
+        return max(self.versions) if self.versions else -1
+
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    queries: int = 0
+    sub_queries: int = 0
+    failures: int = 0
+    mixed_version_batches: int = 0
+    consistent_batches: int = 0
+    hedges: int = 0
+    p_latencies_us: list = dataclasses.field(default_factory=list)
+    update_wall_us: int = 0
+
+    @property
+    def mixed_rate(self) -> float:
+        tot = self.mixed_version_batches + self.consistent_batches
+        return self.mixed_version_batches / tot if tot else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.p_latencies_us:
+            return 0.0
+        return float(np.quantile(np.array(self.p_latencies_us), q))
+
+
+class ClusterSim:
+    """The full fleet.  ``protocol='paper'`` pins one version per batch using
+    metadata carried in replies (strong consistency, immediate serve-after-
+    ready); ``protocol='naming'`` trusts the (stale) naming-service view —
+    each shard answers from whatever version its chosen replica has."""
+
+    def __init__(self, cfg: SimConfig, protocol: str = "paper"):
+        assert protocol in ("paper", "naming")
+        self.cfg = cfg
+        self.protocol = protocol
+        self.sim = Sim()
+        self.rng = np.random.default_rng(cfg.seed)
+        self.replicas = [[Replica(s, r, cfg.retain_versions)
+                          for r in range(cfg.n_replicas)]
+                         for s in range(cfg.n_shards)]
+        self.metrics = ClusterMetrics()
+        # the naming service's *believed* latest version per shard (stale)
+        self.naming_view = [0] * cfg.n_shards
+        self.current_version = 0
+
+    # ------------------------------------------------------------------
+    # update machinery
+    # ------------------------------------------------------------------
+    def start_rolling_update(self, version: int,
+                             on_done: Optional[Callable] = None):
+        """One replica index at a time across all shards (paper's +1/n)."""
+        t_begin = self.sim.now
+        cfg = self.cfg
+
+        def update_replica_wave(rep_idx: int):
+            if rep_idx >= cfg.n_replicas:
+                self.current_version = version
+                self.metrics.update_wall_us = self.sim.now - t_begin
+                if on_done:
+                    on_done()
+                return
+            for s in range(cfg.n_shards):
+                rep = self.replicas[s][rep_idx]
+                if not rep.alive:
+                    continue
+                rep.serving = False
+                if self.rng.random() < cfg.fail_prob_per_update:
+                    rep.alive = False       # crash during reload ...
+                    self._schedule_repair(rep)   # ... replacement provisioned
+                    continue
+
+            def finish(rep_idx=rep_idx):
+                for s in range(cfg.n_shards):
+                    rep = self.replicas[s][rep_idx]
+                    if not rep.alive:
+                        continue
+                    rep.publish(version)
+                    rep.serving = True
+                # naming service learns about it later
+                self.sim.after(cfg.naming_propagation_us,
+                               lambda: self._naming_learn(version))
+                if self.protocol == "paper":
+                    # metadata travels in the query protocol: next wave can
+                    # start as soon as replicas are ready
+                    self.sim.after(1, lambda: update_replica_wave(rep_idx + 1))
+                else:
+                    # baseline must wait for client/naming convergence before
+                    # the next wave or clients lose the version they query
+                    self.sim.after(cfg.naming_propagation_us,
+                                   lambda: update_replica_wave(rep_idx + 1))
+
+            self.sim.after(cfg.load_seconds_us, finish)
+
+        update_replica_wave(0)
+
+    def _naming_learn(self, version: int):
+        for s in range(self.cfg.n_shards):
+            self.naming_view[s] = max(self.naming_view[s], version)
+
+    def fail_replica(self, shard: int, idx: int):
+        self.replicas[shard][idx].alive = False
+
+    def _schedule_repair(self, rep: Replica):
+        """Node replacement: after repair_us a fresh replica comes up with
+        the shard's current generations (fault tolerance — without this the
+        fleet bleeds replicas under a per-update crash rate)."""
+        def revive():
+            rep.versions = sorted({self.current_version,
+                                   max(self.current_version - 1, 0)})
+            rep.alive = True
+            rep.serving = True
+        self.sim.after(self.cfg.repair_us, revive)
+
+    # ------------------------------------------------------------------
+    # query path
+    # ------------------------------------------------------------------
+    def _rpc_latency(self) -> int:
+        lo, hi = self.cfg.rpc_latency_us
+        lat = int(self.rng.integers(lo, hi))
+        if self.rng.random() < self.cfg.straggler_prob:
+            lat += self.cfg.straggler_latency_us
+        return lat
+
+    def _pick_replica(self, shard: int, need_version: Optional[int]
+                      ) -> Optional[Replica]:
+        reps = [r for r in self.replicas[shard] if r.alive and r.serving]
+        if need_version is not None:
+            reps = [r for r in reps if need_version in r.versions]
+        if not reps:
+            return None
+        return reps[int(self.rng.integers(0, len(reps)))]
+
+    def _common_version(self) -> int:
+        per_shard = []
+        for s in range(self.cfg.n_shards):
+            vs = set()
+            for r in self.replicas[s]:
+                if r.alive and r.serving:
+                    vs |= set(r.versions)
+            if not vs:
+                return -1
+            per_shard.append(vs)
+        common = set.intersection(*per_shard)
+        return max(common) if common else -1
+
+    def query_batch(self) -> tuple[bool, list[int], int]:
+        """One ranking request fanning out to all shards.
+
+        Returns (ok, versions_used_per_shard, latency_us).  Hedged requests:
+        if a sub-query exceeds hedge_deadline_us, a backup goes to another
+        replica and the faster answer wins (straggler mitigation)."""
+        m = self.metrics
+        m.queries += 1
+        versions = []
+        worst = 0
+        pin = self._common_version() if self.protocol == "paper" else None
+        for s in range(self.cfg.n_shards):
+            m.sub_queries += 1
+            if self.protocol == "paper":
+                rep = self._pick_replica(s, pin)
+                if rep is None:
+                    # NACK path: re-pin from live metadata and retry once
+                    pin = self._common_version()
+                    rep = self._pick_replica(s, pin)
+                    if rep is None:
+                        m.failures += 1
+                        return False, versions, worst
+                v = pin
+            else:
+                # baseline: ask for naming service's believed version; the
+                # replica answers from its *latest* if that is gone (this is
+                # where mixed versions leak in)
+                want = self.naming_view[s]
+                rep = self._pick_replica(s, None)
+                if rep is None:
+                    m.failures += 1
+                    return False, versions, worst
+                v = want if want in rep.versions else rep.latest
+            lat = self._rpc_latency()
+            if lat > self.cfg.hedge_deadline_us:
+                backup = self._pick_replica(s, v if self.protocol == "paper"
+                                            else None)
+                if backup is not None:
+                    m.hedges += 1
+                    lat = min(lat, self.cfg.hedge_deadline_us
+                              + self._rpc_latency())
+            worst = max(worst, lat)
+            versions.append(v)
+        if len(set(versions)) > 1:
+            m.mixed_version_batches += 1
+        else:
+            m.consistent_batches += 1
+        m.p_latencies_us.append(worst)
+        return True, versions, worst
+
+
+def run_update_experiment(update_interval_s: float, protocol: str,
+                          duration_s: float = 600.0, qps: float = 50.0,
+                          seed: int = 0, cfg: Optional[SimConfig] = None
+                          ) -> ClusterMetrics:
+    """Fig-10-style run: queries at ``qps`` while rolling updates arrive every
+    ``update_interval_s``.  Returns the metrics (mixed_rate is the headline)."""
+    cfg = cfg or SimConfig(seed=seed)
+    cfg = dataclasses.replace(
+        cfg, update_interval_us=int(update_interval_s * 1e6), seed=seed)
+    c = ClusterSim(cfg, protocol=protocol)
+    t_end = int(duration_s * 1e6)
+    v = 1
+
+    def schedule_update(version: int):
+        c.start_rolling_update(version)
+        c.sim.after(cfg.update_interval_us,
+                    lambda: schedule_update(version + 1))
+
+    c.sim.after(cfg.update_interval_us, lambda: schedule_update(v))
+    step = int(1e6 / qps)
+    t = step
+    while t < t_end:
+        c.sim.at(t, c.query_batch)
+        t += step
+    c.sim.run_until(t_end)
+    return c.metrics

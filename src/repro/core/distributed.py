@@ -1,0 +1,242 @@
+"""Mesh-distributed batch query: the paper's client->shard routing protocol
+mapped onto TPU collectives (DESIGN.md §2, last row).
+
+Two schemes, both expressed inside ``shard_map`` over a mesh axis that owns
+the table shards (one shard per device along ``axis_name``):
+
+  * ``replicated`` — queries are replicated; every device answers the keys it
+    owns and the results merge with one all-reduce.  Zero routing cost but the
+    whole query batch is processed S times.  Good for small batches / p99
+    serving.
+  * ``a2a`` — queries are sharded (data-parallel); each device buckets its
+    local queries by owning shard, exchanges them with ``all_to_all``, answers
+    locally, and routes answers back with a second ``all_to_all`` — exactly
+    the paper's batch-query fan-out with ICI links standing in for the
+    datacenter network.  Per-destination capacity is bounded; overflow is
+    *counted and returned*, never silently dropped.
+
+The same routing primitives are reused by the model embedding layer
+(models/embedding_service.py) and the MoE dispatcher (models/moe.py) — the
+paper's architecture is the dispatch substrate for both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashcore as hc
+from repro.core import neighborhash as nh
+from repro.core import lookup as lk
+
+
+# ---------------------------------------------------------------------------
+# sharded table container
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ShardedTables:
+    """S per-shard NeighborHash tables padded to a common capacity and stacked
+    on a leading shard axis, ready to be device-put with sharding
+    P(axis_name) on dim 0."""
+    n_shards: int
+    capacity: int            # per-shard bucket count (uniform)
+    max_probes: int
+    arrays: dict             # key_hi/key_lo/val_hi/val_lo: [S, capacity] u32
+    inline: bool = True
+
+    def device_arrays(self):
+        return {k: jnp.asarray(v) for k, v in self.arrays.items()}
+
+
+def build_sharded(keys: np.ndarray, payloads: np.ndarray, n_shards: int, *,
+                  load_factor: float = 0.8,
+                  variant: str = "neighborhash") -> ShardedTables:
+    keys = np.asarray(keys, dtype=np.uint64)
+    payloads = np.asarray(payloads, dtype=np.uint64)
+    hi, lo = hc.key_split_np(keys)
+    owner = (hc.hash64_np(hi, lo) % np.uint32(n_shards)).astype(np.int32)
+    counts = np.bincount(owner, minlength=n_shards)
+    cap = max(int(math.ceil(counts.max() / load_factor)), 8)
+    stacks = {k: np.zeros((n_shards, cap), dtype=np.uint32)
+              for k in ("key_hi", "key_lo", "val_hi", "val_lo")}
+    max_probes = 2
+    for s in range(n_shards):
+        rows = np.flatnonzero(owner == s)
+        t = nh.build(keys[rows], payloads[rows], variant=variant,
+                     capacity=cap)
+        for k in ("key_hi", "key_lo", "val_hi", "val_lo"):
+            stacks[k][s] = getattr(t, k)
+        max_probes = max(max_probes, t.max_probe_len() + 1)
+    # pad rows of unused capacity are already EMPTY via the builder
+    for s in range(n_shards):
+        empt = stacks["key_hi"][s] == 0
+        del empt
+    return ShardedTables(n_shards=n_shards, capacity=cap,
+                         max_probes=max_probes, arrays=stacks)
+
+
+# ---------------------------------------------------------------------------
+# routing primitives (jit-safe; used inside shard_map)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Routing:
+    """Index bookkeeping for bucketing N local queries to S destinations with
+    per-destination capacity C."""
+    dest: jnp.ndarray        # int32[N] owner of each query
+    slot_row: jnp.ndarray    # int32[N] destination row (== dest)
+    slot_col: jnp.ndarray    # int32[N] position within destination buffer
+    kept: jnp.ndarray        # bool[N]  False -> overflowed capacity
+    n_dropped: jnp.ndarray   # int32[]  overflow count (reported, not hidden)
+
+
+def route_by_owner(owner: jnp.ndarray, n_dest: int, capacity: int) -> Routing:
+    """Stable bucket-by-owner: queries keep their relative order within a
+    destination (makes the inverse mapping trivial)."""
+    n = owner.shape[0]
+    order = jnp.argsort(owner, stable=True)
+    sorted_owner = jnp.take(owner, order)
+    # position of each sorted element within its owner group
+    counts = jnp.bincount(owner, length=n_dest)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - jnp.take(starts, sorted_owner)
+    kept_sorted = pos_sorted < capacity
+    # scatter back to original query order
+    inv = jnp.zeros(n, dtype=jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    pos = jnp.take(pos_sorted, inv)
+    kept = jnp.take(kept_sorted, inv)
+    return Routing(
+        dest=owner.astype(jnp.int32),
+        slot_row=owner.astype(jnp.int32),
+        slot_col=jnp.where(kept, pos, 0).astype(jnp.int32),
+        kept=kept,
+        n_dropped=(n - kept.sum()).astype(jnp.int32),
+    )
+
+
+def scatter_to_buffers(r: Routing, xs: list[jnp.ndarray], n_dest: int,
+                       capacity: int, fill=0) -> list[jnp.ndarray]:
+    """Place each query's fields into [n_dest, capacity] send buffers."""
+    out = []
+    for x in xs:
+        buf = jnp.full((n_dest, capacity) + x.shape[1:], fill, dtype=x.dtype)
+        buf = buf.at[r.slot_row, r.slot_col].set(
+            jnp.where(_bc(r.kept, x), x, jnp.zeros((), x.dtype)))
+        out.append(buf)
+    return out
+
+
+def gather_from_buffers(r: Routing, bufs: list[jnp.ndarray]
+                        ) -> list[jnp.ndarray]:
+    """Inverse of scatter_to_buffers: read each query's answer back."""
+    return [b[r.slot_row, r.slot_col] for b in bufs]
+
+
+def _bc(mask, x):
+    return mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# shard_map bodies
+# ---------------------------------------------------------------------------
+def lookup_replicated_body(tables: dict, q_hi, q_lo, *, axis_name: str,
+                           n_shards: int, capacity: int, max_probes: int):
+    """Inside shard_map: queries replicated, each device answers its keys,
+    one psum merges.  tables arrays arrive as [1, capacity] local slices."""
+    my = jax.lax.axis_index(axis_name)
+    local = {k: v[0] for k, v in tables.items()}
+    owner = (hc.hash64_jnp(q_hi, q_lo) % jnp.uint32(n_shards)).astype(jnp.int32)
+    mine = owner == my
+    found, p_hi, p_lo = lk.lookup(
+        local["key_hi"], local["key_lo"], local["val_hi"], local["val_lo"],
+        None, q_hi, q_lo, home_capacity=capacity, inline=True,
+        host_check=True, max_probes=max_probes)
+    found = found & mine
+    p_hi = jnp.where(found, p_hi, 0)
+    p_lo = jnp.where(found, p_lo, 0)
+    found = jax.lax.psum(found.astype(jnp.int32), axis_name) > 0
+    p_hi = jax.lax.psum(p_hi, axis_name)
+    p_lo = jax.lax.psum(p_lo, axis_name)
+    return found, p_hi, p_lo
+
+
+def lookup_a2a_body(tables: dict, q_hi, q_lo, *, axis_name: str,
+                    n_shards: int, capacity: int, max_probes: int,
+                    capacity_factor: float = 2.0):
+    """Inside shard_map: the paper's routed batch query.
+
+    q_hi/q_lo are this device's local query slice [n_loc].  Returns
+    (found, p_hi, p_lo, n_dropped) for the local slice."""
+    n_loc = q_hi.shape[0]
+    local = {k: v[0] for k, v in tables.items()}
+    owner = (hc.hash64_jnp(q_hi, q_lo) % jnp.uint32(n_shards)).astype(jnp.int32)
+    cap = max(int(math.ceil(n_loc / n_shards * capacity_factor)), 1)
+    r = route_by_owner(owner, n_shards, cap)
+    send_hi, send_lo, send_valid = scatter_to_buffers(
+        r, [q_hi, q_lo, r.kept.astype(jnp.uint32)], n_shards, cap)
+    # ---- exchange: row j of recv = what device j sent me -------------------
+    recv_hi = jax.lax.all_to_all(send_hi, axis_name, 0, 0, tiled=True)
+    recv_lo = jax.lax.all_to_all(send_lo, axis_name, 0, 0, tiled=True)
+    recv_valid = jax.lax.all_to_all(send_valid, axis_name, 0, 0, tiled=True)
+    flat_hi = recv_hi.reshape(-1)
+    flat_lo = recv_lo.reshape(-1)
+    found, p_hi, p_lo = lk.lookup(
+        local["key_hi"], local["key_lo"], local["val_hi"], local["val_lo"],
+        None, flat_hi, flat_lo, home_capacity=capacity, inline=True,
+        host_check=True, max_probes=max_probes)
+    found = found & (recv_valid.reshape(-1) > 0)
+    # ---- route answers back ------------------------------------------------
+    ans_f = jax.lax.all_to_all(
+        found.reshape(n_shards, cap).astype(jnp.uint32), axis_name, 0, 0,
+        tiled=True)
+    ans_hi = jax.lax.all_to_all(p_hi.reshape(n_shards, cap), axis_name, 0, 0,
+                                tiled=True)
+    ans_lo = jax.lax.all_to_all(p_lo.reshape(n_shards, cap), axis_name, 0, 0,
+                                tiled=True)
+    f, ph, pl = gather_from_buffers(r, [ans_f, ans_hi, ans_lo])
+    f = (f > 0) & r.kept
+    # n_dropped as [1] so per-shard counts concatenate under out_specs
+    return f, jnp.where(f, ph, 0), jnp.where(f, pl, 0), r.n_dropped[None]
+
+
+# ---------------------------------------------------------------------------
+# top-level drivers
+# ---------------------------------------------------------------------------
+def make_distributed_lookup(mesh, st: ShardedTables, *, axis_name: str,
+                            scheme: str = "a2a", capacity_factor: float = 2.0):
+    """Builds a jitted (tables, q_hi, q_lo) -> results function over ``mesh``.
+
+    ``st.n_shards`` must equal the size of ``axis_name`` in the mesh (one
+    shard per device along that axis; multi-shard-per-device stacks fold into
+    capacity)."""
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    axis_size = mesh.shape[axis_name]
+    if st.n_shards != axis_size:
+        raise ValueError(f"n_shards={st.n_shards} != mesh[{axis_name}]="
+                         f"{axis_size}")
+    common = dict(axis_name=axis_name, n_shards=st.n_shards,
+                  capacity=st.capacity, max_probes=st.max_probes)
+    table_spec = {k: P(axis_name, None) for k in st.arrays}
+
+    if scheme == "replicated":
+        body = lambda t, qh, ql: lookup_replicated_body(t, qh, ql, **common)
+        in_specs = (table_spec, P(), P())
+        out_specs = (P(), P(), P())
+    elif scheme == "a2a":
+        body = lambda t, qh, ql: lookup_a2a_body(
+            t, qh, ql, capacity_factor=capacity_factor, **common)
+        in_specs = (table_spec, P(axis_name), P(axis_name))
+        out_specs = (P(axis_name), P(axis_name), P(axis_name), P(axis_name))
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    return jax.jit(fn)

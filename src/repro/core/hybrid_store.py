@@ -1,0 +1,245 @@
+"""Hybrid hot/cold key-value store on top of NeighborHash (paper §2.1.2).
+
+Layout is the paper's Figure 6, bit-faithful:
+
+  - the *index* (key -> 52-bit payload) always lives in memory as a
+    NeighborHash table;
+  - payload bit 51 is the tier flag: 0 = hot (in-memory value region),
+    1 = cold (NVMe value file);
+  - payload bits 50..0 are the slot index in the owning tier;
+  - hot slots carry LRU metadata, scanned by an asynchronous eviction pass
+    (here: an explicit ``maintain()`` tick, optionally driven by a background
+    thread) — queries never take a write lock, matching the paper's
+    "storing both hot and cold keys in memory reduces concurrent read/write
+    overhead ... compared to traditional LRU";
+  - a cold miss performs exactly one NVMe IO, then (optionally) admits the
+    value to the hot tier.
+
+The cold tier is a real file on disk accessed through np.memmap — the closest
+honest stand-in for NVMe available in this container; tiering.DeviceCostModel
+translates observed IO counts into modeled NVMe/DDR time for benchmarks.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import hashcore as hc
+from repro.core import neighborhash as nh
+from repro.core.tiering import TierStats
+
+TIER_BIT = 51
+TIER_MASK = 1 << TIER_BIT
+SLOT_MASK = TIER_MASK - 1
+
+
+class HybridKVStore:
+    """Fixed-width-value KV store with a NeighborHash index and two value
+    tiers.  Values are byte records of ``value_bytes`` each (an embedding row,
+    a packed feature blob, ...)."""
+
+    def __init__(
+        self,
+        keys: np.ndarray,
+        values: np.ndarray,             # uint8 [n, value_bytes]
+        *,
+        hot_fraction: float = 0.1,
+        hot_keys: Optional[np.ndarray] = None,
+        load_factor: float = 0.8,
+        cold_dir: Optional[str] = None,
+        variant: str = "neighborhash",
+        buckets_per_line: int = hc.CPU_BUCKETS_PER_LINE,
+    ):
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values)
+        if values.dtype != np.uint8 or values.ndim != 2:
+            raise ValueError("values must be uint8 [n, value_bytes]")
+        if len(keys) != len(values):
+            raise ValueError("keys/values length mismatch")
+        self.n = len(keys)
+        self.value_bytes = values.shape[1]
+        self.stats = TierStats()
+
+        # --- tier assignment: requested hot set, else the first fraction ---
+        if hot_keys is not None:
+            hot_mask = np.isin(keys, np.asarray(hot_keys, dtype=np.uint64))
+        else:
+            hot_mask = np.zeros(self.n, dtype=bool)
+            hot_mask[: int(self.n * hot_fraction)] = True
+        n_hot = int(hot_mask.sum())
+        self.hot_capacity = max(n_hot, 1)
+
+        # --- hot tier: value region + LRU metadata ---
+        self._hot_values = np.zeros((self.hot_capacity, self.value_bytes),
+                                    dtype=np.uint8)
+        self._hot_last_access = np.zeros(self.hot_capacity, dtype=np.int64)
+        self._hot_key = np.full(self.hot_capacity, hc.EMPTY_KEY,
+                                dtype=np.uint64)     # for eviction writeback
+        self._hot_free: list[int] = []
+        self._clock = 0
+
+        # --- cold tier: file-backed memmap (the "NVMe file") ---
+        self._cold_dir = cold_dir or tempfile.mkdtemp(prefix="neighborkv_")
+        self._cold_path = os.path.join(self._cold_dir, "cold.bin")
+        cold_rows = max(self.n, 1)
+        self._cold = np.memmap(self._cold_path, dtype=np.uint8, mode="w+",
+                               shape=(cold_rows, self.value_bytes))
+        # every record has a cold home slot (hot tier is a cache, like the
+        # paper: eviction just flips the tier bit; no cold write needed if the
+        # cold copy is current)
+        self._cold[:] = values
+        self._cold.flush()
+
+        # --- index: payload = tier bit + slot ---
+        payloads = np.empty(self.n, dtype=np.uint64)
+        hot_slot = 0
+        for i in range(self.n):
+            if hot_mask[i]:
+                self._hot_values[hot_slot] = values[i]
+                self._hot_key[hot_slot] = keys[i]
+                payloads[i] = np.uint64(hot_slot)
+                hot_slot += 1
+            else:
+                payloads[i] = np.uint64(TIER_MASK | i)
+        self._cold_slot_of_key_order = {int(k): i for i, k in enumerate(keys)}
+        self.index = nh.build(keys, payloads, variant=variant,
+                              load_factor=load_factor,
+                              buckets_per_line=buckets_per_line)
+        self._lock = threading.Lock()   # update-path only; reads lock-free
+        self._evict_thread: Optional[threading.Thread] = None
+        self._evict_stop = threading.Event()
+
+    # ------------------------------------------------------------------
+    # read path
+    # ------------------------------------------------------------------
+    def get_batch(self, keys: Sequence[int], admit: bool = True
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """-> (found bool[n], values uint8[n, value_bytes]).
+
+        One index probe per key; hot hits gather from memory; cold misses do
+        one memmap IO each and are optionally admitted to the hot tier."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        out = np.zeros((len(keys), self.value_bytes), dtype=np.uint8)
+        found = np.zeros(len(keys), dtype=bool)
+        self._clock += 1
+        cold_to_admit: list[tuple[int, int]] = []   # (key, cold_slot)
+        for i, k in enumerate(keys):
+            ok, payload, _, _ = self.index.probe_trace(int(k))
+            self.stats.lookups += 1
+            if not ok:
+                self.stats.not_found += 1
+                continue
+            found[i] = True
+            if payload & TIER_MASK:                 # cold
+                slot = int(payload & np.uint64(SLOT_MASK))
+                out[i] = self._cold[slot]           # the one NVMe IO
+                self.stats.cold_misses += 1
+                self.stats.cold_bytes_read += self.value_bytes
+                if admit:
+                    cold_to_admit.append((int(k), slot))
+            else:                                   # hot
+                slot = int(payload)
+                out[i] = self._hot_values[slot]
+                self._hot_last_access[slot] = self._clock
+                self.stats.hot_hits += 1
+                self.stats.hot_bytes_read += self.value_bytes
+        for k, slot in cold_to_admit:
+            self._admit(k, slot)
+        return found, out
+
+    # ------------------------------------------------------------------
+    # tier movement (update path — serialized, like the Update Subsystem)
+    # ------------------------------------------------------------------
+    def _admit(self, key: int, cold_slot: int):
+        with self._lock:
+            if not self._hot_free:
+                return          # hot tier full: eviction pass will make room
+            hot_slot = self._hot_free.pop()
+            self._hot_values[hot_slot] = self._cold[cold_slot]
+            self._hot_key[hot_slot] = key
+            self._hot_last_access[hot_slot] = self._clock
+            self._set_payload(key, np.uint64(hot_slot))
+            self.stats.admissions += 1
+
+    def maintain(self, target_free_fraction: float = 0.05) -> int:
+        """One asynchronous-eviction pass: scan LRU metadata of the hot tier
+        and demote the stalest entries until ``target_free_fraction`` of hot
+        slots are free.  Mirrors the paper's async scanning thread; queries
+        racing with this pass still resolve correctly (they read either tier's
+        consistent copy — the cold home slot always holds current data)."""
+        with self._lock:
+            want_free = int(self.hot_capacity * target_free_fraction)
+            need = want_free - len(self._hot_free)
+            if need <= 0:
+                return 0
+            occupied = np.flatnonzero(self._hot_key != np.uint64(hc.EMPTY_KEY))
+            if len(occupied) == 0:
+                return 0
+            order = occupied[np.argsort(self._hot_last_access[occupied])]
+            evicted = 0
+            for slot in order[:need]:
+                slot = int(slot)
+                key = int(self._hot_key[slot])
+                cold_slot = self._cold_slot_of_key_order[key]
+                # flip tier bit back to cold (cold copy is authoritative)
+                self._set_payload(key, np.uint64(TIER_MASK | cold_slot))
+                self._hot_key[slot] = hc.EMPTY_KEY
+                self._hot_free.append(slot)
+                evicted += 1
+                self.stats.evictions += 1
+            return evicted
+
+    def start_async_eviction(self, period_s: float = 0.01):
+        def loop():
+            while not self._evict_stop.wait(period_s):
+                self.maintain()
+        self._evict_thread = threading.Thread(target=loop, daemon=True)
+        self._evict_thread.start()
+
+    def stop_async_eviction(self):
+        if self._evict_thread is not None:
+            self._evict_stop.set()
+            self._evict_thread.join()
+            self._evict_thread = None
+            self._evict_stop.clear()
+
+    # ------------------------------------------------------------------
+    def _set_payload(self, key: int, payload: np.uint64):
+        ok, _, visited, _ = self.index.probe_trace(key)
+        if not ok:
+            raise KeyError(key)
+        idx = visited[-1]
+        _, code = hc.unpack_value_int(int(self.index.val_hi[idx]),
+                                      int(self.index.val_lo[idx]))
+        vhi, vlo = hc.pack_value_int(int(payload),
+                                     code if self.index.inline else 0)
+        self.index.val_hi[idx] = vhi
+        self.index.val_lo[idx] = vlo
+
+    def update_value(self, key: int, value: np.ndarray):
+        """Update-path write: cold home slot is rewritten; a hot copy, if
+        present, is refreshed in place (single-writer Update Subsystem)."""
+        value = np.asarray(value, dtype=np.uint8)
+        with self._lock:
+            ok, payload, _, _ = self.index.probe_trace(int(key))
+            if not ok:
+                raise KeyError(key)
+            cold_slot = self._cold_slot_of_key_order[int(key)]
+            self._cold[cold_slot] = value
+            if not (payload & TIER_MASK):
+                self._hot_values[int(payload)] = value
+
+    def memory_bytes(self) -> dict:
+        idx_bytes = self.index.capacity * 16
+        return {
+            "index": idx_bytes,
+            "hot_values": self._hot_values.nbytes,
+            "hot_metadata": self._hot_last_access.nbytes + self._hot_key.nbytes,
+            "resident_total": idx_bytes + self._hot_values.nbytes
+            + self._hot_last_access.nbytes + self._hot_key.nbytes,
+            "cold_file": self.n * self.value_bytes,
+        }

@@ -1,0 +1,221 @@
+"""Device-side batch lookup for the NeighborHash family (pure JAX).
+
+This is the paper's §2.1.1 "Lookup Acceleration" adapted to TPU: instead of
+x86 SIMD interleaved multi-vectorizing (IMV), the *entire query batch* advances
+one probe step per `while_loop` iteration under an active-lane mask — the VPU
+analogue of keeping many interleaved probe state machines in flight.  The AMAC
+analogue (explicit async-copy chaining) lives in kernels/neighbor_lookup.py.
+
+All functions are jit-compatible; table arrays are ordinary device arrays so
+the same code paths run under pjit/shard_map for the distributed subsystem
+(core/distributed.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashcore as hc
+from repro.core.neighborhash import HashTable
+
+
+def _take(arr, idx):
+    return jnp.take(arr, idx, axis=0, mode="clip")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("home_capacity", "inline", "host_check", "max_probes"),
+)
+def lookup(
+    key_hi_t: jnp.ndarray,
+    key_lo_t: jnp.ndarray,
+    val_hi_t: jnp.ndarray,
+    val_lo_t: jnp.ndarray,
+    next_idx_t: Optional[jnp.ndarray],
+    q_hi: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    *,
+    home_capacity: int,
+    inline: bool,
+    host_check: bool,
+    max_probes: int,
+):
+    """Batched probe over a built table.
+
+    Returns (found bool[N], payload_hi uint32[N] (20 bits), payload_lo
+    uint32[N]).  ``max_probes`` is a static safety bound (the builder's max
+    chain length).
+    """
+    q_hi = q_hi.astype(jnp.uint32)
+    q_lo = q_lo.astype(jnp.uint32)
+    home = hc.bucket_of_jnp(q_hi, q_lo, home_capacity)
+
+    khi = _take(key_hi_t, home)
+    klo = _take(key_lo_t, home)
+    vhi = _take(val_hi_t, home)
+    vlo = _take(val_lo_t, home)
+
+    empty = (khi == jnp.uint32(hc.EMPTY_HI)) & (klo == jnp.uint32(hc.EMPTY_LO))
+    hit = (khi == q_hi) & (klo == q_lo) & ~empty
+    if host_check:
+        rooted = ~empty & (hc.bucket_of_jnp(khi, klo, home_capacity) == home)
+    else:
+        rooted = ~empty
+
+    p_hi = jnp.where(hit, vhi & jnp.uint32(hc.PAYLOAD_HI_MASK), jnp.uint32(0))
+    p_lo = jnp.where(hit, vlo, jnp.uint32(0))
+    found = hit
+    active = rooted & ~hit
+
+    def cond(state):
+        step, active, *_ = state
+        return jnp.logical_and(step < max_probes, jnp.any(active))
+
+    def body(state):
+        step, active, idx, vhi_cur, found, p_hi, p_lo = state
+        if inline:
+            off = hc.decode_offset_jnp(vhi_cur)
+            has_next = off != 0
+            nxt = idx + off
+        else:
+            nxt = _take(next_idx_t, idx)
+            has_next = nxt >= 0
+        active = active & has_next
+        idx = jnp.where(active, nxt, idx)
+        khi = _take(key_hi_t, idx)
+        klo = _take(key_lo_t, idx)
+        vhi_new = _take(val_hi_t, idx)
+        vlo_new = _take(val_lo_t, idx)
+        hit = active & (khi == q_hi) & (klo == q_lo)
+        found = found | hit
+        p_hi = jnp.where(hit, vhi_new & jnp.uint32(hc.PAYLOAD_HI_MASK), p_hi)
+        p_lo = jnp.where(hit, vlo_new, p_lo)
+        active = active & ~hit
+        return step + 1, active, idx, vhi_new, found, p_hi, p_lo
+
+    state = (jnp.int32(0), active, home, vhi, found, p_hi, p_lo)
+    state = jax.lax.while_loop(cond, body, state)
+    _, _, _, _, found, p_hi, p_lo = state
+    return found, p_hi, p_lo
+
+
+def lookup_table(table: HashTable, queries: np.ndarray):
+    """Convenience host API: uint64 queries -> (found, payload uint64)."""
+    q_hi, q_lo = hc.key_split_np(np.asarray(queries, dtype=np.uint64))
+    arrs = table.device_arrays()
+    found, p_hi, p_lo = lookup(
+        jnp.asarray(arrs["key_hi"]), jnp.asarray(arrs["key_lo"]),
+        jnp.asarray(arrs["val_hi"]), jnp.asarray(arrs["val_lo"]),
+        jnp.asarray(arrs["next_idx"]) if "next_idx" in arrs else None,
+        jnp.asarray(q_hi), jnp.asarray(q_lo),
+        home_capacity=table.home_capacity,
+        inline=table.inline,
+        host_check=table.variant not in ("linear", "coalesced"),
+        max_probes=max(table.max_probe_len() + 1, 2),
+    )
+    found = np.asarray(found)
+    payload = (np.asarray(p_hi, dtype=np.uint64) << np.uint64(32)) | \
+        np.asarray(p_lo, dtype=np.uint64)
+    return found, payload
+
+
+def make_lookup_fn(table: HashTable):
+    """Returns a jit-ready fn (arrays dict, q_hi, q_lo) -> (found, p_hi, p_lo)
+    with the table's static config baked in — for pjit/shard_map use where the
+    caller manages device placement of the table arrays."""
+    host_check = table.variant not in ("linear", "coalesced")
+    max_probes = max(table.max_probe_len() + 1, 2)
+    home_capacity = table.home_capacity
+    inline = table.inline
+
+    def fn(arrays: dict, q_hi, q_lo):
+        return lookup(
+            arrays["key_hi"], arrays["key_lo"], arrays["val_hi"],
+            arrays["val_lo"], arrays.get("next_idx"),
+            q_hi, q_lo,
+            home_capacity=home_capacity, inline=inline,
+            host_check=host_check, max_probes=max_probes,
+        )
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# linear-probing lookup (T1 baseline — probe sequence, not chains)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("capacity", "max_probes"))
+def lookup_linear(key_hi_t, key_lo_t, val_hi_t, val_lo_t, q_hi, q_lo, *,
+                  capacity: int, max_probes: int):
+    q_hi = q_hi.astype(jnp.uint32)
+    q_lo = q_lo.astype(jnp.uint32)
+    idx = hc.bucket_of_jnp(q_hi, q_lo, capacity)
+
+    def step_load(idx):
+        khi = _take(key_hi_t, idx)
+        klo = _take(key_lo_t, idx)
+        vhi = _take(val_hi_t, idx)
+        vlo = _take(val_lo_t, idx)
+        return khi, klo, vhi, vlo
+
+    khi, klo, vhi, vlo = step_load(idx)
+    empty = (khi == jnp.uint32(hc.EMPTY_HI)) & (klo == jnp.uint32(hc.EMPTY_LO))
+    hit = (khi == q_hi) & (klo == q_lo) & ~empty
+    found = hit
+    p_hi = jnp.where(hit, vhi & jnp.uint32(hc.PAYLOAD_HI_MASK), jnp.uint32(0))
+    p_lo = jnp.where(hit, vlo, jnp.uint32(0))
+    active = ~empty & ~hit
+
+    def cond(state):
+        step, active, *_ = state
+        return jnp.logical_and(step < max_probes, jnp.any(active))
+
+    def body(state):
+        step, active, idx, found, p_hi, p_lo = state
+        idx = jnp.where(active, (idx + 1) % capacity, idx)
+        khi, klo, vhi, vlo = step_load(idx)
+        empty = (khi == jnp.uint32(hc.EMPTY_HI)) & \
+            (klo == jnp.uint32(hc.EMPTY_LO))
+        hit = active & (khi == q_hi) & (klo == q_lo) & ~empty
+        found = found | hit
+        p_hi = jnp.where(hit, vhi & jnp.uint32(hc.PAYLOAD_HI_MASK), p_hi)
+        p_lo = jnp.where(hit, vlo, p_lo)
+        active = active & ~hit & ~empty
+        return step + 1, active, idx, found, p_hi, p_lo
+
+    state = (jnp.int32(0), active, idx, found, p_hi, p_lo)
+    _, _, _, found, p_hi, p_lo = jax.lax.while_loop(cond, body, state)
+    return found, p_hi, p_lo
+
+
+# ---------------------------------------------------------------------------
+# RA — the paper's "random access" throughput ceiling: hash + one gather.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def random_access(val_hi_t, val_lo_t, q_hi, q_lo, *, capacity: int):
+    idx = hc.bucket_of_jnp(q_hi.astype(jnp.uint32), q_lo.astype(jnp.uint32),
+                           capacity)
+    return _take(val_hi_t, idx), _take(val_lo_t, idx)
+
+
+# ---------------------------------------------------------------------------
+# sequential (scalar-emulation) lookup — the "no IMV" baseline for Fig 9:
+# one query resolved at a time via lax.map, no inter-query parallelism.
+# ---------------------------------------------------------------------------
+def lookup_sequential(key_hi_t, key_lo_t, val_hi_t, val_lo_t, next_idx_t,
+                      q_hi, q_lo, *, home_capacity: int, inline: bool,
+                      host_check: bool, max_probes: int):
+    def one(q):
+        qh, ql = q
+        f, ph, pl = lookup(
+            key_hi_t, key_lo_t, val_hi_t, val_lo_t, next_idx_t,
+            qh[None], ql[None],
+            home_capacity=home_capacity, inline=inline,
+            host_check=host_check, max_probes=max_probes)
+        return f[0], ph[0], pl[0]
+
+    return jax.lax.map(one, (q_hi, q_lo))

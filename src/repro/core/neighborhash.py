@@ -1,0 +1,570 @@
+"""Host-side builders for NeighborHash and its ablation family (paper §2.1).
+
+The Update Subsystem (paper Fig 2) builds/compacts tables on the host; the hot
+batch-lookup path runs on device (core/lookup.py, kernels/neighbor_lookup.py).
+Insertion is deliberately allowed to be expensive — "query requests dominate
+the workload of recommendation systems" (§2.1.1).
+
+Variants (paper Table 3 ablation + Table 1 baselines):
+
+    linear           classic linear probing (no chains)            [T1 baseline]
+    coalesced        classic coalesced hashing with static cellar  [T1/T3]
+    perfect_cellar   + lodger relocation (dynamic cellar)          [T3]
+    linear_lodger    lodger relocation + unidirectional free-slot
+                     search (the paper's "linear probing with
+                     Lodger Relocation", APCL 1.24)                [T3 text]
+    neighbor_probing + cacheline-aware bidirectional probing,
+                     offsets in a side array                       [T3]
+    neighborhash     + inline 12-bit offsets in the value word     [the paper]
+
+All chained variants with lodger relocation share the invariant that every
+chain is "home-pure": each chain contains exactly the records whose hash-home
+is the chain head's bucket.  Classic coalesced hashing does not have this
+invariant (chains coalesce), which is exactly why its APCL is worst.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import hashcore as hc
+
+VARIANTS = (
+    "linear",
+    "coalesced",
+    "perfect_cellar",
+    "linear_lodger",
+    "neighbor_probing",
+    "neighborhash",
+)
+
+_CHAINED = {"coalesced", "perfect_cellar", "linear_lodger", "neighbor_probing",
+            "neighborhash"}
+_RELOCATING = {"perfect_cellar", "linear_lodger", "neighbor_probing",
+               "neighborhash"}
+
+
+class BuildError(RuntimeError):
+    """Raised when a variant cannot place a record (e.g. no free bucket within
+    the 12-bit offset range for the inline variant).  Callers grow capacity."""
+
+
+@dataclasses.dataclass
+class BuildStats:
+    n: int = 0
+    capacity: int = 0
+    load_factor: float = 0.0
+    max_chain_len: int = 1
+    relocations: int = 0
+    inserts: int = 0
+    updates: int = 0
+    build_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class HashTable:
+    """A built table.  uint32 SoA layout (see hashcore docstring)."""
+
+    variant: str
+    capacity: int
+    buckets_per_line: int
+    key_hi: np.ndarray          # uint32[capacity]
+    key_lo: np.ndarray          # uint32[capacity]
+    val_hi: np.ndarray          # uint32[capacity]  (inline offset for neighborhash)
+    val_lo: np.ndarray          # uint32[capacity]
+    next_idx: Optional[np.ndarray]   # int32[capacity], -1 END; None if inline
+    home_capacity: int          # hash range (== capacity except coalesced)
+    stats: BuildStats
+
+    # ------------------------------------------------------------------
+    @property
+    def inline(self) -> bool:
+        return self.next_idx is None
+
+    def device_arrays(self) -> dict:
+        """Arrays the device lookup consumes (host numpy; caller puts them)."""
+        out = {
+            "key_hi": self.key_hi,
+            "key_lo": self.key_lo,
+            "val_hi": self.val_hi,
+            "val_lo": self.val_lo,
+        }
+        if self.next_idx is not None:
+            out["next_idx"] = self.next_idx
+        return out
+
+    # ------------------------------------------------------------------
+    # host-side reference lookup + exact probe accounting
+    # ------------------------------------------------------------------
+    def probe_trace(self, key: int) -> tuple[bool, int, list[int], list[int]]:
+        """Returns (found, payload, visited bucket indices, next-pointer reads)
+        for one key.  ``next_reads`` lists bucket indices whose chain pointer
+        had to be consulted — relevant for APCL when pointers live in a
+        separate offset array (the paper's NeighborProbing ablation)."""
+        hi, lo = hc.key_split_int(int(key))
+        j = hc.bucket_of_int(hi, lo, self.home_capacity)
+        visited = [j]
+        next_reads: list[int] = []
+        if self.variant == "linear":
+            idx = j
+            for _ in range(self.capacity):
+                khi, klo = int(self.key_hi[idx]), int(self.key_lo[idx])
+                if khi == hc.EMPTY_HI and klo == hc.EMPTY_LO:
+                    return False, 0, visited, next_reads
+                if khi == hi and klo == lo:
+                    payload, _ = hc.unpack_value_int(int(self.val_hi[idx]),
+                                                     int(self.val_lo[idx]))
+                    return True, payload, visited, next_reads
+                idx = (idx + 1) % self.capacity
+                visited.append(idx)
+            return False, 0, visited, next_reads
+
+        # chained variants
+        khi, klo = int(self.key_hi[j]), int(self.key_lo[j])
+        if khi == hc.EMPTY_HI and klo == hc.EMPTY_LO:
+            return False, 0, visited, next_reads
+        if self.variant in _RELOCATING:
+            # home-pure chains: if the resident is a lodger there is no chain
+            # rooted here.
+            if hc.bucket_of_int(khi, klo, self.home_capacity) != j:
+                return False, 0, visited, next_reads
+        idx = j
+        for _ in range(self.capacity + 1):
+            khi, klo = int(self.key_hi[idx]), int(self.key_lo[idx])
+            if khi == hi and klo == lo:
+                payload, _ = hc.unpack_value_int(int(self.val_hi[idx]),
+                                                 int(self.val_lo[idx]))
+                return True, payload, visited, next_reads
+            next_reads.append(idx)
+            nxt = self._next_of(idx)
+            if nxt < 0:
+                return False, 0, visited, next_reads
+            idx = nxt
+            visited.append(idx)
+        raise RuntimeError("cycle detected in chain")  # pragma: no cover
+
+    def _next_of(self, idx: int) -> int:
+        if self.next_idx is not None:
+            return int(self.next_idx[idx])
+        off = hc.decode_offset_int(
+            (int(self.val_hi[idx]) >> hc.PAYLOAD_HI_BITS) & 0xFFF)
+        return idx + off if off != 0 else -1
+
+    def lookup_host(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        found = np.zeros(len(keys), dtype=bool)
+        payloads = np.zeros(len(keys), dtype=np.uint64)
+        for i, k in enumerate(keys):
+            f, p, _, _ = self.probe_trace(int(k))
+            found[i] = f
+            payloads[i] = p
+        return found, payloads
+
+    def apcl(self, keys: np.ndarray, buckets_per_line: Optional[int] = None,
+             separate_offset_array: bool = False) -> float:
+        """Average Probing Cache Lines over the given query keys (paper §3.1).
+
+        Counts *distinct* lines touched per query, exactly (not sampled).
+        ``separate_offset_array=True`` models the paper's NeighborProbing
+        ablation where chain offsets live in a side int32 array: every
+        next-pointer read charges a line of that array (16 int32 per 64 B
+        line, scaled to ``buckets_per_line``)."""
+        bpl = buckets_per_line or self.buckets_per_line
+        # bytes per line = bpl * 16 (16-byte buckets); int32 entries per line:
+        off_per_line = bpl * 4
+        total = 0
+        for k in keys:
+            _, _, visited, next_reads = self.probe_trace(int(k))
+            lines = {v // bpl for v in visited}
+            if separate_offset_array and not self.inline:
+                lines |= {("off", r // off_per_line) for r in next_reads}
+            total += len(lines)
+        return total / max(len(keys), 1)
+
+    def max_probe_len(self) -> int:
+        return self.stats.max_chain_len
+
+
+# ---------------------------------------------------------------------------
+# builder
+# ---------------------------------------------------------------------------
+def build(
+    keys: np.ndarray,
+    payloads: np.ndarray,
+    *,
+    variant: str = "neighborhash",
+    load_factor: float = 0.8,
+    capacity: Optional[int] = None,
+    buckets_per_line: int = hc.CPU_BUCKETS_PER_LINE,
+    cellar_fraction: float = 0.14,
+) -> HashTable:
+    """Build a table of the given variant from unique uint64 keys + ≤52-bit
+    payloads.  ``capacity`` overrides ``load_factor`` sizing when given."""
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS}")
+    keys = np.asarray(keys, dtype=np.uint64)
+    payloads = np.asarray(payloads, dtype=np.uint64)
+    if keys.shape != payloads.shape or keys.ndim != 1:
+        raise ValueError("keys/payloads must be equal-length 1-D arrays")
+    n = len(keys)
+    if capacity is None:
+        capacity = max(int(np.ceil(n / load_factor)), 8)
+    if n > capacity:
+        raise ValueError("more keys than capacity")
+    if np.any(payloads > np.uint64(hc.PAYLOAD_MASK)):
+        raise ValueError("payload exceeds 52 bits")
+    if np.any(keys == np.uint64(hc.EMPTY_KEY)):
+        raise ValueError("EMPTY_KEY (2^64-1) is reserved")
+
+    t0 = time.perf_counter()
+    b = _Builder(variant, capacity, buckets_per_line, cellar_fraction)
+    key_hi, key_lo = hc.key_split_np(keys)
+    homes = hc.bucket_of_np(key_hi, key_lo, b.home_capacity)
+    # Faithful to the paper's workload: records arrive in stream order (the
+    # Update Subsystem applies them incrementally), NOT grouped by home —
+    # grouping would artificially pack chains into single cachelines and
+    # understate APCL.
+    for i in range(n):
+        b.insert(int(key_hi[i]), int(key_lo[i]), int(payloads[i]), int(homes[i]))
+    table = b.finish()
+    table.stats.build_seconds = time.perf_counter() - t0
+    return table
+
+
+class _Builder:
+    def __init__(self, variant: str, capacity: int, buckets_per_line: int,
+                 cellar_fraction: float):
+        self.variant = variant
+        self.capacity = capacity
+        self.bpl = buckets_per_line
+        if variant == "coalesced":
+            # classic cellar: hash range excludes the cellar tail region
+            self.home_capacity = max(int(capacity * (1.0 - cellar_fraction)), 1)
+        else:
+            self.home_capacity = capacity
+        self.key_hi = np.full(capacity, hc.EMPTY_HI, dtype=np.uint32)
+        self.key_lo = np.full(capacity, hc.EMPTY_LO, dtype=np.uint32)
+        self.val_hi = np.zeros(capacity, dtype=np.uint32)
+        self.val_lo = np.zeros(capacity, dtype=np.uint32)
+        self.occ = np.zeros(capacity, dtype=bool)
+        self.inline = variant == "neighborhash"
+        self.next_idx = None if self.inline else np.full(capacity, -1,
+                                                         dtype=np.int32)
+        self.free_ptr = capacity - 1          # for end-pointer strategies
+        self.stats = BuildStats(capacity=capacity)
+
+    # -- primitive bucket ops ------------------------------------------------
+    def _empty(self, idx: int) -> bool:
+        return not self.occ[idx]
+
+    def _place(self, idx: int, khi: int, klo: int, payload: int,
+               offset_code: int = 0):
+        vhi, vlo = hc.pack_value_int(payload, offset_code)
+        self.key_hi[idx] = khi
+        self.key_lo[idx] = klo
+        self.val_hi[idx] = vhi
+        self.val_lo[idx] = vlo
+        self.occ[idx] = True
+
+    def _set_next(self, idx: int, nxt: int):
+        """Point idx's chain successor at nxt (or END when nxt < 0)."""
+        if self.inline:
+            payload, _ = hc.unpack_value_int(int(self.val_hi[idx]),
+                                             int(self.val_lo[idx]))
+            code = 0 if nxt < 0 else hc.encode_offset_int(nxt - idx)
+            vhi, vlo = hc.pack_value_int(payload, code)
+            self.val_hi[idx] = vhi
+            self.val_lo[idx] = vlo
+        else:
+            self.next_idx[idx] = nxt
+
+    def _next_of(self, idx: int) -> int:
+        if self.inline:
+            code = (int(self.val_hi[idx]) >> hc.PAYLOAD_HI_BITS) & 0xFFF
+            off = hc.decode_offset_int(code)
+            return idx + off if off != 0 else -1
+        return int(self.next_idx[idx])
+
+    def _home_of_resident(self, idx: int) -> int:
+        return hc.bucket_of_int(int(self.key_hi[idx]), int(self.key_lo[idx]),
+                                self.home_capacity)
+
+    # -- free-slot search ----------------------------------------------------
+    def _find_free_end_pointer(self) -> int:
+        while self.free_ptr >= 0 and self.occ[self.free_ptr]:
+            self.free_ptr -= 1
+        if self.free_ptr < 0:
+            raise BuildError("table full (end-pointer search)")
+        return self.free_ptr
+
+    def _find_free_linear(self, ref: int,
+                          bounds: Optional[tuple[int, int]]) -> int:
+        """Unidirectional upward scan from ref+1 (with wrap), chunked."""
+        cap = self.capacity
+        pos = ref + 1
+        remaining = cap - 1
+        while remaining > 0:
+            chunk = min(256, remaining)
+            if pos >= cap:
+                pos -= cap
+            hi = min(pos + chunk, cap)
+            free = np.flatnonzero(~self.occ[pos:hi])
+            for f in free:
+                idx = pos + int(f)
+                if bounds is None or (bounds[0] <= idx <= bounds[1]):
+                    return idx
+            remaining -= hi - pos
+            pos = hi
+        raise BuildError("table full (linear search)")
+
+    def _find_free_neighbor(self, ref: int,
+                            bounds: Optional[tuple[int, int]],
+                            max_range: Optional[int]) -> int:
+        """Cacheline-aware bidirectional nearest-free search around ``ref``
+        (paper Fig 4): same line first, then nearest line outward, both
+        directions; within a line, nearest bucket to ``ref``.
+
+        ``bounds`` is an inclusive feasible interval (offset-encoding
+        constraints, already intersected by the caller); ``max_range`` caps the
+        search radius (±2047 for the inline variant)."""
+        cap = self.capacity
+        rng = max_range if max_range is not None else cap
+        window = 2 * self.bpl                   # start: ref's line ± a line
+        while True:
+            window = min(window, rng)
+            loh = max(0, ref - window)
+            hih = min(cap, ref + window + 1)
+            if bounds is not None:
+                loh = max(loh, bounds[0])
+                hih = min(hih, bounds[1] + 1)
+            if hih > loh:
+                free = np.flatnonzero(~self.occ[loh:hih])
+                if free.size:
+                    cand = free + loh
+                    ref_line = ref // self.bpl
+                    line_d = np.abs(cand // self.bpl - ref_line)
+                    bucket_d = np.abs(cand - ref)
+                    # lexicographic: line distance first, bucket distance next
+                    best = np.lexsort((bucket_d, line_d))[0]
+                    idx = int(cand[best])
+                    # a nearer free bucket could lie just outside the current
+                    # window only if the window didn't already reach the best
+                    # candidate's line distance; grow once more if so.
+                    if line_d[best] * self.bpl <= window or window >= rng:
+                        return idx
+            if window >= rng:
+                if max_range is not None:
+                    raise BuildError(
+                        f"no free bucket within ±{rng} of {ref} "
+                        f"(12-bit inline offset exhausted; grow the table)")
+                raise BuildError("table full (neighbor search)")
+            window = min(window * 4, rng)
+
+    def _find_free(self, ref: int,
+                   bounds: Optional[tuple[int, int]] = None) -> int:
+        if self.variant in ("coalesced", "perfect_cellar"):
+            idx = self._find_free_end_pointer()
+            if bounds is not None and not (bounds[0] <= idx <= bounds[1]):
+                raise BuildError("end-pointer slot violates offset constraint")
+            return idx
+        if self.variant == "linear_lodger":
+            return self._find_free_linear(ref, bounds)
+        max_range = hc.OFFSET_MAX if self.inline else None
+        return self._find_free_neighbor(ref, bounds, max_range)
+
+    # -- chain utilities -----------------------------------------------------
+    def _chain_tail(self, head: int) -> tuple[int, int]:
+        idx, length = head, 1
+        while True:
+            nxt = self._next_of(idx)
+            if nxt < 0:
+                return idx, length
+            idx = nxt
+            length += 1
+            if length > self.capacity:       # pragma: no cover
+                raise RuntimeError("cycle in chain")
+
+    def _predecessor(self, node: int) -> int:
+        """Chain predecessor of an occupied non-head node."""
+        head = self._home_of_resident(node)
+        idx = head
+        while True:
+            nxt = self._next_of(idx)
+            if nxt == node:
+                return idx
+            if nxt < 0:                      # pragma: no cover
+                raise RuntimeError("node not on its home chain")
+            idx = nxt
+
+    def _find_update(self, khi: int, klo: int, home: int) -> int:
+        """Existing bucket index of key, or -1."""
+        if self._empty(home):
+            return -1
+        if self.variant in _RELOCATING and self._home_of_resident(home) != home:
+            return -1
+        idx = home
+        while idx >= 0:
+            if int(self.key_hi[idx]) == khi and int(self.key_lo[idx]) == klo:
+                return idx
+            idx = self._next_of(idx)
+        return -1
+
+    # -- insert --------------------------------------------------------------
+    def insert(self, khi: int, klo: int, payload: int, home: int):
+        if self.variant == "linear":
+            self._insert_linear(khi, klo, payload, home)
+            return
+        existing = self._find_update(khi, klo, home)
+        if existing >= 0:
+            # update-in-place (Update Subsystem semantics): keep chain intact
+            _, code = hc.unpack_value_int(int(self.val_hi[existing]),
+                                          int(self.val_lo[existing]))
+            vhi, vlo = hc.pack_value_int(payload, code if self.inline else 0)
+            self.val_hi[existing] = vhi
+            self.val_lo[existing] = vlo
+            if not self.inline:
+                pass                       # next_idx untouched
+            self.stats.updates += 1
+            return
+        if self.variant == "coalesced":
+            self._insert_coalesced(khi, klo, payload, home)
+        else:
+            self._insert_relocating(khi, klo, payload, home)
+        self.stats.inserts += 1
+
+    def _insert_linear(self, khi: int, klo: int, payload: int, home: int):
+        idx = home
+        for _ in range(self.capacity):
+            if self._empty(idx):
+                self._place(idx, khi, klo, payload)
+                self.stats.inserts += 1
+                return
+            if int(self.key_hi[idx]) == khi and int(self.key_lo[idx]) == klo:
+                vhi, vlo = hc.pack_value_int(payload, 0)
+                self.val_hi[idx] = vhi
+                self.val_lo[idx] = vlo
+                self.stats.updates += 1
+                return
+            idx = (idx + 1) % self.capacity
+        raise BuildError("linear probing table full")
+
+    def _insert_coalesced(self, khi: int, klo: int, payload: int, home: int):
+        if self._empty(home):
+            self._place(home, khi, klo, payload)
+            return
+        tail, length = self._chain_tail(home)
+        f = self._find_free_end_pointer()
+        self._place(f, khi, klo, payload)
+        self._set_next(tail, f)
+        self.stats.max_chain_len = max(self.stats.max_chain_len, length + 1)
+
+    def _insert_relocating(self, khi: int, klo: int, payload: int, home: int):
+        if self._empty(home):
+            self._place(home, khi, klo, payload)
+            return
+        if self._home_of_resident(home) != home:
+            # resident is a lodger: relocate it, then claim home as host
+            self._relocate_lodger(home)
+            self._place(home, khi, klo, payload)
+            return
+        # resident is host: append to this chain near its tail
+        tail, length = self._chain_tail(home)
+        bounds = None
+        if self.inline:
+            bounds = (tail + hc.OFFSET_MIN, tail + hc.OFFSET_MAX)
+        f = self._find_free(tail, bounds)
+        self._place(f, khi, klo, payload)
+        self._set_next(tail, f)
+        self.stats.max_chain_len = max(self.stats.max_chain_len, length + 1)
+
+    def _relocate_lodger(self, j: int):
+        """Move the lodger occupying bucket j elsewhere, fixing its chain."""
+        pred = self._predecessor(j)
+        succ = self._next_of(j)
+        bounds = None
+        if self.inline:
+            # f must be offset-reachable from pred AND reach succ (if any)
+            lo = pred + hc.OFFSET_MIN
+            hi = pred + hc.OFFSET_MAX
+            if succ >= 0:
+                lo = max(lo, succ - hc.OFFSET_MAX)
+                hi = min(hi, succ - hc.OFFSET_MIN)
+            if lo > hi:
+                raise BuildError("offset constraints infeasible for relocation")
+            bounds = (lo, hi)
+        f = self._find_free(pred, bounds)
+        # move record j -> f
+        payload, _ = hc.unpack_value_int(int(self.val_hi[j]),
+                                         int(self.val_lo[j]))
+        self._place(f, int(self.key_hi[j]), int(self.key_lo[j]), payload)
+        self._set_next(f, succ)
+        self._set_next(pred, f)
+        # clear j
+        self.key_hi[j] = hc.EMPTY_HI
+        self.key_lo[j] = hc.EMPTY_LO
+        self.val_hi[j] = 0
+        self.val_lo[j] = 0
+        self.occ[j] = False
+        if not self.inline:
+            self.next_idx[j] = -1
+        self.stats.relocations += 1
+
+    # -------------------------------------------------------------------
+    def finish(self) -> HashTable:
+        self.stats.n = int(self.occ.sum())
+        self.stats.load_factor = self.stats.n / self.capacity
+        # recompute max chain length exactly (relocations may have changed it)
+        max_len = 1
+        if self.variant != "linear":
+            seen_len = {}
+            for idx in np.flatnonzero(self.occ):
+                idx = int(idx)
+                if self._home_of_resident(idx) == idx or \
+                        self.variant == "coalesced":
+                    # chain head (coalesced chains counted from address slots)
+                    if self.variant == "coalesced" and \
+                            self._home_of_resident(idx) != idx:
+                        continue
+                    _, length = self._chain_tail(idx)
+                    max_len = max(max_len, length)
+        else:
+            # linear probing: probe sequence length until empty
+            max_len = self._linear_max_psl()
+        self.stats.max_chain_len = max_len
+        return HashTable(
+            variant=self.variant,
+            capacity=self.capacity,
+            buckets_per_line=self.bpl,
+            key_hi=self.key_hi, key_lo=self.key_lo,
+            val_hi=self.val_hi, val_lo=self.val_lo,
+            next_idx=self.next_idx,
+            home_capacity=self.home_capacity,
+            stats=self.stats,
+        )
+
+    def _linear_max_psl(self) -> int:
+        # longest run of occupied buckets bounds the PSL
+        occ = self.occ
+        if occ.all():
+            return self.capacity
+        # wrap-aware longest occupied run
+        idx = np.flatnonzero(~occ)
+        gaps = np.diff(np.concatenate([idx, [idx[0] + self.capacity]])) - 1
+        return int(gaps.max()) + 1
+
+
+# ---------------------------------------------------------------------------
+# convenience
+# ---------------------------------------------------------------------------
+def random_kv(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Unique random uint64 keys + 52-bit payloads (benchmark datasets)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2**63 - 1, size=int(n * 1.1), dtype=np.uint64)
+    keys = np.unique(keys)[:n]
+    while len(keys) < n:   # pragma: no cover — astronomically unlikely
+        extra = rng.integers(0, 2**63 - 1, size=n, dtype=np.uint64)
+        keys = np.unique(np.concatenate([keys, extra]))[:n]
+    payloads = rng.integers(0, hc.PAYLOAD_MASK, size=n, dtype=np.uint64)
+    return keys, payloads

@@ -1,0 +1,200 @@
+"""Multi-version tables + the batch-query consistency protocol (paper §2.2.2).
+
+Semantics implemented:
+
+  - **strong-version** tables (model embedding tables): values are only
+    comparable within one training publish; a batch query MUST be answered
+    entirely from a single version or the ranking is corrupted (paper Fig 10:
+    ~3% of unprotected queries read mixed versions, measurably hurting CTR).
+  - **weak-version** tables (most attribute tables): per-key freshest wins.
+
+Protocol (paper Figures 7/8): the naming service only tracks instance
+interfaces (ip:port); shard count and version metadata travel *inside* the
+query protocol.  A client sends its pinned version with each sub-query; a
+replica answers from its copy of that version if retained, else NACKs with the
+versions it does hold; the client then re-pins to the highest version every
+shard can serve and retries the NACKed sub-queries.  Servers retain the
+previous generation during a rolling update, so a consistent answer always
+exists without waiting for naming-service convergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class VersionStrength:
+    STRONG = "strong"
+    WEAK = "weak"
+
+
+@dataclasses.dataclass
+class Generation:
+    """One published version of one shard's data."""
+    version: int
+    keys: np.ndarray           # uint64 [n]
+    values: np.ndarray         # [n, ...] any dtype
+    _index: Optional[dict] = None
+
+    def index(self) -> dict:
+        if self._index is None:
+            self._index = {int(k): i for i, k in enumerate(self.keys)}
+        return self._index
+
+
+class ShardReplica:
+    """One replica of one shard.  Retains up to ``retain`` generations so
+    in-flight batches pinned to the previous version still succeed during a
+    rolling update."""
+
+    def __init__(self, shard_id: int, replica_id: int, retain: int = 2):
+        self.shard_id = shard_id
+        self.replica_id = replica_id
+        self.retain = retain
+        self.generations: dict[int, Generation] = {}
+        self.serving = True
+
+    @property
+    def versions(self) -> list[int]:
+        return sorted(self.generations)
+
+    @property
+    def latest(self) -> int:
+        return max(self.generations) if self.generations else -1
+
+    def publish(self, gen: Generation):
+        self.generations[gen.version] = gen
+        while len(self.generations) > self.retain:
+            del self.generations[min(self.generations)]
+
+    def query(self, keys: np.ndarray, version: Optional[int]
+              ) -> tuple[bool, int, Optional[np.ndarray], Optional[np.ndarray]]:
+        """-> (ok, version_served, found_mask, values).
+
+        ok=False is the NACK: requested version not retained (the caller reads
+        .versions from the reply and re-pins) — metadata-in-protocol, not via
+        the naming service."""
+        if not self.serving or not self.generations:
+            return False, -1, None, None
+        v = self.latest if version is None else version
+        if v not in self.generations:
+            return False, self.latest, None, None
+        gen = self.generations[v]
+        idx = gen.index()
+        found = np.zeros(len(keys), dtype=bool)
+        out = np.zeros((len(keys),) + gen.values.shape[1:],
+                       dtype=gen.values.dtype)
+        for i, k in enumerate(np.asarray(keys, dtype=np.uint64)):
+            j = idx.get(int(k))
+            if j is not None:
+                found[i] = True
+                out[i] = gen.values[j]
+        return True, v, found, out
+
+
+@dataclasses.dataclass
+class ConsistencyReport:
+    attempts: int = 0
+    repins: int = 0
+    failures: int = 0
+    versions_used: list = dataclasses.field(default_factory=list)
+
+    @property
+    def mixed_version_batches(self) -> int:
+        return sum(1 for vs in self.versions_used if len(set(vs)) > 1)
+
+
+class ConsistentBatchClient:
+    """Client-side strong-version batch query over one table's shards.
+
+    ``replicas[shard_id]`` is the list of available replicas for that shard.
+    With ``enforce=False`` it mimics the naive client (each shard answers from
+    its own latest version) — the paper's A/B baseline for Fig 10."""
+
+    def __init__(self, replicas: list[list[ShardReplica]],
+                 shard_of, enforce: bool = True):
+        self.replicas = replicas
+        self.shard_of = shard_of
+        self.enforce = enforce
+        self.report = ConsistencyReport()
+
+    def _common_version(self) -> int:
+        """Highest version every shard can serve (ask the shards, not the
+        naming service)."""
+        per_shard = []
+        for reps in self.replicas:
+            vs = set()
+            for r in reps:
+                if r.serving:
+                    vs |= set(r.versions)
+            if not vs:
+                return -1
+            per_shard.append(vs)
+        common = set.intersection(*per_shard) if per_shard else set()
+        return max(common) if common else -1
+
+    def query(self, keys: np.ndarray
+              ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+        """-> (found, values, versions_per_shard_used)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        shard_ids = np.array([self.shard_of(int(k)) for k in keys],
+                             dtype=np.int32)
+        n_shards = len(self.replicas)
+        pin = self._common_version() if self.enforce else None
+        found = np.zeros(len(keys), dtype=bool)
+        values = None
+        versions_used = []
+        self.report.attempts += 1
+        for s in range(n_shards):
+            mask = shard_ids == s
+            if not mask.any():
+                continue
+            sub = keys[mask]
+            ok = False
+            for attempt, rep in enumerate(self._alive(s)):
+                ok, v, f, vals = rep.query(sub, pin)
+                if not ok and self.enforce and v >= 0:
+                    # NACK: re-pin to a version this replica and everyone else
+                    # still retains, retry (bounded)
+                    self.report.repins += 1
+                    pin = self._common_version()
+                    ok, v, f, vals = rep.query(sub, pin)
+                if ok:
+                    break
+            if not ok:
+                self.report.failures += 1
+                return found, np.zeros((len(keys), 1)), versions_used
+            if values is None:
+                values = np.zeros((len(keys),) + vals.shape[1:], vals.dtype)
+            found[mask] = f
+            values[mask] = vals
+            versions_used.append(v)
+        self.report.versions_used.append(versions_used)
+        if values is None:
+            values = np.zeros((len(keys), 1))
+        return found, values, versions_used
+
+    def _alive(self, shard_id: int) -> list[ShardReplica]:
+        return [r for r in self.replicas[shard_id] if r.serving]
+
+
+def rolling_update(replicas: list[list[ShardReplica]], new_gens,
+                   steps_per_replica: int = 1):
+    """Generator that performs a rolling update — one replica out of service
+    at a time (the paper's +1/n-resources scheme) — yielding after each step
+    so tests/simulations can interleave queries mid-update.
+
+    ``new_gens[shard_id]`` is the Generation to publish to that shard."""
+    n_replicas = max(len(reps) for reps in replicas)
+    for rep_idx in range(n_replicas):
+        for shard_id, reps in enumerate(replicas):
+            if rep_idx >= len(reps):
+                continue
+            rep = reps[rep_idx]
+            rep.serving = False                # drained
+            yield ("draining", shard_id, rep_idx)
+            rep.publish(new_gens[shard_id])    # load new generation
+            rep.serving = True                 # back in rotation
+            yield ("updated", shard_id, rep_idx)

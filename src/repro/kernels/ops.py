@@ -1,0 +1,99 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Backend policy:
+  * on TPU: Pallas kernels compiled natively (interpret=False);
+  * elsewhere (this container): ``impl='ref'`` pure-jnp oracles by default —
+    models and the dry-run always lower through XLA;
+  * ``impl='vec'|'amac'|'pallas'``: force the kernel (interpret mode off-TPU)
+    — used by tests and the Fig-9 benchmark.
+
+All wrappers handle padding to the kernels' block multiples.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashcore as hc
+from repro.kernels import ref as _ref
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import fused_fm as _fm
+from repro.kernels import neighbor_lookup as _nl
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int = 0, fill=0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=fill), n
+
+
+# ---------------------------------------------------------------------------
+def neighbor_lookup(key_hi, key_lo, val_hi, val_lo, q_hi, q_lo, *,
+                    max_probes: int, impl: str = "auto",
+                    lines: Optional[jnp.ndarray] = None,
+                    bpl: int = hc.TPU_BUCKETS_PER_LINE,
+                    block_q: int = 256, n_slots: int = 8):
+    """Returns (found u32[N], p_hi u32[N], p_lo u32[N])."""
+    capacity = key_hi.shape[0]
+    if impl == "auto":
+        impl = "vec" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.neighbor_lookup(key_hi, key_lo, val_hi, val_lo,
+                                    q_hi, q_lo, max_probes=max_probes)
+    interpret = not _on_tpu()
+    if impl == "vec":
+        qh, n = _pad_to(q_hi, block_q)
+        ql, _ = _pad_to(q_lo, block_q)
+        f, ph, pl_ = _nl.lookup_vec(key_hi, key_lo, val_hi, val_lo, qh, ql,
+                                    capacity=capacity, max_probes=max_probes,
+                                    block_q=block_q, interpret=interpret)
+        return f[:n], ph[:n], pl_[:n]
+    if impl == "amac":
+        if lines is None:
+            lines = jnp.asarray(_nl.pack_lines(
+                np.asarray(key_hi), np.asarray(key_lo),
+                np.asarray(val_hi), np.asarray(val_lo), bpl))
+        qh, n = _pad_to(q_hi, block_q)
+        ql, _ = _pad_to(q_lo, block_q)
+        f, ph, pl_ = _nl.lookup_amac(lines, qh, ql, capacity=capacity,
+                                     bpl=bpl, max_probes=max_probes,
+                                     block_q=block_q, n_slots=n_slots,
+                                     interpret=interpret)
+        return f[:n], ph[:n], pl_[:n]
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+def embedding_bag(table, indices, weights=None, *, mode: str = "sum",
+                  impl: str = "auto", bags_per_block: int = 8):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.embedding_bag(table, indices, weights, mode)
+    idx, n = _pad_to(indices, bags_per_block, fill=-1)
+    w = None if weights is None else _pad_to(weights, bags_per_block)[0]
+    out = _bag.embedding_bag(table, idx, w, mode=mode,
+                             bags_per_block=bags_per_block,
+                             interpret=not _on_tpu())
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+def fm_interaction(emb, *, impl: str = "auto", block_b: int = 128):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.fused_fm(emb)
+    x, n = _pad_to(emb, block_b)
+    return _fm.fused_fm(x, block_b=block_b, interpret=not _on_tpu())[:n]

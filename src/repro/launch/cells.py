@@ -1,0 +1,328 @@
+"""Cell builder: (arch × shape × mesh) -> (step_fn, ShapeDtypeStruct args,
+in/out shardings).  The dry-run lowers exactly these bundles; smoke tests run
+them for real on reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.data import graph_sampler
+from repro.models import common as cm
+from repro.models import lm as lm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.serve import serve_step as serve
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+
+
+@dataclasses.dataclass
+class CellBundle:
+    arch_id: str
+    cell: registry.Cell
+    fn: Any
+    args: tuple               # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _ns(mesh, mi, spec: P):
+    return NamedSharding(mesh, mi.spec(*spec))
+
+
+def _tree_ns(mesh, mi, specs):
+    return jax.tree.map(lambda s: _ns(mesh, mi, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_spec(mi, n: int) -> P:
+    """Shard a leading batch dim over the data axes when divisible."""
+    dp = mi.dp
+    return P(dp) if dp and n % max(mi.axis_size(dp), 1) == 0 else P(None)
+
+
+def _opt_cfg(family: str, cfg) -> opt.OptConfig:
+    dense_rule = "adam"
+    if family == "lm" and getattr(cfg, "d_model", 0) * getattr(
+            cfg, "n_layers", 0) >= 40 * 5120:       # ≥ ~14B dense: adafactor
+        dense_rule = "adafactor"
+    return opt.OptConfig(dense_rule=dense_rule)
+
+
+def _params_and_opt(init_fn, family, cfg, mesh, mi, want_opt: bool):
+    boxed = jax.eval_shape(init_fn)
+    params_sds, specs = cm.unbox(boxed)
+    param_sh = _tree_ns(mesh, mi, specs)
+    if not want_opt:
+        return params_sds, param_sh, None, None, None
+    ocfg = _opt_cfg(family, cfg)
+    opt_sds = jax.eval_shape(
+        lambda: opt.init_opt_state(params_sds, ocfg))
+    opt_specs = opt.opt_state_specs(params_sds, specs, ocfg)
+    opt_sh = _tree_ns(mesh, mi, opt_specs)
+    return params_sds, param_sh, opt_sds, opt_sh, ocfg
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(arch_id, cfg, cell, mesh, mi, variant="baseline") -> CellBundle:
+    init_fn = functools.partial(lm_mod.lm_init, jax.random.key(0), cfg)
+    b, s = cell.dims["batch"], cell.dims["seq"]
+    kind = cell.kind
+    if kind == "train":
+        params, psh, opt_sds, osh, ocfg = _params_and_opt(
+            init_fn, "lm", cfg, mesh, mi, True)
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        bsh = {"tokens": _ns(mesh, mi, _batch_spec(mi, b))}
+        accum = int(variant[5:]) if variant.startswith("accum") else 1
+        fn = ts.make_train_step(ts.lm_loss_fn(cfg, mesh, mi), ocfg,
+                                accum_steps=accum)
+        step_sh = _ns(mesh, mi, P())
+        return CellBundle(
+            arch_id, cell, fn,
+            (params, opt_sds, _sds((), jnp.int32), batch),
+            (psh, osh, step_sh, bsh),
+            (psh, osh, step_sh, None),
+            {"tokens": b * s, "has_opt": True})
+    params, psh, *_ = _params_and_opt(init_fn, "lm", cfg, mesh, mi, False)
+    if kind == "prefill":
+        fn = serve.lm_prefill_fn(cfg, mesh, mi)
+        batch = _sds((b, s), jnp.int32)
+        return CellBundle(arch_id, cell, fn, (params, batch),
+                          (psh, _ns(mesh, mi, _batch_spec(mi, b))), None,
+                          {"tokens": b * s})
+    if kind == "decode":
+        cache_shapes, cache_specs = lm_mod.make_decode_cache_specs(cfg, b, s, mi)
+        cache_sh = _tree_ns(mesh, mi, cache_specs)
+        tok_sh = _ns(mesh, mi, _batch_spec(mi, b))
+        fn = serve.lm_decode_fn(cfg, mesh, mi)
+        args = (params, _sds((b,), jnp.int32), _sds((b,), jnp.int32),
+                cache_shapes)
+        return CellBundle(arch_id, cell, fn, args,
+                          (psh, tok_sh, tok_sh, cache_sh),
+                          (None, cache_sh), {"tokens": b, "kv_len": s})
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _gnn_cell(arch_id, cfg, cell, mesh, mi) -> CellBundle:
+    d = cell.dims
+    cfg = dataclasses.replace(cfg, d_feat=d["d_feat"],
+                              n_classes=d["n_classes"],
+                              fanouts=tuple(d.get("fanouts",
+                                                  cfg.fanouts)))
+    init_fn = functools.partial(gnn_mod.sage_init, jax.random.key(0), cfg)
+    params, psh, opt_sds, osh, ocfg = _params_and_opt(
+        init_fn, "gnn", cfg, mesh, mi, True)
+    kind = cell.kind
+    n_dev = mi.axis_size(mi.axes)
+
+    if kind == "gnn_full":
+        n, e = d["n_nodes"], d["n_edges"]
+        regime = "full_graph"
+        # pad the edge list inside the step so scatter work shards evenly
+        pad_e = -(-e // max(n_dev, 1)) * max(n_dev, 1)
+
+        def loss_fn(params, batch):
+            edges = batch["edges"]
+            pad = pad_e - edges.shape[1]
+            if pad:
+                edges = jnp.concatenate(
+                    [edges, jnp.full((2, pad), 0, edges.dtype)], axis=1)
+                edges = edges.at[1, -pad:].set(n)      # scatter to /dev/null
+            feats = mi.shard(batch["feats"], tuple(mi.axes))
+            inner = {"feats": feats, "edges": mi.shard(edges, None,
+                                                       tuple(mi.axes)),
+                     "labels": batch["labels"],
+                     "train_mask": batch["train_mask"]}
+            return gnn_mod.gnn_loss(params, cfg, inner, mi, regime)
+
+        batch = {
+            "feats": _sds((n, d["d_feat"]), jnp.float32),
+            "edges": _sds((2, e), jnp.int32),
+            "labels": _sds((n,), jnp.int32),
+            "train_mask": _sds((n,), jnp.float32),
+        }
+        bsh = {k: _ns(mesh, mi, P(None)) for k in batch}
+        fn = ts.make_train_step(loss_fn, ocfg)
+        return CellBundle(arch_id, cell, fn,
+                          (params, opt_sds, _sds((), jnp.int32), batch),
+                          (psh, osh, _ns(mesh, mi, P()), bsh),
+                          (psh, osh, _ns(mesh, mi, P()), None),
+                          {"edges": e, "has_opt": True, "int_high": d["n_classes"]})
+
+    if kind == "gnn_minibatch":
+        shapes = graph_sampler.block_shapes(d["batch_nodes"],
+                                            tuple(d["fanouts"]), d["d_feat"])
+        batch = {k: _sds(sh, dt) for k, (sh, dt) in shapes.items()}
+        bsh = {k: _ns(mesh, mi, _batch_spec(mi, d["batch_nodes"]))
+               for k in batch}
+        fn = ts.make_train_step(
+            ts.gnn_loss_fn(cfg, mesh, mi, "minibatch"), ocfg)
+        return CellBundle(arch_id, cell, fn,
+                          (params, opt_sds, _sds((), jnp.int32), batch),
+                          (psh, osh, _ns(mesh, mi, P()), bsh),
+                          (psh, osh, _ns(mesh, mi, P()), None),
+                          {"seeds": d["batch_nodes"], "has_opt": True, "int_high": d["n_classes"]})
+
+    if kind == "gnn_molecule":
+        g, n, e, f = (d["n_graphs"], d["n_nodes"], d["n_edges"], d["d_feat"])
+        batch = {
+            "node_feats": _sds((g, n, f), jnp.float32),
+            "edges": _sds((g, e, 2), jnp.int32),
+            "node_mask": _sds((g, n), jnp.float32),
+            "labels": _sds((g,), jnp.int32),
+        }
+        bsh = {k: _ns(mesh, mi, _batch_spec(mi, g)) for k in batch}
+        fn = ts.make_train_step(
+            ts.gnn_loss_fn(cfg, mesh, mi, "molecule"), ocfg)
+        return CellBundle(arch_id, cell, fn,
+                          (params, opt_sds, _sds((), jnp.int32), batch),
+                          (psh, osh, _ns(mesh, mi, P()), bsh),
+                          (psh, osh, _ns(mesh, mi, P()), None),
+                          {"graphs": g, "has_opt": True, "int_high": d["n_classes"]})
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+def _rec_batch_sds(cfg, b: int) -> dict:
+    out = {}
+    if cfg.arch in ("din", "bst"):
+        out = {
+            "hist_items": _sds((b, cfg.seq_len), jnp.int32),
+            "hist_cats": _sds((b, cfg.seq_len), jnp.int32),
+            "target_item": _sds((b,), jnp.int32),
+            "target_cat": _sds((b,), jnp.int32),
+            "dense": _sds((b, cfg.n_dense), jnp.float32),
+            "label": _sds((b,), jnp.float32),
+        }
+        if cfg.arch == "bst":
+            out.pop("hist_cats")
+            out.pop("target_cat")
+    elif cfg.arch == "two_tower":
+        out = {
+            "user_id": _sds((b,), jnp.int32),
+            "hist_items": _sds((b, cfg.seq_len), jnp.int32),
+            "dense": _sds((b, cfg.n_dense), jnp.float32),
+            "item_id": _sds((b,), jnp.int32),
+            "item_cat": _sds((b,), jnp.int32),
+        }
+    elif cfg.arch == "deepfm":
+        out = {
+            "sparse_ids": _sds((b, cfg.n_sparse_fields), jnp.int32),
+            "dense": _sds((b, cfg.n_dense), jnp.float32),
+            "label": _sds((b,), jnp.float32),
+        }
+    return out
+
+
+def _rec_cell(arch_id, cfg, cell, mesh, mi, variant="baseline") -> CellBundle:
+    init_fn = functools.partial(rec_mod.recsys_init, jax.random.key(0), cfg)
+    kind = cell.kind
+    b = cell.dims["batch"]
+    if kind == "rec_train":
+        params, psh, opt_sds, osh, ocfg = _params_and_opt(
+            init_fn, "recsys", cfg, mesh, mi, True)
+        batch = _rec_batch_sds(cfg, b)
+        if cfg.arch == "two_tower":
+            batch.pop("label", None)
+        bsh = {k: _ns(mesh, mi, _batch_spec(mi, b)) for k in batch}
+        if variant == "sparse_emb":
+            fn = ts.make_sparse_recsys_train_step(cfg, mesh, mi, ocfg)
+        else:
+            fn = ts.make_train_step(ts.recsys_loss_fn(cfg, mesh, mi), ocfg)
+        return CellBundle(arch_id, cell, fn,
+                          (params, opt_sds, _sds((), jnp.int32), batch),
+                          (psh, osh, _ns(mesh, mi, P()), bsh),
+                          (psh, osh, _ns(mesh, mi, P()), None),
+                          {"examples": b, "has_opt": True})
+    params, psh, *_ = _params_and_opt(init_fn, "recsys", cfg, mesh, mi,
+                                      False)
+    if kind == "rec_serve":
+        batch = _rec_batch_sds(cfg, b)
+        batch.pop("label", None)
+        bsh = {k: _ns(mesh, mi, _batch_spec(mi, b)) for k in batch}
+        fn = serve.recsys_score_fn(
+            cfg, mesh, mi,
+            lookup_impl=variant if variant in ("a2a", "psum16") else "xla")
+        return CellBundle(arch_id, cell, fn, (params, batch), (psh, bsh),
+                          None, {"examples": b})
+    if kind == "rec_retrieval":
+        n_cand = cell.dims["n_candidates"]
+        if cfg.arch == "two_tower":
+            batch = _rec_batch_sds(cfg, b)
+            for k in ("item_id", "item_cat"):
+                batch.pop(k)
+            bsh = {k: _ns(mesh, mi, P(None)) for k in batch}
+            cand = (_sds((n_cand,), jnp.int32), _sds((n_cand,), jnp.int32))
+            cand_sh = (_ns(mesh, mi, P("model")), _ns(mesh, mi, P("model")))
+            fn = serve.retrieval_fn(cfg, mesh, mi, top_k=min(100, n_cand))
+            return CellBundle(arch_id, cell, fn,
+                              (params, batch) + cand,
+                              (psh, bsh) + cand_sh, None,
+                              {"candidates": n_cand})
+        # pointwise archs: bulk-rank n_cand items for one user
+        batch = _rec_batch_sds(cfg, n_cand)
+        batch.pop("label", None)
+        bsh = {k: _ns(mesh, mi, P("model")) for k in batch}
+        fn = serve.bulk_rank_fn(cfg, mesh, mi, top_k=min(100, n_cand))
+        return CellBundle(arch_id, cell, fn, (params, batch), (psh, bsh),
+                          None, {"candidates": n_cand})
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+def build_cell(arch_id: str, cell_name: str, mesh, *, smoke: bool = False,
+               variant: str = "baseline") -> CellBundle:
+    spec = registry.get(arch_id)
+    cell = registry.cell_by_name(spec, cell_name)
+    if smoke:
+        cell = _reduce_cell(spec.family, cell)
+    mi = cm.MeshInfo.from_mesh(mesh)
+    cfg = spec.smoke if smoke else spec.config
+    if spec.family == "lm":
+        return _lm_cell(arch_id, cfg, cell, mesh, mi, variant)
+    if spec.family == "gnn":
+        return _gnn_cell(arch_id, cfg, cell, mesh, mi)
+    if spec.family == "recsys":
+        return _rec_cell(arch_id, cfg, cell, mesh, mi, variant)
+    raise ValueError(spec.family)
+
+
+def _reduce_cell(family: str, cell: registry.Cell) -> registry.Cell:
+    """Shrink cell dims for CPU smoke runs (same kind, tiny sizes)."""
+    d = dict(cell.dims)
+    if family == "lm":
+        d.update(batch=2, seq=32 if cell.kind != "train" else 16)
+    elif family == "gnn":
+        if cell.kind == "gnn_full":
+            d.update(n_nodes=200, n_edges=800, d_feat=24, n_classes=5)
+        elif cell.kind == "gnn_minibatch":
+            d.update(batch_nodes=8, fanouts=(4, 3), d_feat=24, n_classes=5,
+                     n_nodes=500, n_edges=2000)
+        else:
+            d.update(n_graphs=4, n_nodes=10, n_edges=16, d_feat=8,
+                     n_classes=3)
+    elif family == "recsys":
+        d.update(batch=8)
+        if "n_candidates" in d:
+            d.update(n_candidates=64)
+    return registry.Cell(cell.name, cell.kind, d)

@@ -1,0 +1,43 @@
+"""Materialize CellBundle ShapeDtypeStruct args into real arrays — smoke
+tests and real training runs share this."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def materialize_bundle(bundle, seed: int = 0):
+    """Role-aware materialization of a CellBundle's args: optimizer state is
+    zeros (its real init), the step counter starts at 0, int inputs respect
+    the bundle's label/vocab range."""
+    args = list(materialize(bundle.args, seed=seed,
+                            int_high=bundle.meta.get("int_high")))
+    if bundle.meta.get("has_opt"):
+        args[1] = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), bundle.args[1])
+        args[2] = jnp.zeros((), jnp.int32)
+    return tuple(args)
+
+
+def materialize(tree, seed: int = 0, scale: float = 0.02,
+                int_high: int | None = None):
+    """SDS tree -> arrays.  Floats ~ N(0, scale); ints ~ U[0, int_high or
+    small).  Deterministic per-leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    rng = np.random.default_rng(seed)
+    out = []
+    for l in leaves:
+        if not hasattr(l, "dtype"):
+            out.append(l)
+            continue
+        if jnp.issubdtype(l.dtype, jnp.integer):
+            hi = int_high or 8
+            out.append(jnp.asarray(
+                rng.integers(0, hi, size=l.shape), l.dtype))
+        elif jnp.issubdtype(l.dtype, jnp.floating):
+            out.append(jnp.asarray(
+                rng.normal(0, scale, size=l.shape), l.dtype))
+        else:
+            out.append(jnp.zeros(l.shape, l.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,431 @@
+"""Attention blocks: GQA (optionally qk-norm) and MLA (DeepSeek-V3), with
+query-chunked online-softmax for prefill/train (O(S) activation memory — no
+S×S score tensor ever materializes) and KV-cache decode whose cache is
+sequence-sharded over the 'model' axis (flash-decoding-on-ICI: the softmax
+reduction over the sharded KV axis becomes an all-reduce inserted by SPMD).
+
+Shapes:  x [B, S, d];  GQA cache {k,v: [B, Smax, Hkv, dh]};
+         MLA cache {ckv: [B, Smax, kv_lora], kr: [B, Smax, dh_rope]}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import Boxed, MeshInfo
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GQAConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_base: float = 10000.0
+    q_chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    dh_nope: int = 128
+    dh_rope: int = 64
+    dv: int = 128
+    rope_base: float = 10000.0
+    q_chunk: int = 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg: GQAConfig, dtype=jnp.bfloat16) -> dict:
+    ks = cm.keygen(key)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    fsdp = ("pod", "data")
+    p = {
+        "wq": cm.dense_param(next(ks), d, h * dh, P(fsdp, "model"), dtype),
+        "wk": cm.dense_param(next(ks), d, kv * dh, P(fsdp, "model"), dtype),
+        "wv": cm.dense_param(next(ks), d, kv * dh, P(fsdp, "model"), dtype),
+        "wo": cm.dense_param(next(ks), h * dh, d, P("model", fsdp), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = cm.scale_param(dh, P(None), dtype)
+        p["k_gamma"] = cm.scale_param(dh, P(None), dtype)
+    return p
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.bfloat16) -> dict:
+    ks = cm.keygen(key)
+    d, h = cfg.d_model, cfg.n_heads
+    fsdp = ("pod", "data")
+    return {
+        "w_dq": cm.dense_param(next(ks), d, cfg.q_lora, P(fsdp, None), dtype),
+        "q_gamma": cm.scale_param(cfg.q_lora, P(None), dtype),
+        "w_uq": cm.dense_param(next(ks), cfg.q_lora,
+                               h * (cfg.dh_nope + cfg.dh_rope),
+                               P(fsdp, "model"), dtype),
+        "w_dkv": cm.dense_param(next(ks), d, cfg.kv_lora, P(fsdp, None),
+                                dtype),
+        "kv_gamma": cm.scale_param(cfg.kv_lora, P(None), dtype),
+        "w_uk": cm.dense_param(next(ks), cfg.kv_lora, h * cfg.dh_nope,
+                               P(fsdp, "model"), dtype),
+        "w_uv": cm.dense_param(next(ks), cfg.kv_lora, h * cfg.dv,
+                               P(fsdp, "model"), dtype),
+        "w_kr": cm.dense_param(next(ks), d, cfg.dh_rope, P(fsdp, None),
+                               dtype),
+        "wo": cm.dense_param(next(ks), h * cfg.dv, d, P("model", fsdp),
+                             dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention core
+# ---------------------------------------------------------------------------
+def _chunked_attention(q, k, v, *, q_chunk: int, causal: bool,
+                       q_offset: int = 0, mi: Optional[MeshInfo] = None):
+    """q [B, Sq, Hkv, G, dh]; k [B, Sk, Hkv, dh]; v [B, Sk, Hkv, dv]
+    -> [B, Sq, Hkv, G, dv].  Scans over query chunks so the live score
+    tensor is [B, Hkv, G, q_chunk, Sk]."""
+    b, sq, hkv, g, dh = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    sq_orig = sq
+    pad = (-sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        sq = sq + pad
+    n_chunks = sq // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, hkv, g, dh)
+    qc = jnp.moveaxis(qc, 1, 0)                     # [C, B, qc, Hkv, G, dh]
+
+    kpos = jnp.arange(sk)
+
+    @jax.checkpoint
+    def one_chunk(ci, qi):
+        # remat per q-chunk: without it the chunk scan stacks every chunk's
+        # fp32 softmax residuals for backward — the full S×S score tensor the
+        # chunking exists to avoid (§Perf A3)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if causal:
+            qpos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+        return o
+
+    if n_chunks == 1:
+        out = one_chunk(0, qc[0])[None]
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(n_chunks), qc))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, hkv, g, dv)
+    return out[:, :sq_orig]
+
+
+# ---------------------------------------------------------------------------
+# GQA apply — train/prefill
+# ---------------------------------------------------------------------------
+def gqa_apply(params: dict, cfg: GQAConfig, x: jnp.ndarray,
+              mi: MeshInfo, positions: Optional[jnp.ndarray] = None,
+              return_cache: bool = False):
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kv, dh)
+    v = (x @ params["wv"]).reshape(b, s, kv, dh)
+    q = mi.shard(q, mi.dp, None, "model", None)
+    k = mi.shard(k, mi.dp, None, "model", None)
+    v = mi.shard(v, mi.dp, None, "model", None)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, params["q_gamma"])
+        k = cm.rms_norm(k, params["k_gamma"])
+    cos, sin = cm.rope_angles(positions, dh, cfg.rope_base)
+    q = cm.apply_rope(q, cos[:, :, None], sin[:, :, None])
+    k = cm.apply_rope(k, cos[:, :, None], sin[:, :, None])
+
+    qg = q.reshape(b, s, kv, g, dh)
+    out = _chunked_attention(qg, k, v, q_chunk=min(cfg.q_chunk, s),
+                             causal=True, mi=mi)
+    out = out.reshape(b, s, h * dh)
+    y = out @ params["wo"]
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def _flash_decode_body(qg, k_c, v_c, k_new, v_new, pos, *, axis: str,
+                       smax: int, n_shards: int):
+    """shard_map body: cache S-sharded over ``axis``; update lands only in
+    the owning shard; softmax combines with tiny psums (flash-decoding on
+    ICI).  qg [B, kv, g, dh] replicated; k_c/v_c local [B, S_loc, kv, dh]."""
+    b = qg.shape[0]
+    s_loc = smax // n_shards
+    i = jax.lax.axis_index(axis)
+    base = i * s_loc
+    li = pos - base
+    inrange = (li >= 0) & (li < s_loc)
+    li_c = jnp.clip(li, 0, s_loc - 1)
+    if b == 1:
+        # long-context single-request: dynamic-update-slice keeps the update
+        # in-place (batched scatter at B=1 made XLA copy the cache; §Perf A8)
+        # out-of-range shards re-write the existing row (no full-array select)
+        start = (0, li_c[0], 0, 0)
+        kv_, dh_ = k_c.shape[2], k_c.shape[3]
+        cur_k = jax.lax.dynamic_slice(k_c, start, (1, 1, kv_, dh_))
+        cur_v = jax.lax.dynamic_slice(v_c, start, (1, 1, kv_, v_c.shape[3]))
+        upd_k = jnp.where(inrange[0], k_new[:, None].astype(k_c.dtype),
+                          cur_k)
+        upd_v = jnp.where(inrange[0], v_new[:, None].astype(v_c.dtype),
+                          cur_v)
+        k_c = jax.lax.dynamic_update_slice(k_c, upd_k, start)
+        v_c = jax.lax.dynamic_update_slice(v_c, upd_v, start)
+    else:
+        bidx = jnp.arange(b)
+        cur_k = k_c[bidx, li_c]
+        cur_v = v_c[bidx, li_c]
+        sel = inrange[:, None, None]
+        k_c = k_c.at[bidx, li_c].set(jnp.where(sel, k_new, cur_k))
+        v_c = v_c.at[bidx, li_c].set(jnp.where(sel, v_new, cur_v))
+
+    dh = qg.shape[-1]
+    # keep the cache in bf16; accumulate in f32 (upcasting k_c materializes
+    # an f32 copy of the whole local cache — measured 86 GB/device on
+    # qwen3-14b decode_32k, §Perf A6)
+    s = jnp.einsum("bhgd,bkhd->bhgk", (qg * (1.0 / dh ** 0.5)).astype(
+        k_c.dtype), k_c, preferred_element_type=jnp.float32)
+    kpos = base + jnp.arange(s_loc)
+    mask = kpos[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    # online-softmax partials + cross-shard combine (bytes ~ B·H·dh, tiny)
+    m_loc = jnp.max(s, axis=-1)
+    m = jax.lax.pmax(m_loc, axis)
+    e = jnp.exp(s - m[..., None])
+    l_loc = jnp.sum(e, axis=-1)
+    num_loc = jnp.einsum("bhgk,bkhd->bhgd", e.astype(v_c.dtype), v_c)
+    l = jax.lax.psum(l_loc, axis)
+    num = jax.lax.psum(num_loc.astype(jnp.float32), axis)
+    o = num / jnp.maximum(l, 1e-30)[..., None]
+    return o.astype(v_c.dtype), k_c, v_c
+
+
+def _sharded_cache_attn(mesh, mi: MeshInfo, qg, cache: dict, k_new, v_new,
+                        pos):
+    """Dispatch to the shard_map flash-decode when the cache can be
+    S-sharded over 'model'; plain einsum path otherwise."""
+    from jax import shard_map
+    b, smax = cache["k"].shape[0], cache["k"].shape[1]
+    n_shards = mi.sizes.get("model", 1)
+    dp = mi.dp
+    bspec = dp if (dp and b % max(mi.axis_size(dp), 1) == 0) else None
+    if n_shards <= 1 or smax % n_shards or mesh is None:
+        # fallback: full-cache path (single device / indivisible S)
+        bidx = jnp.arange(b)
+        k_c = cache["k"].at[bidx, pos].set(k_new)
+        v_c = cache["v"].at[bidx, pos].set(v_new)
+        s = jnp.einsum("bhgd,bkhd->bhgk",
+                       (qg * (1.0 / qg.shape[-1] ** 0.5)).astype(k_c.dtype),
+                       k_c, preferred_element_type=jnp.float32)
+        mask = jnp.arange(smax)[None, :] <= pos[:, None]
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_c.dtype), v_c)
+        return o, k_c, v_c
+    body = functools.partial(_flash_decode_body, axis="model", smax=smax,
+                             n_shards=n_shards)
+    cache_spec = P(bspec, "model", None, None)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec), cache_spec, cache_spec, P(bspec), P(bspec),
+                  P(bspec)),
+        out_specs=(P(bspec), cache_spec, cache_spec),
+        check_vma=False)
+    return fn(qg, cache["k"], cache["v"], k_new, v_new, pos)
+
+
+def gqa_decode(params: dict, cfg: GQAConfig, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray, mi: MeshInfo, mesh=None):
+    """One-token decode.  x [B, 1, d]; cache k/v [B, Smax, Hkv, dh] sharded
+    P(dp, 'model', None, None): scatter-update + flash-decoding inside
+    shard_map (§Perf A5 — the pjit path all-gathered the cache).
+    ``pos`` [B] int32 current lengths.  Returns (y [B,1,d], new_cache)."""
+    b, _, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+
+    q = (x @ params["wq"]).reshape(b, 1, h, dh)
+    k_new = (x @ params["wk"]).reshape(b, 1, kv, dh)
+    v_new = (x @ params["wv"]).reshape(b, 1, kv, dh)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, params["q_gamma"])
+        k_new = cm.rms_norm(k_new, params["k_gamma"])
+    cos, sin = cm.rope_angles(pos[:, None], dh, cfg.rope_base)
+    q = cm.apply_rope(q, cos[:, :, None], sin[:, :, None])
+    k_new = cm.apply_rope(k_new, cos[:, :, None], sin[:, :, None])
+
+    qg = q.reshape(b, kv, g, dh)
+    o, k_c, v_c = _sharded_cache_attn(mesh, mi, qg, cache, k_new[:, 0],
+                                      v_new[:, 0], pos)
+    y = o.reshape(b, 1, h * dh) @ params["wo"]
+    return y, {"k": k_c, "v": v_c}
+
+
+# ---------------------------------------------------------------------------
+# MLA apply — train/prefill and decode (latent cache)
+# ---------------------------------------------------------------------------
+def _mla_qkv(params, cfg: MLAConfig, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = cm.rms_norm(x @ params["w_dq"], params["q_gamma"])
+    q = (cq @ params["w_uq"]).reshape(b, s, h, cfg.dh_nope + cfg.dh_rope)
+    q_nope, q_rope = jnp.split(q, [cfg.dh_nope], axis=-1)
+    ckv = cm.rms_norm(x @ params["w_dkv"], params["kv_gamma"])
+    kr = x @ params["w_kr"]                                   # [B,S,dh_rope]
+    cos, sin = cm.rope_angles(positions, cfg.dh_rope, cfg.rope_base)
+    q_rope = cm.apply_rope(q_rope, cos[:, :, None], sin[:, :, None])
+    kr = cm.apply_rope(kr[:, :, None], cos[:, :, None],
+                       sin[:, :, None])[:, :, 0]
+    return q_nope, q_rope, ckv, kr
+
+
+def _mla_expand_kv(params, cfg: MLAConfig, ckv, kr):
+    b, s, _ = ckv.shape
+    h = cfg.n_heads
+    k_nope = (ckv @ params["w_uk"]).reshape(b, s, h, cfg.dh_nope)
+    v = (ckv @ params["w_uv"]).reshape(b, s, h, cfg.dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None], (b, s, h, cfg.dh_rope))],
+        axis=-1)
+    return k, v
+
+
+def mla_apply(params: dict, cfg: MLAConfig, x: jnp.ndarray, mi: MeshInfo,
+              positions: Optional[jnp.ndarray] = None,
+              return_cache: bool = False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, ckv, kr = _mla_qkv(params, cfg, x, positions)
+    k, v = _mla_expand_kv(params, cfg, ckv, kr)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = mi.shard(q, mi.dp, None, "model", None)
+    k = mi.shard(k, mi.dp, None, "model", None)
+    # MHA == GQA with G=1
+    out = _chunked_attention(
+        q.reshape(b, s, h, 1, cfg.dh_nope + cfg.dh_rope), k, v,
+        q_chunk=min(cfg.q_chunk, s), causal=True, mi=mi)
+    out = out.reshape(b, s, h * cfg.dv)
+    y = out @ params["wo"]
+    if return_cache:
+        return y, {"ckv": ckv, "kr": kr}
+    return y
+
+
+def _mla_flash_body(q_abs, q_rope, ckv_c, kr_c, ckv_new, kr_new, pos, *,
+                    axis: str, smax: int, n_shards: int, scale: float):
+    """Latent-cache flash-decode: score/context both live in the kv_lora
+    latent space, combined across S-shards with tiny psums."""
+    b = q_abs.shape[0]
+    s_loc = smax // n_shards
+    i = jax.lax.axis_index(axis)
+    base = i * s_loc
+    li = pos - base
+    inrange = (li >= 0) & (li < s_loc)
+    li_c = jnp.clip(li, 0, s_loc - 1)
+    bidx = jnp.arange(b)
+    sel = inrange[:, None]
+    ckv_c = ckv_c.at[bidx, li_c].set(
+        jnp.where(sel, ckv_new, ckv_c[bidx, li_c]))
+    kr_c = kr_c.at[bidx, li_c].set(
+        jnp.where(sel, kr_new, kr_c[bidx, li_c]))
+
+    s_nope = jnp.einsum("bhl,bkl->bhk", q_abs.astype(ckv_c.dtype), ckv_c,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhr,bkr->bhk", q_rope.astype(kr_c.dtype), kr_c,
+                        preferred_element_type=jnp.float32)
+    s = (s_nope + s_rope) * scale
+    mask = (base + jnp.arange(s_loc))[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None], s, -1e30)
+    m = jax.lax.pmax(jnp.max(s, axis=-1), axis)
+    e = jnp.exp(s - m[..., None])
+    l = jax.lax.psum(jnp.sum(e, axis=-1), axis)
+    num = jax.lax.psum(
+        jnp.einsum("bhk,bkl->bhl", e.astype(ckv_c.dtype), ckv_c,
+                   preferred_element_type=jnp.float32), axis)
+    ctx = num / jnp.maximum(l, 1e-30)[..., None]
+    return ctx, ckv_c, kr_c
+
+
+def mla_decode(params: dict, cfg: MLAConfig, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray, mi: MeshInfo, mesh=None):
+    """Latent-cache decode: cache stores (ckv [B,Smax,kv_lora], kr
+    [B,Smax,dh_rope]) — 576 B/token/layer at bf16 instead of h*(dh+dv).
+    The nope-score uses the absorbed form q_nope·W_uk^T·ckv so the per-head
+    K never materializes for the whole cache; S-sharded via shard_map
+    (§Perf A5)."""
+    from jax import shard_map
+    b, _, d = x.shape
+    h = cfg.n_heads
+    smax = cache["ckv"].shape[1]
+    q_nope, q_rope, ckv_new, kr_new = _mla_qkv(params, cfg, x, pos[:, None])
+
+    # absorbed attention: score = q_nope^T W_uk ckv + q_rope^T kr
+    w_uk = params["w_uk"].reshape(cfg.kv_lora, h, cfg.dh_nope)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))              # [B,H,kv_lora]
+    scale = (cfg.dh_nope + cfg.dh_rope) ** -0.5
+    qr = q_rope[:, 0].astype(jnp.float32)
+
+    n_shards = mi.sizes.get("model", 1)
+    dp = mi.dp
+    bspec = dp if (dp and b % max(mi.axis_size(dp), 1) == 0) else None
+    if n_shards > 1 and smax % n_shards == 0 and mesh is not None:
+        body = functools.partial(_mla_flash_body, axis="model", smax=smax,
+                                 n_shards=n_shards, scale=scale)
+        cspec = P(bspec, "model", None)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(bspec), P(bspec), cspec, cspec,
+                                 P(bspec), P(bspec), P(bspec)),
+                       out_specs=(P(bspec), cspec, cspec),
+                       check_vma=False)
+        ctx, ckv_c, kr_c = fn(q_abs, qr, cache["ckv"], cache["kr"],
+                              ckv_new[:, 0], kr_new[:, 0], pos)
+    else:
+        bidx = jnp.arange(b)
+        ckv_c = cache["ckv"].at[bidx, pos].set(ckv_new[:, 0])
+        kr_c = cache["kr"].at[bidx, pos].set(kr_new[:, 0])
+        s = (jnp.einsum("bhl,bkl->bhk", q_abs.astype(ckv_c.dtype), ckv_c,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhr,bkr->bhk", qr.astype(kr_c.dtype), kr_c,
+                          preferred_element_type=jnp.float32)) * scale
+        mask = jnp.arange(smax)[None, :] <= pos[:, None]
+        s = jnp.where(mask[:, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhk,bkl->bhl", p.astype(ckv_c.dtype), ckv_c,
+                         preferred_element_type=jnp.float32)
+
+    w_uv = params["w_uv"].reshape(cfg.kv_lora, h, cfg.dv)
+    o = jnp.einsum("bhl,lhd->bhd", ctx, w_uv.astype(jnp.float32))
+    y = o.reshape(b, 1, h * cfg.dv).astype(x.dtype) @ params["wo"]
+    new_cache = {"ckv": ckv_c, "kr": kr_c}
+    return y, new_cache

@@ -1,0 +1,152 @@
+"""Model-parallel embedding layer backed by the batch-query architecture.
+
+Tables are row-sharded over the mesh 'model' axis — the on-chip image of the
+paper's automatic table sharding (DESIGN.md §4).  Two lookup paths:
+
+  * 'xla'  (default): jnp.take / EmbeddingBag against the sharded table;
+    the SPMD partitioner inserts the gather collectives.  Differentiable,
+    used by training.
+  * 'a2a': the explicit batch-query protocol (core/distributed.py) — the
+    beyond-paper serving path benchmarked in §Perf.
+
+IDs may be raw 64-bit entity ids; ``hash_ids`` folds them into the table's
+row space with the same 32-bit mix the NeighborHash index uses (the
+frequency-hashing trick of [39] in the paper's related work).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashcore as hc
+from repro.kernels import ref as kref
+from repro.models import common as cm
+from repro.models.common import Boxed, MeshInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class TableCfg:
+    name: str
+    vocab: int
+    dim: int
+
+
+def table_init(key, t: TableCfg, dtype=jnp.float32) -> Boxed:
+    return Boxed(cm.normal_init(key, (t.vocab, t.dim), 0.05, dtype),
+                 P("model", None))
+
+
+def hash_ids(ids: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """64-bit-safe fold of raw ids into [0, vocab) (negative ids = padding,
+    preserved)."""
+    lo = ids.astype(jnp.uint32)
+    hi = (ids >> 31).astype(jnp.uint32)      # int32-safe 'high' part
+    h = hc.hash64_jnp(hi, lo) % jnp.uint32(vocab)
+    return jnp.where(ids < 0, -1, h.astype(jnp.int32))
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                 mi: MeshInfo) -> jnp.ndarray:
+    """Single-id lookup: ids [...] -> [..., D]."""
+    safe = jnp.maximum(ids, 0)
+    out = jnp.take(table, safe, axis=0)
+    out = jnp.where((ids >= 0)[..., None], out, 0)
+    return mi.shard(out, mi.dp)
+
+
+def embed_bag(table: jnp.ndarray, ids: jnp.ndarray,
+              weights: Optional[jnp.ndarray], mode: str,
+              mi: MeshInfo) -> jnp.ndarray:
+    """Multi-hot bag lookup: ids [B, L] (-1 pad) -> [B, D]."""
+    out = kref.embedding_bag(table, ids, weights, mode)
+    return mi.shard(out, mi.dp, None)
+
+
+# ---------------------------------------------------------------------------
+# the paper's batch-query protocol as the serving lookup path (§Perf C1):
+# ids sharded over the data axes, table row-blocks over 'model'; each device
+# buckets its ids by owning shard, all_to_all's the ids (4 B each), answers
+# with a LOCAL gather, and all_to_all's the rows back — instead of letting
+# the partitioner all-gather table blocks.  Serving-only (no grad).
+# ---------------------------------------------------------------------------
+def embed_bag_psum(table: jnp.ndarray, ids: jnp.ndarray, mode: str, mesh,
+                   mi: MeshInfo, comm_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Bag lookup via shard-local partial reduce + low-precision psum
+    (§Perf C2): each table shard sums the rows IT owns for every bag, then
+    one psum of [B, D] in ``comm_dtype`` combines — collective bytes are
+    B·D·sizeof(comm_dtype), independent of bag length, and halved vs the
+    partitioner's fp32 all-reduce.  Serving path (no grad)."""
+    from jax import shard_map
+    n_shards = mi.sizes.get("model", 1)
+    v, d = table.shape
+    if n_shards <= 1 or v % n_shards or mesh is None:
+        return embed_bag(table, ids, None, mode, mi)
+    rows_per_shard = v // n_shards
+    dp = mi.dp
+    bspec = dp if (dp and ids.shape[0] % max(mi.axis_size(dp), 1) == 0) \
+        else None
+
+    def body(tbl, ids_loc):
+        i = jax.lax.axis_index("model")
+        local = ids_loc - i * rows_per_shard
+        mine = (ids_loc >= 0) & (local >= 0) & (local < rows_per_shard)
+        rows = jnp.take(tbl, jnp.clip(local, 0, rows_per_shard - 1), axis=0)
+        rows = rows * mine[..., None].astype(rows.dtype)
+        part = rows.sum(axis=1).astype(comm_dtype)          # [B_loc, D]
+        out = jax.lax.psum(part, "model").astype(table.dtype)
+        if mode == "mean":
+            cnt = jax.lax.psum(
+                mine.sum(axis=1).astype(jnp.float32), "model")
+            out = out / jnp.maximum(cnt, 1.0)[:, None]
+        return out
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("model", None), P(bspec)),
+                   out_specs=P(bspec), check_vma=False)
+    return fn(table, ids)
+
+
+def embed_lookup_a2a(table: jnp.ndarray, ids: jnp.ndarray, mesh,
+                     mi: MeshInfo, capacity_factor: float = 1.5
+                     ) -> jnp.ndarray:
+    from jax import shard_map
+    from repro.core.distributed import (route_by_owner, scatter_to_buffers,
+                                        gather_from_buffers)
+    n_shards = mi.sizes.get("model", 1)
+    v, d = table.shape
+    if n_shards <= 1 or v % n_shards or mesh is None:
+        return embed_lookup(table, ids, mi)
+    rows_per_shard = v // n_shards
+    lead_shape = ids.shape
+    dp = mi.dp
+    n_lead = lead_shape[0]
+    bspec = dp if (dp and n_lead % max(mi.axis_size(dp), 1) == 0) else None
+    n_loc_ids = (np.prod(lead_shape) //
+                 max(mi.axis_size(bspec) if bspec else 1, 1))
+    cap = max(int(np.ceil(n_loc_ids / n_shards * capacity_factor)), 1)
+
+    def body(tbl, ids_loc):
+        flat = ids_loc.reshape(-1)
+        safe = jnp.maximum(flat, 0)
+        owner = (safe // rows_per_shard).astype(jnp.int32)
+        r = route_by_owner(owner, n_shards, cap)
+        local_row = safe % rows_per_shard
+        (send_ids,) = scatter_to_buffers(r, [local_row], n_shards, cap)
+        recv_ids = jax.lax.all_to_all(send_ids, "model", 0, 0, tiled=True)
+        rows = jnp.take(tbl, recv_ids.reshape(-1), axis=0)
+        rows = rows.reshape(n_shards, cap, d)
+        back = jax.lax.all_to_all(rows, "model", 0, 0, tiled=True)
+        (out,) = gather_from_buffers(r, [back])
+        valid = (flat >= 0) & r.kept
+        out = jnp.where(valid[:, None], out, 0)
+        return out.reshape(ids_loc.shape + (d,))
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("model", None), P(bspec)),
+                   out_specs=P(bspec), check_vma=False)
+    return fn(table, ids)

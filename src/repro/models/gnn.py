@@ -1,0 +1,158 @@
+"""GraphSAGE (mean aggregator) in three execution regimes:
+
+  * full-graph: message passing over a global edge list via
+    ``jax.ops.segment_sum`` (JAX has no CSR SpMM — the scatter/segment path
+    IS the system, per the assignment notes);
+  * sampled minibatch: dense fanout trees (seed, [B,f1], [B,f1,f2]) produced
+    by data/graph_sampler.py — fixed shapes, TPU-friendly;
+  * batched small graphs (molecule): per-graph scatter-add with a graph dim.
+
+Node features for sampled training are fetched through the batch-query layer
+(one consistent table version per minibatch — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import Boxed, MeshInfo
+
+FSDP = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_feat: int = 602
+    n_classes: int = 41
+    aggregator: str = "mean"
+    fanouts: tuple = (25, 10)
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def sage_init(key, cfg: GNNConfig) -> dict:
+    ks = cm.keygen(key)
+    dt = cfg.jdtype
+    dims = [cfg.d_feat] + [cfg.d_hidden] * cfg.n_layers
+    layers = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        layers.append({
+            "w_self": cm.dense_param(next(ks), din, dout, P(None, "model"),
+                                     dt),
+            "w_neigh": cm.dense_param(next(ks), din, dout, P(None, "model"),
+                                      dt),
+            "b": Boxed(jnp.zeros((dout,), dt), P(None)),
+        })
+    return {
+        "layers": layers,
+        "cls": cm.dense_param(next(ks), cfg.d_hidden, cfg.n_classes,
+                              P(None, None), dt),
+    }
+
+
+def _combine(layer, h_self, h_neigh, last: bool):
+    out = h_self @ layer["w_self"] + h_neigh @ layer["w_neigh"] + layer["b"]
+    if not last:
+        out = jax.nn.relu(out)
+        # L2-normalize as in the paper (GraphSAGE §3.1)
+        out = out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True),
+                                1e-6)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full-graph
+# ---------------------------------------------------------------------------
+def sage_full_graph(params: dict, cfg: GNNConfig, feats, edges,
+                    mi: MeshInfo):
+    """feats [N, F]; edges [2, E] (src -> dst).  Returns logits [N, C]."""
+    src, dst = edges[0], edges[1]
+    n = feats.shape[0]
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, dtype=feats.dtype), dst,
+                              num_segments=n)
+    deg = jnp.maximum(deg, 1.0)[:, None]
+    h = feats
+    for li, layer in enumerate(params["layers"]):
+        msgs = jnp.take(h, src, axis=0)            # gather along edges
+        msgs = mi.shard(msgs, mi.dp)
+        agg = jax.ops.segment_sum(msgs, dst, num_segments=n) / deg
+        h = _combine(layer, h, agg, last=False)
+        h = mi.shard(h, mi.dp)
+    return h @ params["cls"]
+
+
+# ---------------------------------------------------------------------------
+# sampled minibatch (dense fanout tree)
+# ---------------------------------------------------------------------------
+def sage_minibatch(params: dict, cfg: GNNConfig, block: dict, mi: MeshInfo):
+    """block: seed_feats [B, F]; h1_feats [B, f1, F]; h2_feats [B, f1, f2, F];
+    h1_mask [B, f1]; h2_mask [B, f1, f2].  2-layer SAGE. Returns [B, C]."""
+    l1, l2 = params["layers"][0], params["layers"][1]
+    h2m = block["h2_mask"][..., None].astype(block["h2_feats"].dtype)
+    h1m = block["h1_mask"][..., None].astype(block["h1_feats"].dtype)
+    # layer 1 on hop-1 nodes: aggregate their hop-2 neighbours
+    agg2 = (block["h2_feats"] * h2m).sum(2) / jnp.maximum(h2m.sum(2), 1.0)
+    h1 = _combine(l1, block["h1_feats"], agg2, last=False)     # [B, f1, H]
+    # layer 1 on seeds: aggregate hop-1 neighbours (raw feats)
+    agg1 = (block["h1_feats"] * h1m).sum(1) / jnp.maximum(h1m.sum(1), 1.0)
+    h0 = _combine(l1, block["seed_feats"], agg1, last=False)   # [B, H]
+    # layer 2 on seeds: aggregate layer-1 hop-1 states
+    agg = (h1 * h1m).sum(1) / jnp.maximum(h1m.sum(1), 1.0)
+    h = _combine(l2, h0, agg, last=False)
+    return h @ params["cls"]
+
+
+# ---------------------------------------------------------------------------
+# batched small graphs (molecule) — graph-level classification
+# ---------------------------------------------------------------------------
+def sage_molecule(params: dict, cfg: GNNConfig, batch: dict, mi: MeshInfo):
+    """node_feats [G, N, F]; edges [G, E, 2] (-1 pad); node_mask [G, N].
+    Returns graph logits [G, C] (mean readout)."""
+    feats = batch["node_feats"]
+    g, n, _ = feats.shape
+    src = jnp.maximum(batch["edges"][..., 0], 0)
+    dst = jnp.maximum(batch["edges"][..., 1], 0)
+    emask = (batch["edges"][..., 0] >= 0).astype(feats.dtype)[..., None]
+    nmask = batch["node_mask"][..., None].astype(feats.dtype)
+    gi = jnp.arange(g)[:, None]
+    deg = jnp.zeros((g, n, 1), feats.dtype).at[gi, dst].add(emask)
+    deg = jnp.maximum(deg, 1.0)
+    h = feats
+    for layer in params["layers"]:
+        msgs = h[gi, src] * emask                  # [G, E, H]
+        agg = jnp.zeros((g, n, h.shape[-1]), h.dtype).at[gi, dst].add(msgs)
+        agg = agg / deg
+        h = _combine(layer, h, agg, last=False) * nmask
+    readout = (h * nmask).sum(1) / jnp.maximum(nmask.sum(1), 1.0)
+    return readout @ params["cls"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def gnn_loss(params: dict, cfg: GNNConfig, batch: dict, mi: MeshInfo,
+             regime: str):
+    if regime == "full_graph":
+        logits = sage_full_graph(params, cfg, batch["feats"], batch["edges"],
+                                 mi)
+        mask = batch.get("train_mask")
+        loss = cm.softmax_xent(logits, batch["labels"], mask)
+    elif regime == "minibatch":
+        logits = sage_minibatch(params, cfg, batch, mi)
+        loss = cm.softmax_xent(logits, batch["labels"])
+    elif regime == "molecule":
+        logits = sage_molecule(params, cfg, batch, mi)
+        loss = cm.softmax_xent(logits, batch["labels"])
+    else:
+        raise ValueError(regime)
+    return loss, {"loss": loss}

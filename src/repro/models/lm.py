@@ -1,0 +1,383 @@
+"""The LM transformer family: one flexible decoder-only stack covering
+deepseek-7b (llama-arch GQA), qwen3-14b (GQA + qk-norm), nemotron-4-340b
+(GQA + squared-ReLU FFN), deepseek-v3-671b (MLA + shared/routed MoE + MTP),
+qwen3-moe-235b (GQA + MoE).
+
+Structure: pre-RMSNorm blocks, scan-over-layers (+remat), mixed dense/MoE
+stacks (first ``n_dense_layers`` dense, rest MoE), vocab tables row-sharded
+over 'model' (the paper's table sharding applied to embed/unembed), sequence-
+parallel activations between blocks, FSDP('pod','data') × TP('model') weight
+sharding.  See DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import Boxed, MeshInfo
+
+FSDP = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attn_type: str = "gqa"              # gqa | mla
+    ffn_type: str = "swiglu"            # swiglu | squared_relu
+    qk_norm: bool = False
+    moe: Optional[moe_mod.MoEConfig] = None
+    n_dense_layers: int = 0             # leading dense layers in MoE models
+    mtp_depth: int = 0                  # DeepSeek-V3 multi-token prediction
+    rope_base: float = 10000.0
+    q_chunk: int = 512
+    dtype: str = "bfloat16"
+    remat: bool = True
+    loss_chunk: int = 512     # sequence chunking of the CE (0 = off)
+    unroll: bool = False      # unroll layer scans (exact cost_analysis; the
+    #                           dry-run's --fit-layers uses this on small L)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers - self.n_dense_layers if self.moe else 0
+
+    def gqa_cfg(self) -> attn.GQAConfig:
+        return attn.GQAConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                              self.head_dim, self.qk_norm, self.rope_base,
+                              self.q_chunk)
+
+    def mla_cfg(self) -> attn.MLAConfig:
+        return attn.MLAConfig(self.d_model, self.n_heads,
+                              rope_base=self.rope_base, q_chunk=self.q_chunk)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _ffn_init(key, cfg: LMConfig, dtype) -> dict:
+    ks = cm.keygen(key)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.ffn_type == "swiglu":
+        return {
+            "w_gate": cm.dense_param(next(ks), d, f, P(FSDP, "model"), dtype),
+            "w_up": cm.dense_param(next(ks), d, f, P(FSDP, "model"), dtype),
+            "w_down": cm.dense_param(next(ks), f, d, P("model", FSDP), dtype),
+        }
+    if cfg.ffn_type == "squared_relu":
+        return {
+            "w_in": cm.dense_param(next(ks), d, f, P(FSDP, "model"), dtype),
+            "w_out": cm.dense_param(next(ks), f, d, P("model", FSDP), dtype),
+        }
+    raise ValueError(cfg.ffn_type)
+
+
+def _attn_init(key, cfg: LMConfig, dtype) -> dict:
+    if cfg.attn_type == "mla":
+        return attn.mla_init(key, cfg.mla_cfg(), dtype)
+    return attn.gqa_init(key, cfg.gqa_cfg(), dtype)
+
+
+def _layer_init(key, cfg: LMConfig, use_moe: bool) -> dict:
+    dtype = cfg.jdtype
+    ks = cm.keygen(key)
+    p = {
+        "ln1": cm.scale_param(cfg.d_model, P(None), dtype),
+        "attn": _attn_init(next(ks), cfg, dtype),
+        "ln2": cm.scale_param(cfg.d_model, P(None), dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(next(ks), cfg.moe, dtype)
+    else:
+        p["ffn"] = _ffn_init(next(ks), cfg, dtype)
+    return p
+
+
+def lm_init(key, cfg: LMConfig) -> dict:
+    """Returns a Boxed tree (value + PartitionSpec per leaf)."""
+    dtype = cfg.jdtype
+    ks = cm.keygen(key)
+    n_dense = cfg.n_layers - cfg.n_moe_layers
+    params: dict = {
+        # embed is d-sharded (P(None,'model')), NOT vocab-sharded: a gather
+        # over vocab-sharded rows makes XLA materialize full-vocab fp32
+        # gradients per device (measured 1.68 GB x many on deepseek-7b);
+        # d-sharding keeps lookup and its scatter-add gradient shard-local
+        # (§Perf A4)
+        "embed": cm.embed_param(next(ks), cfg.vocab, cfg.d_model,
+                                P(None, "model"), dtype),
+        "final_ln": cm.scale_param(cfg.d_model, P(None), dtype),
+        "unembed": cm.dense_param(next(ks), cfg.d_model, cfg.vocab,
+                                  P(FSDP, "model"), dtype),
+    }
+    if n_dense:
+        keys = jax.random.split(next(ks), n_dense)
+        params["dense_layers"] = cm.stack_specs(
+            jax.vmap(lambda k: _layer_init(k, cfg, use_moe=False))(keys))
+    if cfg.n_moe_layers:
+        keys = jax.random.split(next(ks), cfg.n_moe_layers)
+        params["moe_layers"] = cm.stack_specs(
+            jax.vmap(lambda k: _layer_init(k, cfg, use_moe=True))(keys))
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": cm.dense_param(next(ks), 2 * cfg.d_model, cfg.d_model,
+                                   P(FSDP, None), dtype),
+            "ln_h": cm.scale_param(cfg.d_model, P(None), dtype),
+            "ln_e": cm.scale_param(cfg.d_model, P(None), dtype),
+            "block": _layer_init(next(ks), cfg, use_moe=False),
+            "final_ln": cm.scale_param(cfg.d_model, P(None), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _ffn_apply(p: dict, cfg: LMConfig, x, mi: MeshInfo):
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = mi.shard(h, mi.dp, None, "model")
+        return h @ p["w_down"]
+    h = cm.squared_relu(x @ p["w_in"])
+    h = mi.shard(h, mi.dp, None, "model")
+    return h @ p["w_out"]
+
+
+def _layer_apply(p: dict, cfg: LMConfig, x, mesh, mi: MeshInfo,
+                 use_moe: bool):
+    """Pre-norm block.  Returns (x, aux)."""
+    h = attn_out = None
+    a = cm.rms_norm(x, p["ln1"])
+    if cfg.attn_type == "mla":
+        attn_out = attn.mla_apply(p["attn"], cfg.mla_cfg(), a, mi)
+    else:
+        attn_out = attn.gqa_apply(p["attn"], cfg.gqa_cfg(), a, mi)
+    x = x + attn_out
+    x = mi.shard(x, mi.dp, "model", None)       # SP between sublayers
+    h = cm.rms_norm(x, p["ln2"])
+    if use_moe:
+        y, aux, dropped = moe_mod.moe_apply(p["moe"], cfg.moe, h, mesh, mi)
+    else:
+        y, aux, dropped = _ffn_apply(p["ffn"], cfg, h, mi), 0.0, 0.0
+    x = x + y
+    x = mi.shard(x, mi.dp, "model", None)
+    return x, (jnp.asarray(aux, jnp.float32),
+               jnp.asarray(dropped, jnp.float32))
+
+
+def _scan_stack(stack_params, cfg: LMConfig, x, mesh, mi: MeshInfo,
+                use_moe: bool):
+    layer = functools.partial(_layer_apply, cfg=cfg, mesh=mesh, mi=mi,
+                              use_moe=use_moe)
+    fn = (jax.checkpoint(lambda p, x: layer(p, x=x)) if cfg.remat
+          else (lambda p, x: layer(p, x=x)))
+
+    def body(carry, lp):
+        x = carry
+        x, aux = fn(lp, x)
+        return x, aux
+
+    n = jax.tree.leaves(stack_params)[0].shape[0]
+    x, auxes = jax.lax.scan(body, x, stack_params,
+                            unroll=n if cfg.unroll else 1)
+    return x, jax.tree.map(jnp.sum, auxes)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def lm_backbone(params: dict, cfg: LMConfig, tokens, mesh, mi: MeshInfo):
+    """tokens [B, S] -> hidden [B, S, d] (pre-final-norm aux summed)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = mi.shard(x, mi.dp, "model", None)
+    aux = (jnp.float32(0), jnp.float32(0))
+    if "dense_layers" in params:
+        x, a = _scan_stack(params["dense_layers"], cfg, x, mesh, mi, False)
+        aux = jax.tree.map(jnp.add, aux, a)
+    if "moe_layers" in params:
+        x, a = _scan_stack(params["moe_layers"], cfg, x, mesh, mi, True)
+        aux = jax.tree.map(jnp.add, aux, a)
+    return x, aux
+
+
+def lm_logits(params: dict, cfg: LMConfig, h):
+    h = cm.rms_norm(h, params["final_ln"])
+    return h @ params["unembed"]
+
+
+def _chunked_xent(params, cfg: LMConfig, h, targets, mi: MeshInfo,
+                  project=None):
+    """CE over sequence chunks: the [B, C, V] logits chunk is the only live
+    vocab-sized tensor (full-S logits at 100k+ vocab would dominate HBM)."""
+    if project is None:
+        project = lambda hx: lm_logits(params, cfg, hx)
+    b, s, d = h.shape
+    chunk = cfg.loss_chunk
+    if chunk <= 0 or s <= chunk:
+        return cm.softmax_xent(project(h), targets)
+    pad = (-s) % chunk
+    mask = jnp.ones((b, s), jnp.float32)
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = (s + pad) // chunk
+    hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, n, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def chunk_nll(hx, tx, mx):
+        # remat: backward recomputes this chunk's logits instead of the scan
+        # stacking fp32 softmax residuals for every chunk (§Perf A2)
+        logits = project(hx)
+        logits = mi.shard(logits, mi.dp, None, "model")
+        return cm.softmax_xent(logits, tx, mx) * jnp.sum(mx)
+
+    def body(carry, xt):
+        hx, tx, mx = xt
+        # masked SUM of nll per chunk; normalize by token count at the end
+        return carry + chunk_nll(hx, tx, mx), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0), (hc, tc, mc),
+                          unroll=n if cfg.unroll else 1)
+    return tot / (b * s)
+
+
+def lm_loss(params: dict, cfg: LMConfig, batch: dict, mesh,
+            mi: MeshInfo):
+    """batch: tokens [B, S] int32 (next-token targets derived in-place).
+    Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    h, (aux, dropped) = lm_backbone(params, cfg, tokens, mesh, mi)
+    loss = _chunked_xent(params, cfg, h[:, :-1], tokens[:, 1:], mi)
+    metrics = {"xent": loss, "moe_aux": aux, "moe_dropped": dropped}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_weight * aux
+    if cfg.mtp_depth:
+        mtp_loss = _mtp_loss(params, cfg, tokens, h, mesh, mi)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(params: dict, cfg: LMConfig, tokens, h, mesh, mi: MeshInfo):
+    """DeepSeek-V3 MTP (depth 1): combine hidden t with embedding of token
+    t+1, run one extra block, predict token t+2 with the shared unembed."""
+    p = params["mtp"]
+    b, s, d = h.shape
+    emb_next = jnp.take(params["embed"], tokens[:, 1:], axis=0)
+    hh = cm.rms_norm(h[:, :-1], p["ln_h"])
+    ee = cm.rms_norm(emb_next, p["ln_e"])
+    x = jnp.concatenate([hh, ee], axis=-1) @ p["proj"]
+    x = mi.shard(x, mi.dp, None, None)
+    x, _ = _layer_apply(p["block"], cfg, x, mesh, mi, use_moe=False)
+    x = cm.rms_norm(x, p["final_ln"])
+    # predicts t+2; chunked like the main loss
+    return _chunked_xent(params, cfg, x[:, :-1], tokens[:, 2:], mi,
+                         project=lambda hx: hx @ params["unembed"])
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def _layer_decode(p: dict, cfg: LMConfig, x, cache, pos, mesh, mi: MeshInfo,
+                  use_moe: bool):
+    a = cm.rms_norm(x, p["ln1"])
+    if cfg.attn_type == "mla":
+        y, new_cache = attn.mla_decode(p["attn"], cfg.mla_cfg(), a, cache,
+                                       pos, mi, mesh)
+    else:
+        y, new_cache = attn.gqa_decode(p["attn"], cfg.gqa_cfg(), a, cache,
+                                       pos, mi, mesh)
+    x = x + y
+    h = cm.rms_norm(x, p["ln2"])
+    if use_moe:
+        y, _, _ = moe_mod.moe_apply(p["moe"], cfg.moe, h, mesh, mi,
+                                    token_spec=P(None, None, None))
+    else:
+        y = _ffn_apply(p["ffn"], cfg, h, mi)
+    return x + y, new_cache
+
+
+def lm_decode_step(params: dict, cfg: LMConfig, token, pos, caches: dict,
+                   mesh, mi: MeshInfo):
+    """One-token decode.  token [B] int32; pos [B] int32 current lengths;
+    caches: {'dense': stacked cache pytree [Ld, ...], 'moe': [...]}.
+    Returns (logits [B, V], new caches)."""
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    new_caches = {}
+    for kind, key in (("dense", "dense_layers"), ("moe", "moe_layers")):
+        if key not in params:
+            continue
+        use_moe = kind == "moe"
+
+        def body(carry, scanned, use_moe=use_moe):
+            x = carry
+            lp, cache_l = scanned
+            x, new_cache = _layer_decode(lp, cfg, x, cache_l, pos, mesh, mi,
+                                         use_moe)
+            return x, new_cache
+
+        n = jax.tree.leaves(params[key])[0].shape[0]
+        x, new_caches[kind] = jax.lax.scan(body, x,
+                                           (params[key], caches[kind]),
+                                           unroll=n if cfg.unroll else 1)
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def make_decode_cache_specs(cfg: LMConfig, batch: int, s_max: int,
+                            mi: Optional[MeshInfo] = None):
+    """ShapeDtypeStructs + PartitionSpecs for the decode KV cache (the
+    dry-run's input stand-ins).  Sequence dim sharded over 'model'; batch
+    sharded over the data axes when divisible — leaving batch replicated
+    costs ×|dp| cache memory per device (measured 86 GB/device on
+    qwen3-14b decode_32k, §Perf A7)."""
+    dt = cfg.jdtype
+    n_dense = cfg.n_layers - cfg.n_moe_layers
+    bspec = None
+    if mi is not None and mi.dp and batch % max(mi.axis_size(mi.dp), 1) == 0:
+        bspec = mi.dp
+
+    def gqa_entry(n_layers):
+        shape_kv = (n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+        spec = P(None, bspec, "model", None, None)
+        return ({"k": jax.ShapeDtypeStruct(shape_kv, dt),
+                 "v": jax.ShapeDtypeStruct(shape_kv, dt)},
+                {"k": spec, "v": spec})
+
+    def mla_entry(n_layers):
+        mcfg = cfg.mla_cfg()
+        return ({"ckv": jax.ShapeDtypeStruct(
+                    (n_layers, batch, s_max, mcfg.kv_lora), dt),
+                 "kr": jax.ShapeDtypeStruct(
+                    (n_layers, batch, s_max, mcfg.dh_rope), dt)},
+                {"ckv": P(None, bspec, "model", None),
+                 "kr": P(None, bspec, "model", None)})
+
+    entry = mla_entry if cfg.attn_type == "mla" else gqa_entry
+    shapes, specs = {}, {}
+    if n_dense:
+        shapes["dense"], specs["dense"] = entry(n_dense)
+    if cfg.n_moe_layers:
+        shapes["moe"], specs["moe"] = entry(cfg.n_moe_layers)
+    return shapes, specs

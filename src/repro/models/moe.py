@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN with expert parallelism over the 'model' axis.
+
+The dispatch IS the paper's batch-query protocol (DESIGN.md §4): tokens are
+keys, experts are shards; each device buckets its local tokens by owning
+expert, exchanges them with all_to_all over ICI, answers (runs its local
+experts), and routes results back — the same route→query→merge schedule as
+core/distributed.lookup_a2a_body, with fixed-capacity buffers and explicit
+dropped-token accounting (never silent).
+
+Expert weights: [E, d, f] sharded P('model', fsdp, None) — EP over 'model',
+FSDP over the data axes.  Shared experts (DeepSeek-style) are dense SwiGLU
+computed locally on each token shard (weights replicated over 'model').
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.core.distributed import route_by_owner
+from repro.models import common as cm
+from repro.models.common import Boxed, MeshInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                  # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    n_shared: int = 0          # shared experts (always-on), DeepSeek style
+    shared_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    aux_weight: float = 0.001
+    norm_topk: bool = True     # renormalize top-k gate weights to sum to 1
+
+    @property
+    def shared_ff(self) -> int:
+        return self.shared_d_ff or (self.n_shared * self.d_ff)
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    ks = cm.keygen(key)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    fsdp = ("pod", "data")
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": Boxed(cm.normal_init(next(ks), (d, e), scale, jnp.float32),
+                        P(None, None)),
+        "w_gate": Boxed(cm.normal_init(next(ks), (e, d, f), scale, dtype),
+                        P("model", fsdp, None)),
+        "w_up": Boxed(cm.normal_init(next(ks), (e, d, f), scale, dtype),
+                      P("model", fsdp, None)),
+        "w_down": Boxed(cm.normal_init(next(ks), (e, f, d),
+                                       1.0 / math.sqrt(f), dtype),
+                        P("model", None, fsdp)),
+    }
+    if cfg.n_shared:
+        fs = cfg.shared_ff
+        p["shared"] = {
+            "w_gate": Boxed(cm.normal_init(next(ks), (d, fs), scale, dtype),
+                            P(fsdp, None)),
+            "w_up": Boxed(cm.normal_init(next(ks), (d, fs), scale, dtype),
+                          P(fsdp, None)),
+            "w_down": Boxed(cm.normal_init(next(ks), (fs, d),
+                                           1.0 / math.sqrt(fs), dtype),
+                            P(None, fsdp)),
+        }
+    return p
+
+
+def _swiglu(x, wg, wu, wd):
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def _moe_body(params: dict, x_loc: jnp.ndarray, *, cfg: MoEConfig,
+              n_ep: int, axes: tuple, ep_axis: str):
+    """shard_map body.  x_loc: [t_loc, d] this device's tokens; expert
+    weights arrive as local slices [E_loc, d, f]."""
+    t_loc, d = x_loc.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_loc = e // n_ep
+
+    # ---- route ----
+    logits = (x_loc.astype(jnp.float32) @ params["router"])       # [t, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                          # [t, k]
+    if cfg.norm_topk:
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e, global mean
+    me = jnp.mean(probs, axis=0)                                  # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0 / (t_loc * k))
+    aux_local = e * jnp.sum(me * ce)
+    aux = jax.lax.pmean(aux_local, axes)
+
+    # ---- dispatch (the batch-query fan-out) ----
+    cap = max(int(math.ceil(t_loc * k / e * cfg.capacity_factor)), 1)
+    owner = topi.reshape(-1).astype(jnp.int32)                    # [t*k]
+    r = route_by_owner(owner, e, cap)
+    x_rep = jnp.repeat(x_loc, k, axis=0)                          # [t*k, d]
+    send = jnp.zeros((e, cap, d), x_loc.dtype)
+    send = send.at[r.slot_row, r.slot_col].set(
+        jnp.where(r.kept[:, None], x_rep, 0))
+    dropped = jax.lax.pmean(r.n_dropped.astype(jnp.float32) / (t_loc * k),
+                            axes)
+
+    # [E, cap, d] -> [E_loc, cap * n_ep, d]
+    recv = jax.lax.all_to_all(send, ep_axis, 0, 1, tiled=True)
+
+    # ---- local experts ----
+    h = jnp.einsum("ecd,edf->ecf", recv, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", recv, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["w_down"])
+
+    # ---- route back + combine ----
+    back = jax.lax.all_to_all(y, ep_axis, 1, 0, tiled=True)       # [E,cap,d]
+    per_slot = back[r.slot_row, r.slot_col]                       # [t*k, d]
+    per_slot = jnp.where(r.kept[:, None], per_slot, 0)
+    w = topv.reshape(-1)[:, None].astype(per_slot.dtype)
+    out = jnp.sum((per_slot * w).reshape(t_loc, k, d), axis=1)
+
+    # ---- shared experts (dense, local tokens) ----
+    if cfg.n_shared:
+        s = params["shared"]
+        out = out + _swiglu(x_loc, s["w_gate"], s["w_up"], s["w_down"])
+    return out, aux, dropped
+
+
+def moe_apply(params: dict, cfg: MoEConfig, x: jnp.ndarray, mesh,
+              mi: MeshInfo, token_spec: Optional[P] = None):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar, dropped_frac scalar).
+
+    ``token_spec`` describes how (B, S) is sharded; default: batch over the
+    data axes, sequence over 'model' when divisible (SP), else unsharded."""
+    b, s, d = x.shape
+    ep_axis = "model"
+    n_ep = mi.sizes.get(ep_axis, 1)
+    if token_spec is None:
+        sp_ok = s % max(n_ep, 1) == 0
+        dp_ok = b % max(mi.axis_size(mi.dp), 1) == 0
+        token_spec = P(mi.dp if dp_ok else None,
+                       ep_axis if sp_ok else None, None)
+
+    pspec = {
+        "router": P(None, None),
+        "w_gate": P(ep_axis, None, None),
+        "w_up": P(ep_axis, None, None),
+        "w_down": P(ep_axis, None, None),
+    }
+    if cfg.n_shared:
+        pspec["shared"] = {k: P(None, None) for k in params["shared"]}
+
+    body = functools.partial(_moe_body, cfg=cfg, n_ep=n_ep,
+                             axes=tuple(mi.axes), ep_axis=ep_axis)
+
+    def wrapped(pp, xx):
+        t = xx.reshape(-1, d)
+        y, aux, drop = body(pp, t)
+        return y.reshape(xx.shape), aux, drop
+
+    fn = shard_map(wrapped, mesh=mesh,
+                   in_specs=(pspec, token_spec),
+                   out_specs=(token_spec, P(), P()),
+                   check_vma=False)
+    return fn(params, x)

@@ -1,0 +1,437 @@
+"""Recsys architectures: DIN, BST, TwoTower retrieval, DeepFM.
+
+All four share the substrate the paper serves: big row-sharded embedding
+tables (models/embedding_service.py), EmbeddingBag gather-reduce, small dense
+towers.  Batch layout: everything is [B, ...] with B sharded over the data
+axes; tables sharded over 'model'.
+
+Inputs (data/synthetic.py generates matching batches):
+  DIN     hist_items/hist_cats [B, L] (-1 pad), target_item/target_cat [B],
+          dense [B, n_dense], label [B]
+  BST     same + positions (sequence transformer over hist+target)
+  TwoTower user_id [B], hist_items [B, L], item_id [B], item_cat [B]
+          (in-batch sampled softmax)
+  DeepFM  sparse_ids [B, F] (one id per field), dense [B, 13], label [B]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import common as cm
+from repro.models import embedding_service as es
+from repro.models.common import Boxed, MeshInfo
+
+FSDP = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    arch: str                     # din | bst | two_tower | deepfm
+    embed_dim: int
+    item_vocab: int = 1_000_000
+    cat_vocab: int = 10_000
+    user_vocab: int = 1_000_000
+    seq_len: int = 0              # user-behaviour history length
+    n_dense: int = 13
+    n_sparse_fields: int = 0      # deepfm fields
+    field_vocab: int = 100_000
+    mlp: tuple = ()
+    attn_mlp: tuple = ()          # din
+    n_blocks: int = 1             # bst
+    n_heads: int = 8              # bst
+    tower_mlp: tuple = ()         # two_tower
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def _mlp_init(key, dims: tuple, spec_mid=P(None, None), dtype=jnp.float32,
+              final_bias: bool = True) -> list:
+    ks = cm.keygen(key)
+    layers = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        layers.append({
+            "w": cm.dense_param(next(ks), din, dout, spec_mid, dtype),
+            "b": Boxed(jnp.zeros((dout,), dtype), P(None)),
+        })
+    return layers
+
+
+def _mlp_apply(layers: list, x, act=jax.nn.relu, final_act: bool = False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers) or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# DIN — target attention over user behaviour sequence
+# ---------------------------------------------------------------------------
+def din_init(key, cfg: RecsysConfig) -> dict:
+    ks = cm.keygen(key)
+    d = cfg.embed_dim
+    dt = cfg.jdtype
+    concat_dim = 4 * (2 * d)      # [e, et, e-et, e*et] over item||cat embeds
+    head_in = 2 * d + 2 * d + cfg.n_dense   # pooled + target + dense
+    return {
+        "item_table": es.table_init(next(ks), es.TableCfg(
+            "item", cfg.item_vocab, d), dt),
+        "cat_table": es.table_init(next(ks), es.TableCfg(
+            "cat", cfg.cat_vocab, d), dt),
+        "attn_mlp": _mlp_init(next(ks), (concat_dim,) + cfg.attn_mlp + (1,),
+                              dtype=dt),
+        "mlp": _mlp_init(next(ks), (head_in,) + cfg.mlp + (1,), dtype=dt),
+    }
+
+
+def din_forward(params: dict, cfg: RecsysConfig, batch: dict,
+                mi: MeshInfo) -> jnp.ndarray:
+    it, ct = params["item_table"], params["cat_table"]
+    hist = jnp.concatenate([
+        es.embed_lookup(it, batch["hist_items"], mi),
+        es.embed_lookup(ct, batch["hist_cats"], mi)], axis=-1)   # [B, L, 2d]
+    target = jnp.concatenate([
+        es.embed_lookup(it, batch["target_item"], mi),
+        es.embed_lookup(ct, batch["target_cat"], mi)], axis=-1)  # [B, 2d]
+    tgt = jnp.broadcast_to(target[:, None], hist.shape)
+    feat = jnp.concatenate([hist, tgt, hist - tgt, hist * tgt], axis=-1)
+    score = _mlp_apply(params["attn_mlp"], feat, act=jax.nn.sigmoid)[..., 0]
+    # DIN does NOT softmax-normalize attention weights (paper §4.3);
+    # padded positions are zeroed.
+    valid = (batch["hist_items"] >= 0).astype(score.dtype)
+    pooled = jnp.einsum("bl,bld->bd", score * valid, hist)       # [B, 2d]
+    x = jnp.concatenate([pooled, target, batch["dense"]], axis=-1)
+    return _mlp_apply(params["mlp"], x)[..., 0]                  # logits [B]
+
+
+# ---------------------------------------------------------------------------
+# BST — one transformer block over (history + target) item sequence
+# ---------------------------------------------------------------------------
+def bst_init(key, cfg: RecsysConfig) -> dict:
+    ks = cm.keygen(key)
+    d = cfg.embed_dim
+    dt = cfg.jdtype
+    s = cfg.seq_len + 1
+    head_in = s * d + cfg.n_dense
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "wq": cm.dense_param(next(ks), d, d, P(None, "model"), dt),
+            "wk": cm.dense_param(next(ks), d, d, P(None, "model"), dt),
+            "wv": cm.dense_param(next(ks), d, d, P(None, "model"), dt),
+            "wo": cm.dense_param(next(ks), d, d, P("model", None), dt),
+            "ln1_g": Boxed(jnp.ones((d,), dt), P(None)),
+            "ln1_b": Boxed(jnp.zeros((d,), dt), P(None)),
+            "ffn1": cm.dense_param(next(ks), d, 4 * d, P(None, "model"), dt),
+            "ffn2": cm.dense_param(next(ks), 4 * d, d, P("model", None), dt),
+            "ln2_g": Boxed(jnp.ones((d,), dt), P(None)),
+            "ln2_b": Boxed(jnp.zeros((d,), dt), P(None)),
+        })
+    return {
+        "item_table": es.table_init(next(ks), es.TableCfg(
+            "item", cfg.item_vocab, d), dt),
+        "pos_table": Boxed(cm.normal_init(next(ks), (s, d), 0.02, dt),
+                           P(None, None)),
+        "blocks": blocks,
+        "mlp": _mlp_init(next(ks), (head_in,) + cfg.mlp + (1,), dtype=dt),
+    }
+
+
+def _bst_block(p: dict, x, n_heads: int, mask):
+    b, s, d = x.shape
+    dh = d // n_heads
+    q = (x @ p["wq"]).reshape(b, s, n_heads, dh)
+    k = (x @ p["wk"]).reshape(b, s, n_heads, dh)
+    v = (x @ p["wv"]).reshape(b, s, n_heads, dh)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+    a = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, s, d)
+    x = cm.layer_norm(x + o @ p["wo"], p["ln1_g"], p["ln1_b"])
+    h = jax.nn.relu(x @ p["ffn1"]) @ p["ffn2"]
+    return cm.layer_norm(x + h, p["ln2_g"], p["ln2_b"])
+
+
+def bst_forward(params: dict, cfg: RecsysConfig, batch: dict,
+                mi: MeshInfo) -> jnp.ndarray:
+    it = params["item_table"]
+    seq_ids = jnp.concatenate(
+        [batch["hist_items"], batch["target_item"][:, None]], axis=1)
+    x = es.embed_lookup(it, seq_ids, mi) + params["pos_table"][None]
+    mask = seq_ids >= 0
+    for blk in params["blocks"]:
+        x = _bst_block(blk, x, cfg.n_heads, mask)
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    x = jnp.concatenate([flat, batch["dense"]], axis=-1)
+    return _mlp_apply(params["mlp"], x)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# TwoTower — retrieval with in-batch sampled softmax
+# ---------------------------------------------------------------------------
+def two_tower_init(key, cfg: RecsysConfig) -> dict:
+    ks = cm.keygen(key)
+    d = cfg.embed_dim
+    dt = cfg.jdtype
+    user_in = 2 * d + cfg.n_dense
+    item_in = 2 * d
+    return {
+        "user_table": es.table_init(next(ks), es.TableCfg(
+            "user", cfg.user_vocab, d), dt),
+        "item_table": es.table_init(next(ks), es.TableCfg(
+            "item", cfg.item_vocab, d), dt),
+        "cat_table": es.table_init(next(ks), es.TableCfg(
+            "cat", cfg.cat_vocab, d), dt),
+        "user_mlp": _mlp_init(next(ks), (user_in,) + cfg.tower_mlp, dtype=dt),
+        "item_mlp": _mlp_init(next(ks), (item_in,) + cfg.tower_mlp, dtype=dt),
+    }
+
+
+def user_tower(params: dict, cfg: RecsysConfig, batch: dict,
+               mi: MeshInfo, mesh=None, lookup_impl: str = "xla"
+               ) -> jnp.ndarray:
+    if lookup_impl == "a2a":
+        # the paper's routed batch query as the serving lookup (§Perf C1)
+        u = es.embed_lookup_a2a(params["user_table"], batch["user_id"],
+                                mesh, mi)
+        rows = es.embed_lookup_a2a(params["item_table"],
+                                   batch["hist_items"], mesh, mi)
+        valid = (batch["hist_items"] >= 0).astype(rows.dtype)
+        hist = (rows * valid[..., None]).sum(1) / \
+            jnp.maximum(valid.sum(1)[:, None], 1.0)
+    elif lookup_impl == "psum16":
+        # shard-local partial bag reduce + bf16 psum (§Perf C2)
+        u = es.embed_lookup_a2a(params["user_table"], batch["user_id"],
+                                mesh, mi)
+        hist = es.embed_bag_psum(params["item_table"], batch["hist_items"],
+                                 "mean", mesh, mi)
+    else:
+        u = es.embed_lookup(params["user_table"], batch["user_id"], mi)
+        hist = es.embed_bag(params["item_table"], batch["hist_items"], None,
+                            "mean", mi)
+    x = jnp.concatenate([u, hist, batch["dense"]], axis=-1)
+    v = _mlp_apply(params["user_mlp"], x)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def item_tower(params: dict, cfg: RecsysConfig, item_id, item_cat,
+               mi: MeshInfo) -> jnp.ndarray:
+    e = jnp.concatenate([
+        es.embed_lookup(params["item_table"], item_id, mi),
+        es.embed_lookup(params["cat_table"], item_cat, mi)], axis=-1)
+    v = _mlp_apply(params["item_mlp"], e)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_loss(params: dict, cfg: RecsysConfig, batch: dict,
+                   mi: MeshInfo):
+    """In-batch sampled softmax with logQ correction (Yi et al., RecSys'19)."""
+    u = user_tower(params, cfg, batch, mi)                     # [B, D]
+    i = item_tower(params, cfg, batch["item_id"], batch["item_cat"], mi)
+    logits = (u @ i.T) / 0.05                                  # temperature
+    if "logq" in batch:                                        # popularity
+        logits = logits - batch["logq"][None, :]
+    labels = jnp.arange(u.shape[0])
+    return cm.softmax_xent(logits, labels)
+
+
+def retrieval_scores(params: dict, cfg: RecsysConfig, batch: dict,
+                     cand_ids, cand_cats, mi: MeshInfo, top_k: int = 100):
+    """1 query (or few) against n_candidates: batched dot, then top-k —
+    never a python loop over candidates."""
+    u = user_tower(params, cfg, batch, mi)                     # [B, D]
+    c = item_tower(params, cfg, cand_ids, cand_cats, mi)       # [N, D]
+    c = mi.shard(c, "model", None)
+    scores = u @ c.T                                           # [B, N]
+    return jax.lax.top_k(scores, top_k)
+
+
+# ---------------------------------------------------------------------------
+# DeepFM — FM branch (fused kernel) + deep MLP, shared embeddings
+# ---------------------------------------------------------------------------
+def deepfm_init(key, cfg: RecsysConfig) -> dict:
+    ks = cm.keygen(key)
+    d, f = cfg.embed_dim, cfg.n_sparse_fields
+    dt = cfg.jdtype
+    deep_in = f * d + cfg.n_dense
+    return {
+        # one big hash-shared table for all fields (industry practice); the
+        # per-field offset keeps fields disjoint.
+        "field_table": es.table_init(next(ks), es.TableCfg(
+            "fields", cfg.field_vocab * f, d), dt),
+        "w1_table": es.table_init(next(ks), es.TableCfg(
+            "fields_w1", cfg.field_vocab * f, 1), dt),
+        "dense_w1": cm.dense_param(next(ks), cfg.n_dense, 1, P(None, None),
+                                   dt),
+        "mlp": _mlp_init(next(ks), (deep_in,) + cfg.mlp + (1,), dtype=dt),
+        "bias": Boxed(jnp.zeros((), dt), P()),
+    }
+
+
+def deepfm_forward(params: dict, cfg: RecsysConfig, batch: dict,
+                   mi: MeshInfo) -> jnp.ndarray:
+    f = cfg.n_sparse_fields
+    ids = batch["sparse_ids"]                                  # [B, F]
+    offset = jnp.arange(f, dtype=ids.dtype) * cfg.field_vocab
+    flat_ids = ids + offset[None, :]
+    emb = es.embed_lookup(params["field_table"], flat_ids, mi)  # [B, F, D]
+    # FM second-order (fused Pallas kernel on TPU, oracle elsewhere)
+    fm2 = kops.fm_interaction(emb)                              # [B]
+    w1 = es.embed_lookup(params["w1_table"], flat_ids, mi)[..., 0].sum(-1)
+    dense1 = (batch["dense"] @ params["dense_w1"])[..., 0]
+    deep_in = jnp.concatenate(
+        [emb.reshape(emb.shape[0], -1), batch["dense"]], axis=-1)
+    deep = _mlp_apply(params["mlp"], deep_in)[..., 0]
+    return params["bias"] + w1 + dense1 + fm2.astype(deep.dtype) + deep
+
+
+# ---------------------------------------------------------------------------
+# sparse-embedding training path (§Perf B1)
+#
+# Differentiating through jnp.take gives a DENSE [V, D] cotangent per table —
+# at 10⁸ rows that is tens of GB of pure-zero traffic per step, swamping the
+# memory roofline term.  The sparse path gathers rows first, differentiates
+# w.r.t. the gathered rows only, and scatter-applies row-wise Adagrad to the
+# touched rows (exactly what the paper's Update Subsystem publishes).
+# ---------------------------------------------------------------------------
+def table_ids(cfg: RecsysConfig, batch: dict) -> dict:
+    """-> {row_key: (table_name, ids array)} per arch."""
+    if cfg.arch == "din":
+        return {
+            "hist_items": ("item_table", batch["hist_items"]),
+            "target_item": ("item_table", batch["target_item"]),
+            "hist_cats": ("cat_table", batch["hist_cats"]),
+            "target_cat": ("cat_table", batch["target_cat"]),
+        }
+    if cfg.arch == "bst":
+        seq_ids = jnp.concatenate(
+            [batch["hist_items"], batch["target_item"][:, None]], axis=1)
+        return {"seq_ids": ("item_table", seq_ids)}
+    if cfg.arch == "two_tower":
+        return {
+            "user_id": ("user_table", batch["user_id"]),
+            "hist_items": ("item_table", batch["hist_items"]),
+            "item_id": ("item_table", batch["item_id"]),
+            "item_cat": ("cat_table", batch["item_cat"]),
+        }
+    if cfg.arch == "deepfm":
+        offset = jnp.arange(cfg.n_sparse_fields,
+                            dtype=batch["sparse_ids"].dtype) * cfg.field_vocab
+        flat = batch["sparse_ids"] + offset[None, :]
+        return {"field_rows": ("field_table", flat),
+                "w1_table": ("w1_table", flat)}
+    raise ValueError(cfg.arch)
+
+
+def gather_rows(params: dict, cfg: RecsysConfig, batch: dict,
+                mi: MeshInfo) -> dict:
+    return {k: es.embed_lookup(params[t], ids, mi)
+            for k, (t, ids) in table_ids(cfg, batch).items()}
+
+
+def _din_forward_rows(params, cfg, batch, rows, mi):
+    hist = jnp.concatenate([rows["hist_items"], rows["hist_cats"]], axis=-1)
+    target = jnp.concatenate([rows["target_item"], rows["target_cat"]],
+                             axis=-1)
+    tgt = jnp.broadcast_to(target[:, None], hist.shape)
+    feat = jnp.concatenate([hist, tgt, hist - tgt, hist * tgt], axis=-1)
+    score = _mlp_apply(params["attn_mlp"], feat, act=jax.nn.sigmoid)[..., 0]
+    valid = (batch["hist_items"] >= 0).astype(score.dtype)
+    pooled = jnp.einsum("bl,bld->bd", score * valid, hist)
+    x = jnp.concatenate([pooled, target, batch["dense"]], axis=-1)
+    return _mlp_apply(params["mlp"], x)[..., 0]
+
+
+def _bst_forward_rows(params, cfg, batch, rows, mi):
+    seq_ids = jnp.concatenate(
+        [batch["hist_items"], batch["target_item"][:, None]], axis=1)
+    x = rows["seq_ids"] + params["pos_table"][None]
+    mask = seq_ids >= 0
+    for blk in params["blocks"]:
+        x = _bst_block(blk, x, cfg.n_heads, mask)
+    flat = x.reshape(x.shape[0], -1)
+    x = jnp.concatenate([flat, batch["dense"]], axis=-1)
+    return _mlp_apply(params["mlp"], x)[..., 0]
+
+
+def _two_tower_loss_rows(params, cfg, batch, rows, mi):
+    valid = (batch["hist_items"] >= 0).astype(rows["hist_items"].dtype)
+    hist = (rows["hist_items"] * valid[..., None]).sum(1) / \
+        jnp.maximum(valid.sum(1)[:, None], 1.0)
+    xu = jnp.concatenate([rows["user_id"], hist, batch["dense"]], axis=-1)
+    u = _mlp_apply(params["user_mlp"], xu)
+    u = u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+    xi = jnp.concatenate([rows["item_id"], rows["item_cat"]], axis=-1)
+    i = _mlp_apply(params["item_mlp"], xi)
+    i = i / jnp.maximum(jnp.linalg.norm(i, axis=-1, keepdims=True), 1e-6)
+    logits = mi.shard((u @ i.T) / 0.05, mi.dp, "model")
+    return cm.softmax_xent(logits, jnp.arange(u.shape[0]))
+
+
+def _deepfm_forward_rows(params, cfg, batch, rows, mi):
+    from repro.kernels import ops as kops
+    emb = rows["field_rows"]
+    fm2 = kops.fm_interaction(emb)
+    w1 = rows["w1_table"][..., 0].sum(-1)
+    dense1 = (batch["dense"] @ params["dense_w1"])[..., 0]
+    deep_in = jnp.concatenate(
+        [emb.reshape(emb.shape[0], -1), batch["dense"]], axis=-1)
+    deep = _mlp_apply(params["mlp"], deep_in)[..., 0]
+    return params["bias"] + w1 + dense1 + fm2.astype(deep.dtype) + deep
+
+
+FORWARD_ROWS = {"din": _din_forward_rows, "bst": _bst_forward_rows,
+                "deepfm": _deepfm_forward_rows}
+
+
+def recsys_loss_rows(params_dense: dict, cfg: RecsysConfig, batch: dict,
+                     rows: dict, mi: MeshInfo):
+    if cfg.arch == "two_tower":
+        loss = _two_tower_loss_rows(params_dense, cfg, batch, rows, mi)
+        return loss, {"loss": loss}
+    logits = FORWARD_ROWS[cfg.arch](params_dense, cfg, batch, rows, mi)
+    loss = cm.bce_with_logits(logits, batch["label"])
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# shared entry points
+# ---------------------------------------------------------------------------
+FORWARD = {"din": din_forward, "bst": bst_forward, "deepfm": deepfm_forward}
+
+
+def recsys_init(key, cfg: RecsysConfig) -> dict:
+    return {"din": din_init, "bst": bst_init, "two_tower": two_tower_init,
+            "deepfm": deepfm_init}[cfg.arch](key, cfg)
+
+
+def recsys_loss(params: dict, cfg: RecsysConfig, batch: dict, mi: MeshInfo):
+    if cfg.arch == "two_tower":
+        loss = two_tower_loss(params, cfg, batch, mi)
+        return loss, {"loss": loss}
+    logits = FORWARD[cfg.arch](params, cfg, batch, mi)
+    loss = cm.bce_with_logits(logits, batch["label"])
+    return loss, {"loss": loss}
+
+
+def recsys_score(params: dict, cfg: RecsysConfig, batch: dict, mi: MeshInfo,
+                 mesh=None, lookup_impl: str = "xla"):
+    """Serving: CTR probability (pointwise archs) — the paper's T4 workload."""
+    if cfg.arch == "two_tower":
+        return user_tower(params, cfg, batch, mi, mesh, lookup_impl)
+    return jax.nn.sigmoid(FORWARD[cfg.arch](params, cfg, batch, mi))

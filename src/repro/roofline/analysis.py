@@ -1,0 +1,241 @@
+"""Roofline terms from compiled dry-run artifacts (no hardware required).
+
+    compute    = HLO_FLOPs_global   / (chips × 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes_global   / (chips × 819e9   B/s HBM)
+    collective = collective_bytes   / (chips × 50e9    B/s per ICI link)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+HLO properties (verified empirically in tests/test_roofline.py) — we scale by
+device count for the global figure, then divide back for per-chip seconds, so
+the two conventions can't be silently mixed.
+
+Collective bytes are not in cost_analysis: ``collective_bytes`` parses the
+post-optimization HLO and sums shaped operand bytes of all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e constants (per chip / per link), per the assignment.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_KIND_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(compiled) -> dict:
+    """Sum result-shape bytes per collective kind from post-SPMD HLO.
+    (Result shape ≈ operand shape for AR/A2A/CP; for AG it's the gathered
+    output, for RS the reduced shard — i.e. bytes that actually cross links,
+    up to the ring-algorithm factor.)"""
+    try:
+        txt = compiled.as_text()
+    except Exception:
+        return {}
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in txt.splitlines():
+        m = _COLL_KIND_RE.search(line)
+        if not m:
+            continue
+        kind, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue        # counted at -start
+        # result shapes live on the lhs of the op name (tuple results with
+        # /*index=N*/ comments included)
+        b = _shape_bytes(line[: m.start()])
+        out[kind] = out.get(kind, 0.0) + b
+        counts[kind + "_ops"] = counts.get(kind + "_ops", 0) + 1
+    out["total"] = sum(v for k, v in out.items() if not k.endswith("_ops"))
+    out.update(counts)
+    return out
+
+
+def memory_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_global: float
+    bytes_global: float
+    coll_bytes_global: float
+    model_flops: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if self.model_flops and self.flops_global:
+            return self.model_flops / self.flops_global
+        return None
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """(useful work at peak) / (bound time): the score we hillclimb."""
+        if not self.model_flops:
+            return None
+        ideal = self.compute_s * (self.useful_flops_ratio or 0)
+        return ideal / self.bound_time_s if self.bound_time_s else None
+
+
+def from_record(rec: dict, model_flops: Optional[float] = None) -> Roofline:
+    """rec: one dryrun JSON record.  cost_analysis is per-device (see module
+    docstring); collective bytes parsed from the partitioned module are also
+    per-device."""
+    n = rec["n_devices"]
+    flops_dev = rec["cost"].get("flops", 0.0)
+    bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+    coll_dev = rec.get("collectives", {}).get("total", 0.0)
+    return Roofline(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=coll_dev / ICI_BW,
+        flops_global=flops_dev * n,
+        bytes_global=bytes_dev * n,
+        coll_bytes_global=coll_dev * n,
+        model_flops=model_flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); serving analogues.
+# ---------------------------------------------------------------------------
+def lm_param_counts(cfg) -> dict:
+    """Analytic parameter counts for an LMConfig."""
+    d = cfg.d_model
+    if cfg.attn_type == "mla":
+        m = cfg.mla_cfg()
+        attn = (d * m.q_lora + m.q_lora * cfg.n_heads *
+                (m.dh_nope + m.dh_rope) + d * m.kv_lora
+                + m.kv_lora * cfg.n_heads * (m.dh_nope + m.dv)
+                + d * m.dh_rope + cfg.n_heads * m.dv * d)
+    else:
+        attn = d * cfg.n_heads * cfg.head_dim \
+            + 2 * d * cfg.n_kv_heads * cfg.head_dim \
+            + cfg.n_heads * cfg.head_dim * d
+    if cfg.ffn_type == "swiglu":
+        ffn_dense = 3 * d * cfg.d_ff
+    else:
+        ffn_dense = 2 * d * cfg.d_ff
+    n_dense = cfg.n_layers - cfg.n_moe_layers
+    total = cfg.vocab * d * 2                      # embed + unembed
+    active = cfg.vocab * d * 2
+    total += cfg.n_layers * attn
+    active += cfg.n_layers * attn
+    total += n_dense * ffn_dense
+    active += n_dense * ffn_dense
+    if cfg.moe is not None:
+        mc = cfg.moe
+        per_expert = 3 * d * mc.d_ff
+        shared = 3 * d * mc.shared_ff if mc.n_shared else 0
+        total += cfg.n_moe_layers * (mc.n_experts * per_expert + shared
+                                     + d * mc.n_experts)
+        active += cfg.n_moe_layers * (mc.top_k * per_expert + shared
+                                      + d * mc.n_experts)
+    return {"total": total, "active": active}
+
+
+def model_flops_for(family: str, cfg, cell, mode_meta: dict) -> float:
+    """Useful-work FLOPs for the cell (forward+backward for train: 6·N·D;
+    forward only for serving: 2·N·D; + attention O(S²)/O(S·KV) terms)."""
+    if family == "lm":
+        counts = lm_param_counts(cfg)
+        n_active = counts["active"]
+        b = cell.dims["batch"]
+        s = cell.dims["seq"]
+        if cell.kind == "train":
+            flops = 6.0 * n_active * b * s
+            # causal attention score+value FLOPs (fwd 2·2·(S²/2)·d·H, ×3 bwd)
+            attn_dim = cfg.n_heads * cfg.head_dim if cfg.attn_type == "gqa" \
+                else cfg.n_heads * (cfg.mla_cfg().dh_nope
+                                    + cfg.mla_cfg().dh_rope)
+            flops += 6.0 * cfg.n_layers * b * s * s * attn_dim
+            return flops
+        if cell.kind == "prefill":
+            attn_dim = cfg.n_heads * cfg.head_dim if cfg.attn_type == "gqa" \
+                else cfg.n_heads * (cfg.mla_cfg().dh_nope
+                                    + cfg.mla_cfg().dh_rope)
+            return 2.0 * n_active * b * s + 2.0 * cfg.n_layers * b * s * s \
+                * attn_dim
+        # decode: one token against a KV cache of length s
+        attn_dim = cfg.n_heads * cfg.head_dim if cfg.attn_type == "gqa" \
+            else cfg.n_heads * cfg.mla_cfg().kv_lora  # absorbed form
+        return 2.0 * n_active * b + 4.0 * cfg.n_layers * b * s * attn_dim
+    if family == "gnn":
+        d = cell.dims
+        h = cfg.d_hidden
+        if cell.kind == "gnn_full":
+            f = d["d_feat"]
+            per_layer = 2.0 * d["n_nodes"] * (f * h + h * h) \
+                + 2.0 * d["n_edges"] * f
+            return 6.0 * per_layer                        # fwd+bwd approx ×3
+        if cell.kind == "gnn_minibatch":
+            b = d["batch_nodes"]
+            f1, f2 = d["fanouts"]
+            f = d["d_feat"]
+            gathers = b * (1 + f1 + f1 * f2)
+            return 6.0 * gathers * 2 * f * h
+        b = d["n_graphs"]
+        return 6.0 * b * d["n_nodes"] * 2 * d["d_feat"] * h
+    # recsys: embedding gather bytes dominate; dense FLOPs = MLPs
+    b = cell.dims.get("batch", 1)
+    if cell.kind == "rec_retrieval":
+        b = cell.dims["n_candidates"]
+    dims = (getattr(cfg, "mlp", ()) or ()) + (getattr(cfg, "tower_mlp", ())
+                                              or ())
+    mlp_flops = 0.0
+    prev = None
+    for w in dims:
+        if prev:
+            mlp_flops += 2.0 * prev * w
+        prev = w
+    mlp_flops = max(mlp_flops, 2.0 * 64 * 64)
+    factor = 6.0 if cell.kind == "rec_train" else 2.0
+    return factor * b * mlp_flops * 4     # ×4: embeds+interactions, coarse

@@ -1,0 +1,153 @@
+"""Render §Dry-run + §Roofline tables from artifacts/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report [--dir artifacts/dryrun]
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import registry
+from repro.roofline import analysis
+
+
+def effective_record(rec: dict) -> dict:
+    """Substitute layer-fitted totals (exact scan accounting) when present."""
+    out = dict(rec)
+    lf = rec.get("layer_fit")
+    if lf:
+        cost = dict(rec["cost"])
+        cost["flops"] = lf["flops"]
+        cost["bytes accessed"] = lf["bytes accessed"]
+        out["cost"] = cost
+        coll = dict(rec.get("collectives", {}))
+        coll["total"] = lf["collective_total"]
+        out["collectives"] = coll
+    return out
+
+
+def load_records(d: str, mesh: str = "pod1", variant: str = "baseline"
+                 ) -> dict:
+    recs = {}
+    for p in glob.glob(os.path.join(d, f"*__{mesh}*.json")):
+        r = json.load(open(p))
+        if r.get("variant", "baseline") != variant:
+            continue
+        if not p.endswith(f"__{mesh}.json") and variant == "baseline":
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def roofline_for(rec: dict):
+    spec = registry.get(rec["arch"])
+    cell = registry.cell_by_name(spec, rec["shape"])
+    mf = analysis.model_flops_for(spec.family, spec.config, cell, rec["meta"])
+    return analysis.from_record(effective_record(rec), model_flops=mf)
+
+
+def note_for(rec: dict, r) -> str:
+    if r.dominant == "collective":
+        return "cut cross-shard traffic (resharding/overlap)"
+    if r.dominant == "memory":
+        return "raise arithmetic intensity (fuse/requantize/cache)"
+    if (r.useful_flops_ratio or 1) < 0.5:
+        return "compute-bound but wasteful: remove remat/dispatch overhead"
+    return "compute-bound: kernel efficiency / larger per-chip batch"
+
+
+def compare(base_dir: str, opt_dir: str):
+    """Baseline-vs-optimized bound-time table (§Perf summary)."""
+    base = load_records(base_dir, "pod1")
+    new = load_records(opt_dir, "pod1")
+    print("\n### §Perf — baseline vs optimized (bound time per step, "
+          "single pod)\n")
+    print("| arch | shape | baseline bound s (term) | optimized bound s "
+          "(term) | speedup |")
+    print("|---|---|---|---|---|")
+    gains = []
+    for key in sorted(base):
+        if key not in new or not base[key]["ok"] or not new[key]["ok"]:
+            continue
+        rb = roofline_for(base[key])
+        rn = roofline_for(new[key])
+        sp = rb.bound_time_s / max(rn.bound_time_s, 1e-12)
+        gains.append(sp)
+        print(f"| {key[0]} | {key[1]} | {rb.bound_time_s:.4g} "
+              f"({rb.dominant}) | {rn.bound_time_s:.4g} ({rn.dominant}) | "
+              f"×{sp:.2f} |")
+    if gains:
+        import math
+        geo = math.exp(sum(math.log(g) for g in gains) / len(gains))
+        print(f"\nGeomean speedup across {len(gains)} cells: ×{geo:.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--compare-baseline", default=None,
+                    help="baseline artifacts dir for the §Perf table")
+    args = ap.parse_args()
+    if args.compare_baseline:
+        compare(args.compare_baseline, args.dir)
+        return
+
+    recs1 = load_records(args.dir, "pod1", args.variant)
+    recs2 = load_records(args.dir, "pod2", args.variant)
+
+    print("### §Dry-run — compile results (16x16=256 chips and 2x16x16=512 "
+          "chips)\n")
+    print("| arch | shape | pod1 | pod2 | bytes/device (args+temp) | "
+          "compile s |")
+    print("|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(recs1.items()):
+        r2 = recs2.get((arch, shape), {})
+        mem = r["memory"]
+        gb = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) / 1e9
+        print(f"| {arch} | {shape} | {'OK' if r['ok'] else 'FAIL'} | "
+              f"{'OK' if r2.get('ok') else 'FAIL'} | {gb:.2f} GB | "
+              f"{r.get('compile_s', 0):.0f} |")
+
+    print("\n### §Roofline — per (arch × shape), single pod (256 chips), "
+          "v5e constants\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for (arch, shape), rec in sorted(recs1.items()):
+        if not rec["ok"]:
+            continue
+        r = roofline_for(rec)
+        ratio = r.useful_flops_ratio
+        frac = r.roofline_fraction
+        rows.append(((arch, shape), r))
+        print(f"| {arch} | {shape} | {r.compute_s:.4g} | {r.memory_s:.4g} | "
+              f"{r.collective_s:.4g} | **{r.dominant}** | "
+              f"{ratio:.2f} | {frac:.3f} |" if ratio is not None else
+              f"| {arch} | {shape} | {r.compute_s:.4g} | {r.memory_s:.4g} | "
+              f"{r.collective_s:.4g} | **{r.dominant}** | n/a | n/a |")
+
+    print("\n#### Bottleneck notes (what would move the dominant term)\n")
+    for (arch, shape), r in rows:
+        print(f"- **{arch} × {shape}** ({r.dominant}-bound, "
+              f"frac={r.roofline_fraction or 0:.3f}): {note_for(None, r)}")
+
+    # hillclimb candidates
+    scored = [(r.roofline_fraction or 0, k, r) for k, r in rows]
+    scored.sort()
+    coll = [(r.collective_s / max(r.bound_time_s, 1e-12), k, r)
+            for k, r in rows]
+    coll.sort(reverse=True)
+    print("\n#### Hillclimb candidates")
+    print(f"- worst roofline fraction: {scored[0][1]} "
+          f"(frac={scored[0][0]:.4f})")
+    print(f"- most collective-bound: {coll[0][1]} "
+          f"(coll share={coll[0][0]:.2f})")
+
+
+if __name__ == "__main__":
+    main()

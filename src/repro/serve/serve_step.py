@@ -1,0 +1,50 @@
+"""Serving entry points per family — what `decode_*` / `serve_*` /
+`retrieval_*` shape cells lower."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import lm as lm_mod
+from repro.models import recsys as rec_mod
+
+
+def lm_decode_fn(cfg, mesh, mi):
+    def step(params, token, pos, caches):
+        return lm_mod.lm_decode_step(params, cfg, token, pos, caches, mesh,
+                                     mi)
+    return step
+
+
+def lm_prefill_fn(cfg, mesh, mi):
+    def step(params, tokens):
+        h, _ = lm_mod.lm_backbone(params, cfg, tokens, mesh, mi)
+        logits_last = lm_mod.lm_logits(params, cfg, h[:, -1:])[:, 0]
+        return logits_last
+    return step
+
+
+def recsys_score_fn(cfg, mesh, mi, lookup_impl: str = "xla"):
+    def step(params, batch):
+        return rec_mod.recsys_score(params, cfg, batch, mi, mesh,
+                                    lookup_impl)
+    return step
+
+
+def retrieval_fn(cfg, mesh, mi, top_k: int = 100):
+    def step(params, batch, cand_ids, cand_cats):
+        return rec_mod.retrieval_scores(params, cfg, batch, cand_ids,
+                                        cand_cats, mi, top_k)
+    return step
+
+
+def bulk_rank_fn(cfg, mesh, mi, top_k: int = 100):
+    """retrieval_cand for pointwise archs: score 1M candidate items for one
+    user by broadcasting the user context over the candidate batch."""
+    fwd = rec_mod.FORWARD[cfg.arch]
+
+    def step(params, batch):
+        logits = fwd(params, cfg, batch, mi)
+        return jax.lax.top_k(logits, top_k)
+    return step

@@ -1,0 +1,141 @@
+"""Per-family train steps: loss -> grad -> clipped sharded update.
+
+A train step is a pure function (params, opt_state, step, batch) ->
+(params', opt_state', step+1, metrics); the dry-run lowers exactly this
+function, so the roofline terms include backward pass and optimizer."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt
+from repro.models import common as cm
+from repro.models import lm as lm_mod
+from repro.models import recsys as rec_mod
+from repro.models import gnn as gnn_mod
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: opt.OptConfig,
+                    accum_steps: int = 1):
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    ``accum_steps`` > 1 splits the batch into microbatches scanned with
+    gradient accumulation — activation memory scales with the microbatch
+    while optimizer/collective cost is unchanged (the standard way to fit
+    a big global batch per device; §Perf B2)."""
+
+    def train_step(params, opt_state, step, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(body, (g0, jnp.float32(0)),
+                                             micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_state, gnorm = opt.apply_updates(
+            params, grads, opt_state, opt_cfg, step + 1)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss"] = loss
+        return new_params, new_state, step + 1, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# sparse-embedding train step (recsys; §Perf B1)
+#
+# Dense autodiff through jnp.take produces full [V, D] cotangents per table —
+# tens of GB of zeros per step at 10⁸ rows.  Here: gather rows -> grad w.r.t.
+# the gathered rows only -> scatter row-wise-Adagrad into the touched rows.
+# (Duplicate ids within a batch scatter-accumulate into the same Adagrad row;
+# matches TF/IndexedSlices semantics up to per-occurrence accumulator order.)
+# ---------------------------------------------------------------------------
+def make_sparse_recsys_train_step(cfg, mesh, mi, opt_cfg: opt.OptConfig):
+    from repro.models import recsys as rec
+
+    def train_step(params, opt_state, step, batch):
+        ids_map = rec.table_ids(cfg, batch)
+        table_names = sorted({t for t, _ in ids_map.values()})
+        dense = {k: v for k, v in params.items() if k not in table_names}
+        rows = {k: jnp.take(params[t], jnp.maximum(ids, 0), axis=0)
+                * (ids >= 0).astype(params[t].dtype)[..., None]
+                for k, (t, ids) in ids_map.items()}
+
+        def loss_on(dense_p, rows_p):
+            merged = dict(dense_p)
+            for t in table_names:       # forward uses rows, not tables
+                merged[t] = params[t]
+            return rec.recsys_loss_rows(merged, cfg, batch, rows_p, mi)
+
+        (loss, metrics), (g_dense, g_rows) = jax.value_and_grad(
+            loss_on, argnums=(0, 1), has_aux=True)(dense, rows)
+
+        new_dense, new_dense_state, gnorm = opt.apply_updates(
+            dense, g_dense, {k: opt_state[k] for k in dense},
+            opt_cfg, step + 1)
+
+        new_params = dict(new_dense)
+        new_state = dict(new_dense_state)
+        for t in table_names:
+            table = params[t]
+            acc = opt_state[t]["acc"]
+            for k, (tname, ids) in ids_map.items():
+                if tname != t:
+                    continue
+                g = g_rows[k].astype(jnp.float32)
+                flat_ids = jnp.maximum(ids.reshape(-1), 0)
+                valid = (ids.reshape(-1) >= 0).astype(jnp.float32)
+                gf = g.reshape(-1, g.shape[-1]) * valid[:, None]
+                row_sq = jnp.mean(gf * gf, axis=-1)
+                acc = acc.at[flat_ids].add(row_sq)
+                scale = opt_cfg.lr / (jnp.sqrt(
+                    jnp.take(acc, flat_ids)) + opt_cfg.eps)
+                table = table.at[flat_ids].add(
+                    (-scale[:, None] * gf).astype(table.dtype))
+            new_params[t] = table
+            new_state[t] = {"acc": acc}
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return new_params, new_state, step + 1, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# family loss adapters
+# ---------------------------------------------------------------------------
+def lm_loss_fn(cfg, mesh, mi):
+    def fn(params, batch):
+        return lm_mod.lm_loss(params, cfg, batch, mesh, mi)
+    return fn
+
+
+def recsys_loss_fn(cfg, mesh, mi):
+    def fn(params, batch):
+        return rec_mod.recsys_loss(params, cfg, batch, mi)
+    return fn
+
+
+def gnn_loss_fn(cfg, mesh, mi, regime: str):
+    def fn(params, batch):
+        return gnn_mod.gnn_loss(params, cfg, batch, mi, regime)
+    return fn

@@ -1,0 +1,78 @@
+"""Bit-exactness of the three hash implementations + value packing."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashcore as hc
+
+u32 = st.integers(0, 2**32 - 1)
+u64 = st.integers(0, 2**64 - 2)     # EMPTY_KEY excluded
+payload52 = st.integers(0, hc.PAYLOAD_MASK)
+offset12 = st.integers(hc.OFFSET_MIN, hc.OFFSET_MAX).filter(lambda x: x != 0)
+
+
+@given(u32)
+@settings(max_examples=200, deadline=None)
+def test_mix32_three_ways_bit_exact(h):
+    a = hc.mix32_int(h)
+    b = int(hc.mix32_np(np.array([h], dtype=np.uint32))[0])
+    c = int(hc.mix32_jnp(jnp.asarray([h], jnp.uint32))[0])
+    assert a == b == c
+
+
+@given(u64, st.integers(8, 10_000))
+@settings(max_examples=100, deadline=None)
+def test_bucket_three_ways(key, cap):
+    hi, lo = hc.key_split_int(key)
+    a = hc.bucket_of_int(hi, lo, cap)
+    b = int(hc.bucket_of_np(np.array([hi], np.uint32),
+                            np.array([lo], np.uint32), cap)[0])
+    c = int(hc.bucket_of_jnp(jnp.asarray([hi], jnp.uint32),
+                             jnp.asarray([lo], jnp.uint32), cap)[0])
+    assert a == b == c
+    assert 0 <= a < cap
+
+
+@given(offset12)
+@settings(max_examples=200, deadline=None)
+def test_offset_roundtrip(off):
+    code = hc.encode_offset_int(off)
+    assert 1 <= code <= 0xFFF or code == 0x800
+    assert hc.decode_offset_int(code) == off
+    # jnp decode agrees
+    vhi = jnp.asarray([code << hc.PAYLOAD_HI_BITS], jnp.uint32)
+    assert int(hc.decode_offset_jnp(vhi)[0]) == off
+
+
+def test_offset_zero_is_end():
+    assert hc.decode_offset_int(0) == 0
+    with pytest.raises(ValueError):
+        hc.encode_offset_int(0)
+    with pytest.raises(ValueError):
+        hc.encode_offset_int(hc.OFFSET_MAX + 1)
+
+
+@given(payload52, offset12)
+@settings(max_examples=200, deadline=None)
+def test_value_pack_roundtrip(payload, off):
+    vhi, vlo = hc.pack_value_int(payload, hc.encode_offset_int(off))
+    p2, code = hc.unpack_value_int(vhi, vlo)
+    assert p2 == payload
+    assert hc.decode_offset_int(code) == off
+    # vector decoders agree
+    assert int(hc.payload_np(np.array([vhi], np.uint32),
+                             np.array([vlo], np.uint32))[0]) == payload
+    assert int(hc.decode_offset_np(np.array([vhi], np.uint32))[0]) == off
+
+
+def test_payload_53_bits_rejected():
+    with pytest.raises(ValueError):
+        hc.pack_value_int(1 << 52, 0)
+
+
+def test_key_split_roundtrip():
+    keys = np.array([0, 1, 2**32, 2**63 + 12345], dtype=np.uint64)
+    hi, lo = hc.key_split_np(keys)
+    back = (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+    assert (back == keys).all()

@@ -1,0 +1,127 @@
+"""Builder invariants + host/device lookup agreement for all variants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashcore as hc
+from repro.core import neighborhash as nh
+from repro.core import lookup as lk
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return nh.random_kv(4000, seed=7)
+
+
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+def test_roundtrip_and_misses(dataset, variant):
+    keys, payloads = dataset
+    t = nh.build(keys, payloads, variant=variant, load_factor=0.8)
+    rng = np.random.default_rng(0)
+    idx = rng.choice(len(keys), 500, replace=False)
+    f, p = t.lookup_host(keys[idx])
+    assert f.all()
+    assert (p == payloads[idx]).all()
+    misses = rng.integers(2**62, 2**63, 300).astype(np.uint64)
+    fm, _ = t.lookup_host(misses)
+    assert fm.sum() <= 2          # astronomically unlikely collisions
+
+
+@pytest.mark.parametrize("variant", [v for v in nh.VARIANTS
+                                     if v != "linear"])
+def test_device_matches_host(dataset, variant):
+    keys, payloads = dataset
+    t = nh.build(keys, payloads, variant=variant)
+    rng = np.random.default_rng(1)
+    q = np.concatenate([keys[rng.choice(len(keys), 400)],
+                        rng.integers(2**62, 2**63, 100).astype(np.uint64)])
+    f_host, p_host = t.lookup_host(q)
+    f_dev, p_dev = lk.lookup_table(t, q)
+    assert (np.asarray(f_dev) == f_host).all()
+    assert (p_dev[f_host] == p_host[f_host]).all()
+
+
+def test_chains_are_home_pure(dataset):
+    """Lodger relocation invariant: every chain member hashes to the chain
+    head (the paper's separate-chaining-equivalent PSL claim rests on it)."""
+    keys, payloads = dataset
+    for variant in ("perfect_cellar", "neighbor_probing", "neighborhash"):
+        t = nh.build(keys, payloads, variant=variant)
+        occupied = np.flatnonzero(t.key_hi != np.uint32(hc.EMPTY_HI))
+        for idx in occupied[:800]:
+            idx = int(idx)
+            home = hc.bucket_of_int(int(t.key_hi[idx]), int(t.key_lo[idx]),
+                                    t.home_capacity)
+            # walk from home: idx must be reachable
+            cur, seen = home, 0
+            while cur != idx:
+                if t.next_idx is not None:
+                    cur = int(t.next_idx[cur])
+                else:
+                    off = hc.decode_offset_int(
+                        (int(t.val_hi[cur]) >> hc.PAYLOAD_HI_BITS) & 0xFFF)
+                    cur = cur + off if off else -1
+                seen += 1
+                assert cur >= 0, (variant, idx, "not on home chain")
+                assert seen <= t.capacity
+
+
+def test_inline_offsets_in_range(dataset):
+    keys, payloads = dataset
+    t = nh.build(keys, payloads, variant="neighborhash")
+    codes = (t.val_hi >> np.uint32(hc.PAYLOAD_HI_BITS)) & np.uint32(0xFFF)
+    offs = hc.decode_offset_np(t.val_hi)
+    occupied = t.key_hi != np.uint32(hc.EMPTY_HI)
+    nxt = np.arange(t.capacity) + offs
+    live = occupied & (codes != 0)
+    assert (nxt[live] >= 0).all() and (nxt[live] < t.capacity).all()
+
+
+def test_update_in_place(dataset):
+    keys, payloads = dataset
+    dup_keys = np.concatenate([keys[:1000], keys[:100]])
+    dup_payloads = np.concatenate([payloads[:1000],
+                                   payloads[:100] ^ np.uint64(0xFF)])
+    t = nh.build(dup_keys, dup_payloads, variant="neighborhash",
+                 capacity=2048)
+    assert t.stats.updates == 100
+    f, p = t.lookup_host(keys[:100])
+    assert f.all()
+    assert (p == (payloads[:100] ^ np.uint64(0xFF))).all()
+
+
+def test_apcl_ordering(dataset):
+    """Paper Table 3: each design step lowers APCL (on a decent dataset)."""
+    keys, payloads = dataset
+    rng = np.random.default_rng(3)
+    qs = keys[rng.choice(len(keys), 1500)]
+    apcl = {v: nh.build(keys, payloads, variant=v).apcl(qs)
+            for v in ("linear", "coalesced", "neighborhash")}
+    assert apcl["neighborhash"] <= apcl["coalesced"] + 0.02
+    assert apcl["neighborhash"] <= apcl["linear"] + 0.02
+    assert apcl["neighborhash"] >= 1.0
+
+
+@given(st.integers(10, 400), st.floats(0.3, 0.85),
+       st.sampled_from(["neighborhash", "neighbor_probing", "linear",
+                        "coalesced"]))
+@settings(max_examples=25, deadline=None)
+def test_property_roundtrip(n, lf, variant):
+    keys, payloads = nh.random_kv(n, seed=n)
+    t = nh.build(keys, payloads, variant=variant, load_factor=lf)
+    f, p = t.lookup_host(keys)
+    assert f.all()
+    assert (p == payloads).all()
+    assert t.stats.load_factor <= lf + 0.01
+
+
+def test_capacity_exhaustion_raises():
+    keys, payloads = nh.random_kv(64, seed=0)
+    with pytest.raises(ValueError):
+        nh.build(keys, payloads, capacity=32)
+
+
+def test_reserved_key_rejected():
+    with pytest.raises(ValueError):
+        nh.build(np.array([hc.EMPTY_KEY], np.uint64),
+                 np.array([0], np.uint64))

@@ -1,0 +1,70 @@
+"""Optimizer rules: descent on a quadratic, state spec structure, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.train import optimizer as opt
+
+
+def _quadratic_descends(rule):
+    # adagrad's effective lr decays as 1/sqrt(sum g^2): needs a larger base
+    lr = 0.5 if rule == "adagrad_rows" else 0.05
+    cfg = opt.OptConfig(lr=lr, dense_rule=rule, table_rule=rule,
+                        grad_clip=0.0)
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(16, 8)), jnp.float32)}
+    state = opt.init_opt_state(params, cfg)
+    target = jnp.ones((16, 8))
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    step = jnp.int32(0)
+    for i in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.apply_updates(params, g, state, cfg,
+                                             step + i + 1)
+    assert float(loss(params)) < 0.2 * l0, rule
+
+
+@pytest.mark.parametrize("rule", ["adam", "adafactor", "adagrad_rows"])
+def test_rules_descend(rule):
+    _quadratic_descends(rule)
+
+
+def test_rule_selection_by_path():
+    cfg = opt.OptConfig()
+    params = {"item_table": jnp.zeros((10, 4)),
+              "mlp": {"w": jnp.zeros((4, 4))},
+              "embed": jnp.zeros((6, 2))}
+    st = opt.init_opt_state(params, cfg)
+    assert set(st["item_table"]) == {"acc"}          # adagrad rows
+    assert set(st["embed"]) == {"acc"}
+    assert set(st["mlp"]["w"]) == {"m", "v"}         # adam
+    assert st["item_table"]["acc"].shape == (10,)    # one per row
+
+
+def test_opt_state_specs_structure():
+    cfg = opt.OptConfig(dense_rule="adafactor")
+    params = {"w": jnp.zeros((8, 4)), "table": jnp.zeros((10, 2))}
+    specs = {"w": P("data", "model"), "table": P("model", None)}
+    os = opt.opt_state_specs(params, specs, cfg)
+    assert os["w"]["m"] == P("data", "model")
+    assert os["w"]["vr"] == P("data")
+    assert os["w"]["vc"] == P("model")
+    assert os["table"]["acc"] == P("model")
+
+
+def test_grad_clip_bounds_update():
+    cfg = opt.OptConfig(lr=1.0, grad_clip=1.0, dense_rule="adam")
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init_opt_state(params, cfg)
+    huge = {"w": jnp.full((4,), 1e6)}
+    newp, _, gnorm = opt.apply_updates(params, huge, state, cfg,
+                                       jnp.int32(1))
+    assert float(gnorm) > 1e5
+    assert np.isfinite(np.asarray(newp["w"])).all()
+    assert np.abs(np.asarray(newp["w"])).max() < 10.0

@@ -1,0 +1,254 @@
+"""Hybrid store, sharding, versioning, batch-query subsystem, cluster sim."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hybrid_store import HybridKVStore, TIER_MASK
+from repro.core.batch_query import BatchQueryService
+from repro.core.sharding import TableSpec, plan_shards, plan_reshard
+from repro.core.versioning import (Generation, ShardReplica,
+                                   ConsistentBatchClient, rolling_update)
+from repro.core.cluster_sim import SimConfig, run_update_experiment
+
+
+@pytest.fixture(scope="module")
+def store():
+    keys = np.arange(1, 1501, dtype=np.uint64)
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 255, size=(1500, 32), dtype=np.uint8)
+    return keys, vals, HybridKVStore(keys, vals, hot_fraction=0.2)
+
+
+class TestHybridStore:
+    def test_hot_and_cold_roundtrip(self, store):
+        keys, vals, st_ = store
+        f, out = st_.get_batch(keys)
+        assert f.all()
+        assert (out == vals).all()
+        assert st_.stats.cold_misses > 0 and st_.stats.hot_hits > 0
+
+    def test_admission_then_eviction_preserves_reads(self, store):
+        keys, vals, st_ = store
+        st_.get_batch(keys[1200:1300])      # admit colds
+        evicted = st_.maintain(target_free_fraction=0.2)
+        assert evicted >= 0
+        f, out = st_.get_batch(keys[1200:1300])
+        assert f.all() and (out == vals[1200:1300]).all()
+
+    def test_update_value_both_tiers(self, store):
+        keys, vals, st_ = store
+        new = np.full(32, 7, np.uint8)
+        st_.update_value(int(keys[0]), new)       # hot key
+        st_.update_value(int(keys[-1]), new)      # cold key
+        f, out = st_.get_batch([keys[0], keys[-1]])
+        assert f.all() and (out == 7).all()
+
+    def test_missing_key(self, store):
+        _, _, st_ = store
+        f, _ = st_.get_batch([999999])
+        assert not f.any()
+
+    def test_memory_accounting(self, store):
+        keys, vals, st_ = store
+        mb = st_.memory_bytes()
+        assert mb["cold_file"] == len(keys) * 32
+        assert mb["resident_total"] < mb["cold_file"] + mb["index"] + \
+            mb["hot_metadata"] + mb["hot_values"] + 1
+
+    def test_async_eviction_thread(self, store):
+        _, _, st_ = store
+        st_.start_async_eviction(period_s=0.001)
+        st_.get_batch(np.arange(1, 200, dtype=np.uint64))
+        st_.stop_async_eviction()
+
+
+class TestSharding:
+    def test_plan_respects_byte_bound(self):
+        spec = TableSpec("t", 1_000_000, 64)
+        plan = plan_shards(spec, 1 << 20)
+        assert plan.n_shards >= spec.total_bytes // (1 << 20)
+        keys = np.random.default_rng(0).integers(
+            0, 2**63, 10000).astype(np.uint64)
+        counts = np.bincount(plan.shard_of_np(keys),
+                             minlength=plan.n_shards)
+        assert counts.max() < 2.0 * counts.mean()   # balanced-ish
+
+    def test_reshard_movement(self):
+        spec = TableSpec("t", 1_000_000, 64)
+        old = plan_shards(spec, 1 << 20)
+        grown = TableSpec("t", 2_000_000, 64)
+        rp = plan_reshard(old, grown, 1 << 20)
+        assert rp.new.n_shards > old.n_shards
+        assert 0 < rp.moved_fraction <= 1.0
+
+    def test_shard_of_matches_scalar(self):
+        plan = plan_shards(TableSpec("t", 1000, 16), 4096)
+        keys = np.arange(1, 200, dtype=np.uint64)
+        vec = plan.shard_of_np(keys)
+        assert all(plan.shard_of(int(k)) == v for k, v in zip(keys, vec))
+
+
+class TestBatchQueryService:
+    def test_route_and_merge(self):
+        keys = np.arange(1, 3001, dtype=np.uint64)
+        payloads = (keys * np.uint64(3)) & np.uint64((1 << 52) - 1)
+        svc = BatchQueryService(keys, payloads, max_shard_bytes=8192)
+        assert svc.n_shards > 1
+        rng = np.random.default_rng(0)
+        q = keys[rng.choice(len(keys), 500)]
+        f, p = svc.query(q)
+        assert f.all() and (p == (q * np.uint64(3))).all()
+
+
+def _make_cluster(n_shards=4, n_replicas=3, n_keys=500):
+    keys = np.arange(1, n_keys + 1, dtype=np.uint64)
+    payloads = keys.astype(np.uint64)[:, None]
+    plan = plan_shards(TableSpec("t", n_keys, 16), n_keys * 16 // n_shards)
+    reps = [[ShardReplica(s, r) for r in range(n_replicas)]
+            for s in range(plan.n_shards)]
+    parts = plan.partition(keys)
+    for s, rows in enumerate(parts):
+        g = Generation(1, keys[rows], payloads[rows])
+        for r in reps[s]:
+            r.publish(g)
+    return keys, payloads, plan, reps, parts
+
+
+class TestConsistency:
+    def test_strong_version_through_rolling_update(self):
+        keys, payloads, plan, reps, parts = _make_cluster()
+        client = ConsistentBatchClient(reps, plan.shard_of, enforce=True)
+        new_gens = [Generation(2, keys[rows], payloads[rows] + 100)
+                    for rows in parts]
+        for ev in rolling_update(reps, new_gens):
+            f, vals, versions = client.query(keys[:64])
+            assert f.all()
+            assert len(set(versions)) == 1, ev
+        # after the update everyone serves v2
+        _, vals, versions = client.query(keys[:64])
+        assert set(versions) == {2}
+        assert (vals[:, 0] == payloads[:64, 0] + 100).all()
+
+    def test_replica_loss_tolerated(self):
+        keys, payloads, plan, reps, parts = _make_cluster()
+        for s in range(plan.n_shards):
+            reps[s][0].serving = False            # lose one replica wave
+        client = ConsistentBatchClient(reps, plan.shard_of, enforce=True)
+        f, _, versions = client.query(keys[:32])
+        assert f.all() and len(set(versions)) == 1
+
+    @given(st.integers(0, 10000))
+    @settings(max_examples=20, deadline=None)
+    def test_property_never_mixed(self, seed):
+        """Random interleaving of updates and queries: the enforcing client
+        never observes two versions in one batch.  Under pathological
+        version churn (overlapping publishes exhausting the retain window)
+        the client may *refuse* a batch — refusing is allowed, mixing is
+        not."""
+        rng = np.random.default_rng(seed)
+        keys, payloads, plan, reps, parts = _make_cluster()
+        client = ConsistentBatchClient(reps, plan.shard_of, enforce=True)
+        version = 2
+        updates = []
+        for _ in range(3):
+            gens = [Generation(version, keys[rows], payloads[rows] + version)
+                    for rows in parts]
+            updates.append(rolling_update(reps, gens))
+            version += 1
+        live = list(updates)
+        answered = refused = 0
+        while live:
+            g = live[rng.integers(0, len(live))]
+            try:
+                next(g)
+            except StopIteration:
+                live.remove(g)
+            q = keys[rng.choice(len(keys), 16)]
+            f, _, versions = client.query(q)
+            if not f.any():
+                refused += 1           # fail-safe refusal, never mixed
+                continue
+            answered += 1
+            assert f.all()
+            assert len(set(versions)) == 1
+        assert answered > 0
+
+
+class TestClusterSim:
+    def test_fig10_trend(self):
+        rates = []
+        for interval in (120, 30):
+            m = run_update_experiment(interval, "naming", duration_s=400,
+                                      qps=20, seed=2)
+            rates.append(m.mixed_rate)
+        assert rates[1] > rates[0] > 0          # shorter interval -> worse
+        m_paper = run_update_experiment(30, "paper", duration_s=400,
+                                        qps=20, seed=2)
+        assert m_paper.mixed_rate == 0.0
+
+    def test_paper_updates_faster(self):
+        m_p = run_update_experiment(300, "paper", duration_s=400, qps=5,
+                                    seed=3)
+        m_n = run_update_experiment(300, "naming", duration_s=400, qps=5,
+                                    seed=3)
+        assert m_p.update_wall_us < m_n.update_wall_us
+
+    def test_hedging_caps_stragglers(self):
+        cfg = SimConfig(straggler_prob=0.05, seed=4)
+        hedged = run_update_experiment(1000, "paper", duration_s=200,
+                                       qps=50, seed=4, cfg=cfg)
+        no_hedge = run_update_experiment(
+            1000, "paper", duration_s=200, qps=50, seed=4,
+            cfg=SimConfig(straggler_prob=0.05, seed=4,
+                          hedge_deadline_us=10**9))
+        assert hedged.hedges > 0
+        # p90 capped near the hedge deadline; p99 no worse than unhedged
+        # (both primary+backup can straggle — hedging can't beat that tail)
+        assert hedged.latency_quantile(0.90) < 2 * cfg.hedge_deadline_us
+        assert no_hedge.latency_quantile(0.90) > cfg.straggler_latency_us \
+            or hedged.latency_quantile(0.99) <= \
+            no_hedge.latency_quantile(0.99)
+
+    def test_crash_during_update_survives(self):
+        """Replicas crash during 20% of reloads; node replacement brings
+        them back — queries keep succeeding throughout."""
+        cfg = SimConfig(fail_prob_per_update=0.2, seed=5)
+        m = run_update_experiment(60, "paper", duration_s=400, qps=10,
+                                  seed=5, cfg=cfg)
+        assert m.queries > 0
+        # availability: <2.5% refusals under sustained 20% reload-crash rate
+        # with 30 s node replacement; and NEVER a mixed-version batch
+        assert m.failures < m.queries * 0.025
+        assert m.mixed_version_batches == 0
+
+
+class TestHybridStoreProperties:
+    @given(st.integers(0, 5000), st.floats(0.05, 0.5))
+    @settings(max_examples=15, deadline=None)
+    def test_random_op_sequences(self, seed, hot_frac):
+        """Property: any interleaving of reads / updates / evictions returns
+        current values for present keys and never invents missing ones."""
+        rng = np.random.default_rng(seed)
+        n = 200
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+        vals = rng.integers(0, 255, size=(n, 8), dtype=np.uint8)
+        store = HybridKVStore(keys, vals.copy(), hot_fraction=hot_frac)
+        current = {int(k): vals[i].copy() for i, k in enumerate(keys)}
+        for _ in range(30):
+            op = rng.integers(0, 3)
+            if op == 0:       # batch read
+                q = rng.choice(keys, rng.integers(1, 32))
+                f, out = store.get_batch(q)
+                assert f.all()
+                for qq, o in zip(q, out):
+                    assert (o == current[int(qq)]).all()
+            elif op == 1:     # update
+                k = int(rng.choice(keys))
+                v = rng.integers(0, 255, 8, dtype=np.uint8)
+                store.update_value(k, v)
+                current[k] = v
+            else:             # eviction pass
+                store.maintain(target_free_fraction=float(rng.random()) / 2)
+        # absent keys never found
+        f, _ = store.get_batch(np.arange(10_000, 10_020, dtype=np.uint64))
+        assert not f.any()
