@@ -14,6 +14,8 @@ Two measurements:
 from __future__ import annotations
 
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -59,7 +61,7 @@ def _ranking_rows(quick: bool) -> list[str]:
     rng = np.random.default_rng(0)
     params = params_v1
     st = jnp.int32(0)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for _ in range(3 if quick else 10):   # one "publish" of training
             batch = {k: jnp.asarray(v) for k, v in
                      synthetic.recsys_batch(rng, cfg, 64).items()}

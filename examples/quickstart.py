@@ -3,6 +3,7 @@
 1. Build a NeighborHash table; batch-query it on device.
 2. Wrap it in the hybrid hot/cold (NVMe-simulated) store.
 3. Stand up a sharded BatchQueryService and run a mixed batch.
+4. Fuse several tables behind one MultiTableEngine query.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,6 +11,7 @@ import numpy as np
 
 from repro.core import neighborhash as nh
 from repro.core import lookup as lk
+from repro.core.engine import EmbeddingTable, MultiTableEngine, ScalarTable
 from repro.core.hybrid_store import HybridKVStore
 from repro.core.batch_query import BatchQueryService
 
@@ -48,4 +50,27 @@ f, p = svc.query(queries)
 print(f"batch query service: {svc.n_shards} shards, "
       f"{int(f.sum())}/1000 hits, correct="
       f"{bool((p[:900] == payloads[:900]).all())}")
+
+# --- 4. multi-table fused engine -------------------------------------------
+rng = np.random.default_rng(2)
+cat_keys, cat_payloads = nh.random_kv(5_000, seed=3)
+engine = MultiTableEngine(
+    scalars=[ScalarTable("item_attr", keys, payloads),
+             ScalarTable("cat_attr", cat_keys, cat_payloads)],
+    embeddings=[EmbeddingTable("item_emb", keys[:10_000], values,
+                               hot_fraction=0.1)],
+    max_shard_bytes=1 << 19)
+request = {                       # zipf-ish duplication, like real traffic
+    "item_attr": keys[rng.integers(0, 2_000, 4096)],
+    "cat_attr": cat_keys[rng.integers(0, 200, 4096)],
+    "item_emb": keys[rng.integers(0, 1_000, 2048)],
+}
+res = engine.query(request)
+ok = bool((res["item_attr"].payloads[res["item_attr"].found]
+           != 0).any()) and res["cat_attr"].found.all()
+assert ok, "fused engine returned inconsistent results"
+print(f"multi-table engine: {len(request)} tables in one fused query "
+      f"(version {res.version}), correct={ok}, dedup eliminated "
+      f"{engine.stats.dedup_rate:.0%} of device-side keys, "
+      f"{engine.stats.launches} coalesced launches")
 print("OK")

@@ -1,78 +1,82 @@
-"""Serving demo (deliverable b): a NeighborKV feature store behind the
-batch-query subsystem serving batched CTR scoring, surviving a rolling
-update mid-traffic with strong version consistency and hedged requests.
+"""Serving demo (deliverable b): a NeighborKV feature store behind the fused
+multi-table batch-query engine serving batched CTR scoring, surviving a
+rolling publish mid-traffic with strong version consistency, plus the
+datacenter-scale straggler simulation.
 
 Run:  PYTHONPATH=src python examples/serve_cluster.py
 """
 import time
 
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
 from repro.core.cluster_sim import ClusterSim, SimConfig
-from repro.core.sharding import TableSpec, plan_shards
-from repro.core.versioning import (ConsistentBatchClient, Generation,
-                                   ShardReplica, rolling_update)
+from repro.core.engine import EmbeddingTable, MultiTableEngine, ScalarTable
 from repro.data import synthetic
 from repro.launch import mesh as mesh_mod
 from repro.models import common as cm
 from repro.models import recsys as rec_mod
+from repro.serve import serve_step
 
-# --- feature store: versioned, sharded, replicated -------------------------
+# --- feature store: one engine, many tables, versioned ----------------------
 fs_cfg = registry.get("bili-feature-store").smoke
 keys = np.arange(1, fs_cfg.n_items + 1, dtype=np.uint64)
 rng = np.random.default_rng(0)
 feats = rng.normal(size=(fs_cfg.n_items, 8)).astype(np.float32)
-plan = plan_shards(TableSpec("item-feats", fs_cfg.n_items, 32),
-                   fs_cfg.max_shard_bytes)
-replicas = [[ShardReplica(s, r) for r in range(3)]
-            for s in range(plan.n_shards)]
-parts = plan.partition(keys)
-for s, rows in enumerate(parts):
-    for rep in replicas[s]:
-        rep.publish(Generation(1, keys[rows], feats[rows]))
-client = ConsistentBatchClient(replicas, plan.shard_of, enforce=True)
-print(f"feature store: {fs_cfg.n_items} items, {plan.n_shards} shards x3 "
-      "replicas, v1 live")
+pop = rng.integers(0, 1 << 20, fs_cfg.n_items).astype(np.uint64)
 
-# --- model: smoke DeepFM scoring batches fed by the store -------------------
+
+def tables(version: int):
+    scale = 1.0 + 0.01 * (version - 1)
+    return ([ScalarTable("item_pop", keys, pop + np.uint64(version))],
+            [EmbeddingTable("item_feats", keys,
+                            (feats * scale).astype(np.float32)
+                            .view(np.uint8).reshape(fs_cfg.n_items, -1),
+                            hot_fraction=0.25)])
+
+
+scalars, embeddings = tables(1)
+engine = MultiTableEngine(scalars, embeddings,
+                          max_shard_bytes=fs_cfg.max_shard_bytes, version=1)
+print(f"feature store: {fs_cfg.n_items} items x "
+      f"{len(engine.table_names)} tables behind one fused engine, v1 live")
+
+# --- model: smoke DeepFM scoring batches fed through the engine --------------
 mesh = mesh_mod.make_local_mesh()
 mi = cm.MeshInfo.from_mesh(mesh)
 cfg = registry.get("deepfm").smoke
 params, _ = cm.unbox(rec_mod.recsys_init(jax.random.key(0), cfg))
-score = jax.jit(lambda p, b: rec_mod.recsys_score(p, cfg, b, mi))
+step = serve_step.recsys_score_fn(
+    cfg, mesh, mi, feature_engine=engine,
+    feature_fields=[("item_feats", "item_id"), ("item_pop", "item_id")])
 
-new_gens = [Generation(2, keys[rows], feats[rows] * 1.01) for rows in parts]
-updater = rolling_update(replicas, new_gens)
-update_done = False
-
-lat, versions_seen = [], set()
-with jax.set_mesh(mesh):
+lat = []
+with compat.set_mesh(mesh):
     for req in range(60):
-        if not update_done and req >= 10:       # update starts mid-traffic
-            try:
-                next(updater)
-            except StopIteration:
-                update_done = True
+        if req == 10:                      # publish lands mid-traffic: the
+            engine.publish(2, *tables(2))  # v1 build stays retained for
+        if req == 40:                      # in-flight batches; v3 evicts it
+            engine.publish(3, *tables(3))
         t0 = time.perf_counter()
-        q = keys[rng.choice(len(keys), 64)]
-        found, vals, versions = client.query(q)
-        assert found.all() and len(set(versions)) == 1
-        versions_seen.add(versions[0])
         batch = synthetic.recsys_batch(rng, cfg, 64)
-        batch["dense"][:, :8] = vals[:, :8]     # features from the store
-        probs = score(params, {k: jnp.asarray(v) for k, v in batch.items()
-                               if k != "label"})
+        batch["item_id"] = (batch["sparse_ids"][:, 0].astype(np.int64)
+                            % fs_cfg.n_items + 1)
+        probs = step(params, {k: (jnp.asarray(v) if k != "item_id" else v)
+                              for k, v in batch.items() if k != "label"})
         jax.block_until_ready(probs)
         lat.append((time.perf_counter() - t0) * 1e3)
 
-print(f"60 scoring batches served; versions used (never mixed within a "
-      f"batch): {sorted(versions_seen)}")
+s = engine.stats
+print(f"60 scoring batches served across versions "
+      f"{sorted(s.versions_served)} (each batch pinned to exactly one); "
+      f"dedup {s.dedup_rate:.0%}, {s.launches} fused launches, "
+      f"{s.repins} re-pins")
 print(f"latency p50={np.percentile(lat, 50):.2f}ms "
-      f"p99={np.percentile(lat, 99):.2f}ms; "
-      f"client re-pins during update: {client.report.repins}")
+      f"p99={np.percentile(lat, 99):.2f}ms")
 
 # --- straggler mitigation at datacenter scale (simulated) -------------------
 sim_cfg = SimConfig(straggler_prob=0.1, seed=1)

@@ -10,6 +10,8 @@ import dataclasses
 import time
 
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -66,7 +68,7 @@ def main():
         print(f"resumed from checkpoint at step {step0}")
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for i in range(int(st), args.steps):
             batch_np = synthetic.recsys_batch(rng, cfg, args.batch)
             publisher.touch(batch_np["hist_items"])

@@ -17,6 +17,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core import hashcore as hc
+from repro.core.versioning import VersionWindow
+
 
 @dataclasses.dataclass(order=True)
 class _Event:
@@ -64,24 +67,35 @@ class SimConfig:
 
 
 class Replica:
+    """Version bookkeeping delegates to the same VersionWindow the real
+    query services use (core/versioning.py) — the sim replica is the
+    metadata shadow of a MultiTableEngine build set."""
+
     def __init__(self, shard: int, idx: int, retain: int):
         self.shard = shard
         self.idx = idx
-        self.retain = retain
-        self.versions: list[int] = [0]
+        self.window = VersionWindow(retain)
+        self.window.publish(0, None)
         self.serving = True
         self.alive = True
 
+    @property
+    def versions(self) -> list[int]:
+        return self.window.versions
+
+    @versions.setter
+    def versions(self, vs: list[int]):
+        self.window.reset({int(v): None for v in vs})
+
     def publish(self, v: int):
-        self.versions.append(v)
-        self.versions = sorted(set(self.versions))[-self.retain:]
+        self.window.publish(v, None)
 
     def has(self, v: int) -> bool:
-        return self.alive and self.serving and v in self.versions
+        return self.alive and self.serving and v in self.window.versions
 
     @property
     def latest(self) -> int:
-        return max(self.versions) if self.versions else -1
+        return self.window.latest
 
 
 @dataclasses.dataclass
@@ -112,7 +126,8 @@ class ClusterSim:
     ready); ``protocol='naming'`` trusts the (stale) naming-service view —
     each shard answers from whatever version its chosen replica has."""
 
-    def __init__(self, cfg: SimConfig, protocol: str = "paper"):
+    def __init__(self, cfg: SimConfig, protocol: str = "paper",
+                 tables_for_version: Optional[Callable] = None):
         assert protocol in ("paper", "naming")
         self.cfg = cfg
         self.protocol = protocol
@@ -125,6 +140,20 @@ class ClusterSim:
         # the naming service's *believed* latest version per shard (stale)
         self.naming_view = [0] * cfg.n_shards
         self.current_version = 0
+        # optional real data plane: ``tables_for_version(v) -> (scalars,
+        # embeddings)``; the fleet then answers queries through an actual
+        # MultiTableEngine whose retention window mirrors the replicas'
+        self.tables_for_version = tables_for_version
+        self.engine = None
+        if tables_for_version is not None:
+            from repro.core.engine import MultiTableEngine
+            scalars, embeddings = tables_for_version(0)
+            # the shared engine stands in for every replica's copy, so its
+            # window must span the *union* of the staggered per-replica
+            # windows (replica waves lag each other by one build)
+            self.engine = MultiTableEngine(
+                scalars, embeddings,
+                retain=cfg.retain_versions + cfg.n_replicas, version=0)
 
     # ------------------------------------------------------------------
     # update machinery
@@ -153,6 +182,10 @@ class ClusterSim:
                     continue
 
             def finish(rep_idx=rep_idx):
+                if rep_idx == 0 and self.engine is not None:
+                    # first wave ready: the new build exists in the fleet
+                    scalars, embeddings = self.tables_for_version(version)
+                    self.engine.publish(version, scalars, embeddings)
                 for s in range(cfg.n_shards):
                     rep = self.replicas[s][rep_idx]
                     if not rep.alive:
@@ -226,10 +259,65 @@ class ClusterSim:
         common = set.intersection(*per_shard)
         return max(common) if common else -1
 
-    def query_batch(self) -> tuple[bool, list[int], int]:
+    def _shard_of_keys(self, keys: np.ndarray) -> np.ndarray:
+        hi, lo = hc.key_split_np(np.asarray(keys, dtype=np.uint64))
+        return (hc.hash64_np(hi, lo) % np.uint32(self.cfg.n_shards)).astype(
+            np.int32)
+
+    def _fetch_data(self, request: dict, versions: list[int]) -> dict:
+        """Answer ``request`` with real rows, each sim-shard's keys served
+        from the version that shard's chosen replica used.  Under the paper
+        protocol all shards share one pin; under the naming baseline the
+        per-shard versions can differ — and the returned batch then really
+        does contain mixed-version rows (Fig 10 at the data level)."""
+        items = {name: np.asarray(keys, dtype=np.uint64).ravel()
+                 for name, keys in request.items()}
+        shard_ids = {name: self._shard_of_keys(k)
+                     for name, k in items.items()}
+        found = {name: np.zeros(len(k), dtype=bool)
+                 for name, k in items.items()}
+        data: dict = {name: None for name in items}   # payloads or rows
+        # one fused engine query per version, spanning ALL tables — the
+        # coalescing is the whole point of routing through the engine
+        for v in sorted(set(versions)):
+            shards_v = [s for s, vv in enumerate(versions) if vv == v]
+            sub, masks = {}, {}
+            for name, keys in items.items():
+                mask = np.isin(shard_ids[name], shards_v)
+                if mask.any():
+                    sub[name] = keys[mask]
+                    masks[name] = mask
+            if not sub:
+                continue
+            # strict: a replica that claims version v really holds it;
+            # silently substituting a newer build would hide the very
+            # mixing this data plane exists to expose
+            res = self.engine.query(sub, version=v, strict=True)
+            for name, mask in masks.items():
+                tr = res[name]
+                found[name][mask] = tr.found
+                if tr.payloads is not None:          # scalar table
+                    if data[name] is None:
+                        data[name] = np.zeros(len(items[name]),
+                                              dtype=np.uint64)
+                    data[name][mask] = tr.payloads
+                else:                                # embedding table
+                    if data[name] is None:
+                        data[name] = np.zeros(
+                            (len(items[name]), tr.values.shape[1]),
+                            dtype=np.uint8)
+                    data[name][mask] = tr.values
+        return {name: (found[name],
+                       data[name] if data[name] is not None
+                       else np.zeros(len(items[name]), dtype=np.uint64))
+                for name in items}
+
+    def query_batch(self, request: Optional[dict] = None):
         """One ranking request fanning out to all shards.
 
-        Returns (ok, versions_used_per_shard, latency_us).  Hedged requests:
+        Returns (ok, versions_used_per_shard, latency_us); with ``request``
+        (a ``{table: keys}`` dict, requires the engine data plane) a fourth
+        element carries ``{table: (found, payloads)}``.  Hedged requests:
         if a sub-query exceeds hedge_deadline_us, a backup goes to another
         replica and the faster answer wins (straggler mitigation)."""
         m = self.metrics
@@ -247,7 +335,9 @@ class ClusterSim:
                     rep = self._pick_replica(s, pin)
                     if rep is None:
                         m.failures += 1
-                        return False, versions, worst
+                        return ((False, versions, worst, None)
+                                if request is not None
+                                else (False, versions, worst))
                 v = pin
             else:
                 # baseline: ask for naming service's believed version; the
@@ -257,7 +347,9 @@ class ClusterSim:
                 rep = self._pick_replica(s, None)
                 if rep is None:
                     m.failures += 1
-                    return False, versions, worst
+                    return ((False, versions, worst, None)
+                            if request is not None
+                            else (False, versions, worst))
                 v = want if want in rep.versions else rep.latest
             lat = self._rpc_latency()
             if lat > self.cfg.hedge_deadline_us:
@@ -274,6 +366,11 @@ class ClusterSim:
         else:
             m.consistent_batches += 1
         m.p_latencies_us.append(worst)
+        if request is not None:
+            if self.engine is None:
+                raise ValueError("query_batch(request=...) needs a data "
+                                 "plane: pass tables_for_version")
+            return True, versions, worst, self._fetch_data(request, versions)
         return True, versions, worst
 
 

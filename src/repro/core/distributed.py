@@ -215,7 +215,7 @@ def make_distributed_lookup(mesh, st: ShardedTables, *, axis_name: str,
     shard per device along that axis; multi-shard-per-device stacks fold into
     capacity)."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.core.compat import shard_map
 
     axis_size = mesh.shape[axis_name]
     if st.n_shards != axis_size:

@@ -1,0 +1,431 @@
+"""MultiTableEngine — the paper's fused, deduplicated batch query (Fig 2).
+
+A model request spans many tables at once: scalar attribute tables (key ->
+52-bit payload) and embedding tables (key -> fixed-width value row, hot-only
+or hybrid hot/cold).  Answering it one ``BatchQueryService`` at a time leaves
+the architecture's wins on the floor; this engine implements the cross-table
+pipeline:
+
+  1. **Per-batch key deduplication** — request keys are zipfian, so a batch
+     repeats hot keys many times.  Each table's keys are uniqued once on the
+     host; device lookups see only unique keys and results are reconstructed
+     by an inverse gather (Monolith/MicroRec-style dedup).
+  2. **Cross-table coalescing** — every scalar table shares one engine-level
+     shard layout; all tables' sub-queries for a shard go down in a single
+     fused device launch (one jitted program computing every table's probe),
+     not one launch per table per shard.
+  3. **Double-buffered pipeline** — ``query_stream`` overlaps host-side
+     gather/dedup/routing of batch i+1 with the device lookups of batch i
+     (device dispatch is async; the block happens one batch late).
+  4. **Strong-version pinning, once** — a publish builds a whole new fused
+     table set; a retention window (core/versioning.VersionWindow) keeps the
+     previous build alive so in-flight batches never mix versions, and a
+     request pinned to an evicted version gets the protocol NACK + re-pin.
+
+Scalar lookups run on device through core/lookup.py; embedding tables resolve
+through core/hybrid_store.HybridKVStore (dedup also dedups NVMe IO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashcore as hc
+from repro.core import lookup as lk
+from repro.core import neighborhash as nh
+from repro.core.hybrid_store import HybridKVStore
+from repro.core.sharding import ShardPlan, TableSpec, plan_shards
+from repro.core.versioning import VersionWindow
+
+
+# ---------------------------------------------------------------------------
+# table specs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScalarTable:
+    """Attribute table: uint64 key -> <=52-bit payload."""
+    name: str
+    keys: np.ndarray
+    payloads: np.ndarray
+    variant: str = "neighborhash"
+    load_factor: float = 0.8
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingTable:
+    """Value table: uint64 key -> uint8[value_bytes] row.  ``hot_fraction``
+    1.0 keeps every row in memory; below 1.0 the tail lives in the simulated
+    NVMe tier (core/hybrid_store.py)."""
+    name: str
+    keys: np.ndarray
+    values: np.ndarray            # uint8 [n, value_bytes]
+    hot_fraction: float = 1.0
+    variant: str = "neighborhash"
+
+
+@dataclasses.dataclass
+class EngineStats:
+    batches: int = 0
+    keys_requested: int = 0       # sum over tables of raw request keys
+    keys_deviceside: int = 0      # after dedup (what shards actually probe)
+    hits: int = 0
+    launches: int = 0             # fused device launches (one per shard hit)
+    repins: int = 0               # NACK -> re-pin events
+    versions_served: set = dataclasses.field(default_factory=set)
+
+    @property
+    def dedup_rate(self) -> float:
+        """Fraction of requested keys eliminated before the device."""
+        if not self.keys_requested:
+            return 0.0
+        return 1.0 - self.keys_deviceside / self.keys_requested
+
+
+@dataclasses.dataclass
+class TableResult:
+    found: np.ndarray             # bool [n_request_keys]
+    payloads: Optional[np.ndarray] = None   # uint64, scalar tables
+    values: Optional[np.ndarray] = None     # uint8 [n, vb], embedding tables
+
+
+@dataclasses.dataclass
+class QueryResult:
+    version: int
+    tables: dict[str, TableResult]
+
+    def __getitem__(self, name: str) -> TableResult:
+        return self.tables[name]
+
+
+# ---------------------------------------------------------------------------
+# one published version: fused shard layout + stores
+# ---------------------------------------------------------------------------
+def _pad_len(n: int) -> int:
+    """Shape-stable padding so the fused jit sees few distinct shapes."""
+    p = 8
+    while p < n:
+        p <<= 1
+    return p
+
+
+class _FusedBuild:
+    """All tables of one version, built onto one engine-level shard plan."""
+
+    def __init__(self, scalars: Sequence[ScalarTable],
+                 embeddings: Sequence[EmbeddingTable], *,
+                 max_shard_bytes: int, buckets_per_line: int):
+        self.scalar_names = [t.name for t in scalars]
+        self.scalar_index = {t.name: i for i, t in enumerate(scalars)}
+        # kinds live on the build, not the engine: retained older builds
+        # stay queryable under THEIR table sets during a rollout
+        self.table_kinds = {t.name: "scalar" for t in scalars}
+        self.table_kinds.update({t.name: "embedding" for t in embeddings})
+        total_rows = sum(len(t.keys) for t in scalars)
+        spec = TableSpec(name="fused-scalars", n_rows=max(total_rows, 1),
+                         bytes_per_row=16)
+        self.plan: ShardPlan = plan_shards(spec, max_shard_bytes)
+        n_shards = self.plan.n_shards
+
+        # per shard, per scalar table: a NeighborHash over that table's keys
+        # owned by the shard (same hash routing for every table, so one
+        # request partition serves all of them)
+        self.shard_tables: list[list[nh.HashTable]] = []
+        self.shard_arrays: list[list[dict]] = []
+        for s in range(n_shards):
+            self.shard_tables.append([])
+            self.shard_arrays.append([])
+        for t in scalars:
+            keys = np.asarray(t.keys, dtype=np.uint64)
+            payloads = np.asarray(t.payloads, dtype=np.uint64)
+            for s, rows in enumerate(self.plan.partition(keys)):
+                tbl = nh.build_grow(keys[rows], payloads[rows],
+                                    variant=t.variant,
+                                    load_factor=t.load_factor,
+                                    buckets_per_line=buckets_per_line)
+                self.shard_tables[s].append(tbl)
+                self.shard_arrays[s].append(
+                    {k: jnp.asarray(v) for k, v in
+                     tbl.device_arrays().items()})
+        self._fused_fns = [self._make_fused_fn(s) for s in range(n_shards)]
+
+        self.stores: dict[str, HybridKVStore] = {}
+        for t in embeddings:
+            self.stores[t.name] = HybridKVStore(
+                np.asarray(t.keys, dtype=np.uint64),
+                np.asarray(t.values, dtype=np.uint8),
+                hot_fraction=t.hot_fraction, variant=t.variant)
+
+    def _make_fused_fn(self, shard: int):
+        """One jitted program probing EVERY scalar table of this shard —
+        the cross-table coalesced launch."""
+        fns = [lk.make_lookup_fn(t) for t in self.shard_tables[shard]]
+
+        @jax.jit
+        def fused(arrays_list, q_his, q_los):
+            return [fn(arrs, qh, ql)
+                    for fn, arrs, qh, ql in zip(fns, arrays_list,
+                                                q_his, q_los)]
+
+        return fused
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
+
+
+# ---------------------------------------------------------------------------
+# staged batch (host work, overlappable with device lookups)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _StagedScalar:
+    name: str
+    build_index: int              # position in the build's scalar order
+    n_request: int
+    uniq_hi: np.ndarray
+    uniq_lo: np.ndarray
+    inverse: np.ndarray           # request position -> unique position
+    owners: np.ndarray            # unique position -> shard
+    shard_pos: list[np.ndarray]   # shard -> unique positions routed there
+
+
+@dataclasses.dataclass
+class _StagedEmbedding:
+    name: str
+    n_request: int
+    uniq: np.ndarray
+    inverse: np.ndarray
+
+
+@dataclasses.dataclass
+class _StagedBatch:
+    version: int
+    build: _FusedBuild
+    scalars: list[_StagedScalar]
+    embeddings: list[_StagedEmbedding]
+    keys_requested: int
+    keys_deviceside: int
+
+
+@dataclasses.dataclass
+class _InflightBatch:
+    staged: _StagedBatch
+    device_out: dict[int, list]   # shard -> fused launch outputs (async)
+    launches: int
+
+
+class VersionEvictedError(KeyError):
+    """Strict query pinned a version no longer in the retention window."""
+
+
+class MultiTableEngine:
+    """N named tables behind one fused batch-query front end.
+
+    ``publish`` installs a new version of every table atomically; queries are
+    answered entirely from one retained version (strong-version pinning at
+    the engine level — no per-table version bookkeeping anywhere else)."""
+
+    def __init__(self, scalars: Sequence[ScalarTable] = (),
+                 embeddings: Sequence[EmbeddingTable] = (), *,
+                 max_shard_bytes: int = 1 << 22, retain: int = 2,
+                 buckets_per_line: int = hc.CPU_BUCKETS_PER_LINE,
+                 version: int = 1):
+        self.max_shard_bytes = max_shard_bytes
+        self.buckets_per_line = buckets_per_line
+        self.window = VersionWindow(retain)
+        self.stats = EngineStats()
+        if scalars or embeddings:
+            self.publish(version, scalars, embeddings)
+
+    # ------------------------------------------------------------------
+    # update subsystem face
+    # ------------------------------------------------------------------
+    def publish(self, version: int, scalars: Sequence[ScalarTable] = (),
+                embeddings: Sequence[EmbeddingTable] = ()) -> None:
+        """Build + install one consistent version of the full table set.
+        The previous ``retain-1`` builds stay queryable, so batches pinned
+        mid-rollout still succeed (paper Fig 7/8)."""
+        build = _FusedBuild(scalars, embeddings,
+                            max_shard_bytes=self.max_shard_bytes,
+                            buckets_per_line=self.buckets_per_line)
+        self.window.publish(version, build)
+
+    @property
+    def versions(self) -> list[int]:
+        return self.window.versions
+
+    @property
+    def latest_version(self) -> int:
+        return self.window.latest
+
+    @property
+    def table_names(self) -> list[str]:
+        """Tables of the latest published version."""
+        ok, _, build = self.window.get(None)
+        return sorted(build.table_kinds) if ok else []
+
+    # ------------------------------------------------------------------
+    # query pipeline stages
+    # ------------------------------------------------------------------
+    def _pin(self, version: Optional[int],
+             strict: bool = False) -> tuple[int, _FusedBuild]:
+        ok, v, build = self.window.get(version)
+        if not ok:
+            if v < 0:
+                raise RuntimeError("engine has no published version")
+            if strict:
+                raise VersionEvictedError(
+                    f"version {version} not retained; have {self.versions}")
+            # NACK: requested version evicted from the window — re-pin to
+            # the newest retained version (protocol metadata in the reply)
+            self.stats.repins += 1
+            ok, v, build = self.window.get(v)
+            assert ok
+        return v, build
+
+    def _stage(self, request: dict[str, np.ndarray],
+               version: Optional[int] = None,
+               strict: bool = False) -> _StagedBatch:
+        """Host half: dedup every table's keys, route uniques to shards."""
+        v, build = self._pin(version, strict)
+        scalars: list[_StagedScalar] = []
+        embeddings: list[_StagedEmbedding] = []
+        requested = deviceside = 0
+        for name, keys in request.items():
+            kind = build.table_kinds.get(name)
+            if kind is None:
+                raise KeyError(
+                    f"unknown table {name!r}; version {v} serves "
+                    f"{sorted(build.table_kinds)}")
+            keys = np.asarray(keys, dtype=np.uint64).ravel()
+            uniq, inverse = np.unique(keys, return_inverse=True)
+            requested += len(keys)
+            deviceside += len(uniq)
+            if kind == "scalar":
+                owners = build.plan.shard_of_np(uniq)
+                shard_pos = [np.flatnonzero(owners == s)
+                             for s in range(build.n_shards)]
+                hi, lo = hc.key_split_np(uniq)
+                scalars.append(_StagedScalar(
+                    name=name, build_index=build.scalar_index[name],
+                    n_request=len(keys), uniq_hi=hi, uniq_lo=lo,
+                    inverse=inverse, owners=owners, shard_pos=shard_pos))
+            else:
+                embeddings.append(_StagedEmbedding(
+                    name=name, n_request=len(keys), uniq=uniq,
+                    inverse=inverse))
+        return _StagedBatch(version=v, build=build, scalars=scalars,
+                            embeddings=embeddings, keys_requested=requested,
+                            keys_deviceside=deviceside)
+
+    def _launch(self, staged: _StagedBatch) -> _InflightBatch:
+        """Device half: one fused launch per shard covering every scalar
+        table with keys there.  Returns without blocking on results."""
+        build = staged.build
+        device_out: dict[int, list] = {}
+        launches = 0
+        by_build_idx = {st.build_index: st for st in staged.scalars}
+        for s in range(build.n_shards):
+            if not any(len(st.shard_pos[s]) for st in staged.scalars):
+                continue
+            # the fused program's signature is the build's scalar order;
+            # tables the request didn't touch get a minimal dummy tile so
+            # a subset (or reordered) request never misindexes the outputs
+            arrays_list, q_his, q_los = [], [], []
+            for bi in range(len(build.scalar_names)):
+                st = by_build_idx.get(bi)
+                pos = st.shard_pos[s] if st is not None else ()
+                pad = _pad_len(len(pos))
+                qh = np.zeros(pad, dtype=np.uint32)
+                ql = np.zeros(pad, dtype=np.uint32)
+                if st is not None and len(pos):
+                    qh[:len(pos)] = st.uniq_hi[pos]
+                    ql[:len(pos)] = st.uniq_lo[pos]
+                arrays_list.append(build.shard_arrays[s][bi])
+                q_his.append(jnp.asarray(qh))
+                q_los.append(jnp.asarray(ql))
+            device_out[s] = build._fused_fns[s](arrays_list, q_his, q_los)
+            launches += 1
+        return _InflightBatch(staged=staged, device_out=device_out,
+                              launches=launches)
+
+    def _finish(self, inflight: _InflightBatch) -> QueryResult:
+        """Block on device results; inverse-gather back to request order;
+        resolve embedding tables through their hybrid stores."""
+        staged = inflight.staged
+        build = staged.build
+        tables: dict[str, TableResult] = {}
+        hits = 0
+        for st in staged.scalars:
+            found_u = np.zeros(st.owners.shape[0], dtype=bool)
+            payload_u = np.zeros(st.owners.shape[0], dtype=np.uint64)
+            for s, outs in inflight.device_out.items():
+                pos = st.shard_pos[s]
+                if not len(pos):
+                    continue
+                f, p_hi, p_lo = outs[st.build_index]
+                f = np.asarray(f)[:len(pos)].astype(bool)
+                p = (np.asarray(p_hi, dtype=np.uint64)[:len(pos)]
+                     << np.uint64(32)) | \
+                    np.asarray(p_lo, dtype=np.uint64)[:len(pos)]
+                found_u[pos] = f
+                payload_u[pos] = p
+            found = found_u[st.inverse]
+            payloads = payload_u[st.inverse]
+            hits += int(found.sum())
+            tables[st.name] = TableResult(found=found, payloads=payloads)
+        for se in staged.embeddings:
+            store = build.stores[se.name]
+            found_u, vals_u = store.get_batch(se.uniq)
+            found = found_u[se.inverse]
+            values = vals_u[se.inverse]
+            hits += int(found.sum())
+            tables[se.name] = TableResult(found=found, values=values)
+        self.stats.batches += 1
+        self.stats.keys_requested += staged.keys_requested
+        self.stats.keys_deviceside += staged.keys_deviceside
+        self.stats.hits += hits
+        self.stats.launches += inflight.launches
+        self.stats.versions_served.add(staged.version)
+        return QueryResult(version=staged.version, tables=tables)
+
+    # ------------------------------------------------------------------
+    # public query faces
+    # ------------------------------------------------------------------
+    def query(self, request: dict[str, np.ndarray],
+              version: Optional[int] = None,
+              strict: bool = False) -> QueryResult:
+        """One fused batch query: ``{table_name: keys}`` -> per-table
+        results, all answered from a single pinned version.  ``strict=True``
+        surfaces the NACK (VersionEvictedError) instead of re-pinning."""
+        return self._finish(self._launch(
+            self._stage(request, version, strict)))
+
+    def query_stream(self, requests: Iterable[dict[str, np.ndarray]],
+                     version: Optional[int] = None
+                     ) -> Iterator[QueryResult]:
+        """Double-buffered pipeline: while the device resolves batch i, the
+        host stages (dedups + routes) batch i+1.  Yields results in order."""
+        it = iter(requests)
+        try:
+            first = next(it)
+        except StopIteration:
+            return
+        inflight = self._launch(self._stage(first, version))
+        for req in it:
+            staged = self._stage(req, version)   # overlaps device batch i
+            yield self._finish(inflight)
+            inflight = self._launch(staged)
+        yield self._finish(inflight)
+
+    # ------------------------------------------------------------------
+    def maintain(self) -> None:
+        """Hybrid-store eviction tick for every embedding table of the
+        latest version (the async Update Subsystem pass)."""
+        ok, _, build = self.window.get(None)
+        if ok:
+            for store in build.stores.values():
+                store.maintain()

@@ -555,6 +555,34 @@ class _Builder:
         return int(gaps.max()) + 1
 
 
+def build_grow(
+    keys: np.ndarray,
+    payloads: np.ndarray,
+    *,
+    variant: str = "neighborhash",
+    load_factor: float = 0.8,
+    buckets_per_line: int = hc.CPU_BUCKETS_PER_LINE,
+    growth: float = 1.5,
+    max_attempts: int = 8,
+) -> HashTable:
+    """``build`` with the caller-side growth loop the BuildError contract
+    expects: on a placement failure (e.g. no free bucket within the 12-bit
+    inline offset range) retry at ``growth``x capacity until it fits."""
+    n = len(keys)
+    capacity = max(int(np.ceil(n / load_factor)), 8)
+    last: Optional[BuildError] = None
+    for _ in range(max_attempts):
+        try:
+            return build(keys, payloads, variant=variant, capacity=capacity,
+                         buckets_per_line=buckets_per_line)
+        except BuildError as e:
+            last = e
+            capacity = int(capacity * growth) + 1
+    raise BuildError(
+        f"could not place {n} keys after {max_attempts} growth attempts "
+        f"(last capacity {capacity})") from last
+
+
 # ---------------------------------------------------------------------------
 # convenience
 # ---------------------------------------------------------------------------

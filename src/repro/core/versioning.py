@@ -30,6 +30,53 @@ class VersionStrength:
     WEAK = "weak"
 
 
+class VersionWindow:
+    """Retention window over published states — the one place the
+    strong-version rule lives.
+
+    A *state* is whatever a publisher deems one consistent version: a single
+    shard's Generation (ShardReplica) or a whole fused multi-table build
+    (core/engine.MultiTableEngine).  ``get(v)`` implements the protocol's
+    reply semantics: ok=False is the NACK (requested version not retained),
+    with the retained versions available so the caller can re-pin."""
+
+    def __init__(self, retain: int = 2):
+        if retain < 1:
+            raise ValueError("retain must be >= 1")
+        self.retain = retain
+        self._states: dict[int, object] = {}
+
+    @property
+    def versions(self) -> list[int]:
+        return sorted(self._states)
+
+    @property
+    def latest(self) -> int:
+        return max(self._states) if self._states else -1
+
+    def publish(self, version: int, state) -> None:
+        self._states[version] = state
+        while len(self._states) > self.retain:
+            del self._states[min(self._states)]
+
+    def reset(self, versions_to_states: dict) -> None:
+        """Replace the whole window (node repair / replica revive); the
+        retain bound still applies."""
+        self._states = {int(v): s for v, s in versions_to_states.items()}
+        while len(self._states) > self.retain:
+            del self._states[min(self._states)]
+
+    def get(self, version: Optional[int] = None
+            ) -> tuple[bool, int, Optional[object]]:
+        """-> (ok, version_served, state).  ``version=None`` pins latest."""
+        if not self._states:
+            return False, -1, None
+        v = self.latest if version is None else version
+        if v not in self._states:
+            return False, self.latest, None      # NACK + best retained hint
+        return True, v, self._states[v]
+
+
 @dataclasses.dataclass
 class Generation:
     """One published version of one shard's data."""
@@ -53,21 +100,19 @@ class ShardReplica:
         self.shard_id = shard_id
         self.replica_id = replica_id
         self.retain = retain
-        self.generations: dict[int, Generation] = {}
+        self.window = VersionWindow(retain)
         self.serving = True
 
     @property
     def versions(self) -> list[int]:
-        return sorted(self.generations)
+        return self.window.versions
 
     @property
     def latest(self) -> int:
-        return max(self.generations) if self.generations else -1
+        return self.window.latest
 
     def publish(self, gen: Generation):
-        self.generations[gen.version] = gen
-        while len(self.generations) > self.retain:
-            del self.generations[min(self.generations)]
+        self.window.publish(gen.version, gen)
 
     def query(self, keys: np.ndarray, version: Optional[int]
               ) -> tuple[bool, int, Optional[np.ndarray], Optional[np.ndarray]]:
@@ -76,12 +121,11 @@ class ShardReplica:
         ok=False is the NACK: requested version not retained (the caller reads
         .versions from the reply and re-pins) — metadata-in-protocol, not via
         the naming service."""
-        if not self.serving or not self.generations:
+        if not self.serving:
             return False, -1, None, None
-        v = self.latest if version is None else version
-        if v not in self.generations:
-            return False, self.latest, None, None
-        gen = self.generations[v]
+        ok, v, gen = self.window.get(version)
+        if not ok:
+            return False, v, None, None
         idx = gen.index()
         found = np.zeros(len(keys), dtype=bool)
         out = np.zeros((len(keys),) + gen.values.shape[1:],

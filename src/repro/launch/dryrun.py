@@ -22,10 +22,12 @@ import sys
 import time
 import traceback
 
+from repro.core import compat
+
 
 def _compile_bundle(mesh, bundle):
     import jax
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jitted = jax.jit(bundle.fn,
                          in_shardings=bundle.in_shardings,
                          out_shardings=bundle.out_shardings)
@@ -36,10 +38,10 @@ def _compile_bundle(mesh, bundle):
 
 def _measure(compiled) -> dict:
     from repro.roofline import analysis
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     return {
         "memory": analysis.memory_dict(compiled.memory_analysis()),
-        "cost": {k: float(v) for k, v in (cost or {}).items()
+        "cost": {k: float(v) for k, v in cost.items()
                  if isinstance(v, (int, float)) and
                  ("flops" in k or "bytes" in k or
                   "utilization" in k.lower() or k.startswith("optimal"))},

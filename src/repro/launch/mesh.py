@@ -8,20 +8,18 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (v5e pod).  Multi-pod: 2 pods x 256."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Whatever devices exist, as (data, model) with model=1 — smoke tests
     and single-host examples."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return compat.make_mesh((n, 1), ("data", "model"))

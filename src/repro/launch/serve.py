@@ -9,6 +9,8 @@ import argparse
 import time
 
 import jax
+
+from repro.core import compat
 import numpy as np
 
 from repro.configs import registry
@@ -35,7 +37,7 @@ def main():
                  out_shardings=bundle.out_shardings)
     base_args = materialize_bundle(bundle, seed=0)
     lat = []
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = jax.block_until_ready(fn(*base_args))       # warmup/compile
         for i in range(args.requests):
             req = materialize(bundle.args[1:], seed=i + 1,

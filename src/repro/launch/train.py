@@ -12,6 +12,8 @@ import argparse
 import time
 
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -84,7 +86,7 @@ def main():
     fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                  out_shardings=bundle.out_shardings)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for i in range(args.steps):
             batch = _real_batch(spec, cfg, cell, rng)
             params, opt_state, step, metrics = fn(params, opt_state, step,

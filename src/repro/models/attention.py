@@ -232,7 +232,7 @@ def _sharded_cache_attn(mesh, mi: MeshInfo, qg, cache: dict, k_new, v_new,
                         pos):
     """Dispatch to the shard_map flash-decode when the cache can be
     S-sharded over 'model'; plain einsum path otherwise."""
-    from jax import shard_map
+    from repro.core.compat import shard_map
     b, smax = cache["k"].shape[0], cache["k"].shape[1]
     n_shards = mi.sizes.get("model", 1)
     dp = mi.dp
@@ -383,7 +383,7 @@ def mla_decode(params: dict, cfg: MLAConfig, x: jnp.ndarray, cache: dict,
     The nope-score uses the absorbed form q_nope·W_uk^T·ckv so the per-head
     K never materializes for the whole cache; S-sharded via shard_map
     (§Perf A5)."""
-    from jax import shard_map
+    from repro.core.compat import shard_map
     b, _, d = x.shape
     h = cfg.n_heads
     smax = cache["ckv"].shape[1]

@@ -81,7 +81,7 @@ def embed_bag_psum(table: jnp.ndarray, ids: jnp.ndarray, mode: str, mesh,
     one psum of [B, D] in ``comm_dtype`` combines — collective bytes are
     B·D·sizeof(comm_dtype), independent of bag length, and halved vs the
     partitioner's fp32 all-reduce.  Serving path (no grad)."""
-    from jax import shard_map
+    from repro.core.compat import shard_map
     n_shards = mi.sizes.get("model", 1)
     v, d = table.shape
     if n_shards <= 1 or v % n_shards or mesh is None:
@@ -114,7 +114,7 @@ def embed_bag_psum(table: jnp.ndarray, ids: jnp.ndarray, mode: str, mesh,
 def embed_lookup_a2a(table: jnp.ndarray, ids: jnp.ndarray, mesh,
                      mi: MeshInfo, capacity_factor: float = 1.5
                      ) -> jnp.ndarray:
-    from jax import shard_map
+    from repro.core.compat import shard_map
     from repro.core.distributed import (route_by_owner, scatter_to_buffers,
                                         gather_from_buffers)
     n_shards = mi.sizes.get("model", 1)

@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.core.compat import shard_map
 
 from repro.core.distributed import route_by_owner
 from repro.models import common as cm

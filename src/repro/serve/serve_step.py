@@ -1,9 +1,18 @@
 """Serving entry points per family — what `decode_*` / `serve_*` /
-`retrieval_*` shape cells lower."""
+`retrieval_*` shape cells lower.
+
+The recsys path can serve its feature columns out of a
+``core.engine.MultiTableEngine``: one fused, deduplicated batch query
+resolves every attribute/embedding table the request touches before the
+jitted scoring step runs (paper Fig 2's query side in front of the model).
+"""
 from __future__ import annotations
+
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import common as cm
 from repro.models import lm as lm_mod
@@ -25,11 +34,58 @@ def lm_prefill_fn(cfg, mesh, mi):
     return step
 
 
-def recsys_score_fn(cfg, mesh, mi, lookup_impl: str = "xla"):
+def recsys_score_fn(cfg, mesh, mi, lookup_impl: str = "xla",
+                    feature_engine=None,
+                    feature_fields: Optional[Sequence[tuple]] = None):
+    """Scoring step; with ``feature_engine`` (a MultiTableEngine) the step
+    first resolves ``feature_fields`` — ``(table_name, batch_field)`` pairs —
+    in ONE fused batch query and splices the returned float32 rows into the
+    batch's dense columns before the model runs."""
     def step(params, batch):
         return rec_mod.recsys_score(params, cfg, batch, mi, mesh,
                                     lookup_impl)
-    return step
+
+    if feature_engine is None:
+        return step
+
+    fields = list(feature_fields or ())
+    if not fields:
+        raise ValueError("feature_engine given but no feature_fields")
+    names = [t for t, _ in fields]
+    if len(set(names)) != len(names):
+        raise ValueError("duplicate table names in feature_fields: one "
+                         "fused request carries one key set per table")
+
+    def step_with_store(params, batch):
+        n_rows = len(np.asarray(batch["dense"]))
+        request = {}
+        for table, field in fields:
+            ids = np.asarray(batch[field])
+            if ids.ndim != 1 or len(ids) != n_rows:
+                raise ValueError(
+                    f"feature field {field!r} must be 1-D of length "
+                    f"{n_rows} (one key per example), got {ids.shape}")
+            request[table] = ids.astype(np.uint64)
+        res = feature_engine.query(request)      # one fused launch, pinned
+        cols = []
+        for table, _field in fields:
+            tr = res[table]
+            if tr.values is not None:            # embedding: float32 rows
+                rows = np.ascontiguousarray(tr.values).view(np.float32)
+                rows = rows.reshape(len(tr.found), -1)
+            else:                                # scalar: payload column
+                rows = tr.payloads.astype(np.float32)[:, None]
+            rows = rows * tr.found[:, None]      # misses contribute zeros
+            cols.append(rows)
+        feats = np.concatenate(cols, axis=-1)
+        dense = np.array(batch["dense"])
+        d = min(feats.shape[1], dense.shape[1])
+        dense[:, :d] = feats[:, :d]
+        batch = dict(batch)
+        batch["dense"] = jnp.asarray(dense)
+        return step(params, batch)
+
+    return step_with_store
 
 
 def retrieval_fn(cfg, mesh, mi, top_k: int = 100):

@@ -1,0 +1,16 @@
+"""Shared test configuration: TPU-only paths skip (not error) off-TPU."""
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:                       # noqa: BLE001
+        backend = "none"
+    if backend == "tpu":
+        return
+    skip = pytest.mark.skip(reason=f"needs TPU backend (have {backend!r})")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip)

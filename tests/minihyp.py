@@ -1,0 +1,132 @@
+"""Deterministic stand-in for the slice of `hypothesis` this suite uses.
+
+The container image does not ship hypothesis and nothing may be installed, so
+test modules import it as
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from minihyp import given, settings, strategies as st
+
+Semantics: `@given` runs the test body once per example; examples are the
+cartesian boundary values of every strategy first (capped), then pseudo-random
+draws seeded from the test's qualified name, so runs are reproducible without
+a database.  `@settings(max_examples=...)` is honored; all other settings
+knobs are accepted and ignored.
+"""
+from __future__ import annotations
+
+import inspect
+import itertools
+import random
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+_MAX_EDGE_COMBOS = 8
+
+
+class Strategy:
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self._edges = list(edges)
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def edges(self) -> list:
+        return list(self._edges)
+
+    def filter(self, pred):
+        base = self._draw
+
+        def draw(rng):
+            for _ in range(10_000):
+                v = base(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("minihyp: filter predicate rejected "
+                               "10000 consecutive draws")
+
+        return Strategy(draw, [e for e in self._edges if pred(e)])
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)),
+                        [fn(e) for e in self._edges])
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    [min_value, max_value])
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value),
+                    [min_value, max_value])
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))],
+                    elements)
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5, [False, True])
+
+
+def lists(elem: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        return [elem.draw(rng) for _ in range(k)]
+
+    return Strategy(draw, [[]] if min_size == 0 else [])
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from,
+    booleans=booleans, lists=lists)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._minihyp_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strats: Strategy):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        kept = params[:len(params) - len(strats)]
+        gen_names = [p.name for p in params[len(params) - len(strats):]]
+
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(fn, "_minihyp_settings", None)
+                   or getattr(wrapper, "_minihyp_settings", None)
+                   or {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            n = cfg["max_examples"]
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            examples: list[tuple] = []
+            edge_lists = [s.edges() or [None] for s in strats]
+            for combo in itertools.islice(itertools.product(*edge_lists),
+                                          min(_MAX_EDGE_COMBOS, n)):
+                examples.append(tuple(
+                    s.draw(rng) if c is None else c
+                    for c, s in zip(combo, strats)))
+            while len(examples) < n:
+                examples.append(tuple(s.draw(rng) for s in strats))
+            for ex in examples[:n]:
+                fn(*args, **kwargs, **dict(zip(gen_names, ex)))
+
+        # pytest must see only the fixture params, not the generated ones
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -2,6 +2,8 @@
 (arch × shape) cell instantiates a REDUCED same-family config and runs one
 real forward/train step on CPU, asserting output shapes and finiteness."""
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -32,7 +34,7 @@ def _finite(tree) -> bool:
 @pytest.mark.parametrize("arch,shape", ALL_CELLS,
                          ids=[f"{a}-{s}" for a, s in ALL_CELLS])
 def test_smoke_cell(local_mesh, arch, shape):
-    with jax.set_mesh(local_mesh):
+    with compat.set_mesh(local_mesh):
         bundle = cells_mod.build_cell(arch, shape, local_mesh, smoke=True)
         args = materialize_bundle(bundle, seed=0)
         out = bundle.fn(*args)

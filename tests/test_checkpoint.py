@@ -3,6 +3,8 @@ convergence of small real models (end-to-end substrate checks)."""
 import os
 
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -74,7 +76,7 @@ def test_checkpoint_restart_resumes_training(tmp_path):
                  synthetic.recsys_batch(r, cfg, 32).items()}
                 for _ in range(n)]
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         # uninterrupted: 6 steps
         p, s, st = params0, opt.init_opt_state(params0, ocfg), jnp.int32(0)
         ref_losses = []
@@ -114,7 +116,7 @@ def test_training_reduces_loss(arch):
              synthetic.recsys_batch(rng, cfg, 64).items()}
     losses = []
     st = jnp.int32(0)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for i in range(40):
             params, state, st, m = step_fn(params, state, st, batch)
             losses.append(float(m["loss"]))

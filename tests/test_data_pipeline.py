@@ -1,6 +1,8 @@
 """Data pipeline: neighbour sampler correctness, synthetic batch contracts,
 and a tiny-LM convergence check."""
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -62,7 +64,7 @@ class TestSynthetic:
         mesh = mesh_mod.make_local_mesh()
         mi = cm.MeshInfo.from_mesh(mesh)
         params, _ = cm.unbox(rec_mod.recsys_init(jax.random.key(0), cfg))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             loss, _ = rec_mod.recsys_loss(
                 params, cfg, {k: jnp.asarray(v) for k, v in b.items()}, mi)
         assert np.isfinite(float(loss))
@@ -89,7 +91,7 @@ def test_tiny_lm_overfits():
         np.random.default_rng(0).integers(0, 64, (2, 16)), jnp.int32)}
     losses = []
     st = jnp.int32(0)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for _ in range(30):
             params, state, st, m = fn(params, state, st, batch)
             losses.append(float(m["loss"]))

@@ -1,14 +1,20 @@
 """Distributed batch-query: routing properties + shard_map lookup on a real
 multi-device (host-platform) mesh via subprocess."""
+import os
 import subprocess
 import sys
 import textwrap
 
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # image has no hypothesis: use the shim
+    from minihyp import given, settings, strategies as st
 
 from repro.core import distributed as dist
 from repro.core import hashcore as hc
@@ -67,8 +73,7 @@ class TestShardedTables:
         """axis size 1: collectives are identities, result == host lookup."""
         keys, payloads = nh.random_kv(500, seed=2)
         st_ = dist.build_sharded(keys, payloads, n_shards=1)
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
         rng = np.random.default_rng(0)
         q = np.concatenate([keys[rng.choice(len(keys), 100)],
                             rng.integers(2**62, 2**63,
@@ -77,7 +82,7 @@ class TestShardedTables:
         for scheme in ("replicated", "a2a"):
             fn = dist.make_distributed_lookup(mesh, st_, axis_name="model",
                                               scheme=scheme)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 out = fn(st_.device_arrays(), jnp.asarray(qh),
                          jnp.asarray(ql))
             found = np.asarray(out[0]).astype(bool)
@@ -89,13 +94,13 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, numpy as np, jax.numpy as jnp
+    from repro.core import compat
     from repro.core import distributed as dist, hashcore as hc
     from repro.core import neighborhash as nh
 
     keys, payloads = nh.random_kv(4000, seed=3)
     st_ = dist.build_sharded(keys, payloads, n_shards=8)
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 8), ("data", "model"))
     rng = np.random.default_rng(1)
     q = np.concatenate([keys[rng.choice(len(keys), 1000)],
                         rng.integers(2**62, 2**63, 24).astype(np.uint64)])
@@ -107,7 +112,7 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     for scheme in ("replicated", "a2a"):
         fn = dist.make_distributed_lookup(mesh, st_, axis_name="model",
                                           scheme=scheme)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             out = fn(st_.device_arrays(), jnp.asarray(qh), jnp.asarray(ql))
         found = np.asarray(out[0]).astype(bool)
         p = (np.asarray(out[1], dtype=np.uint64) << np.uint64(32)) | \\
@@ -125,5 +130,6 @@ def test_distributed_lookup_8_devices():
     r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
                        capture_output=True, text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert "MULTIDEV_OK" in r.stdout, r.stderr[-3000:]

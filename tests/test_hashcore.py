@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # image has no hypothesis: use the shim
+    from minihyp import given, settings, strategies as st
 
 from repro.core import hashcore as hc
 

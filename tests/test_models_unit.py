@@ -1,6 +1,8 @@
 """Model-level unit checks: attention equivalences, MoE dispatch math,
 prefill/decode agreement, EmbeddingBag semantics."""
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -49,7 +51,7 @@ def test_gqa_prefill_decode_agree(mesh, mi):
     params, _ = cm.unbox(lm_mod.lm_init(jax.random.key(0), cfg))
     tokens = jnp.asarray(np.random.default_rng(1).integers(0, 64, (1, 9)),
                          jnp.int32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         h, _ = lm_mod.lm_backbone(params, cfg, tokens, mesh, mi)
         full_logits = lm_mod.lm_logits(params, cfg, h)      # [1, 9, V]
         # decode token-by-token
@@ -75,7 +77,7 @@ def test_mla_prefill_decode_agree(mesh, mi):
     params, _ = cm.unbox(lm_mod.lm_init(jax.random.key(0), cfg))
     tokens = jnp.asarray(np.random.default_rng(2).integers(0, 64, (1, 7)),
                          jnp.int32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         h, _ = lm_mod.lm_backbone(params, cfg, tokens, mesh, mi)
         full_logits = lm_mod.lm_logits(params, cfg, h)
         shapes, _ = lm_mod.make_decode_cache_specs(cfg, 1, 8)
@@ -99,7 +101,7 @@ def test_moe_selects_topk_and_weights(mesh, mi):
     params, _ = cm.unbox(boxed)
     x = jnp.asarray(np.random.default_rng(4).normal(size=(2, 4, 16)),
                     jnp.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         y, aux, dropped = moe_mod.moe_apply(params, cfg, x, mesh, mi)
     assert float(dropped) == 0.0
     # manual dense reference
@@ -128,7 +130,7 @@ def test_moe_capacity_drops_are_reported(mesh, mi):
                                           jnp.float32))
     x = jnp.asarray(np.random.default_rng(6).normal(size=(1, 16, 8)),
                     jnp.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         _, _, dropped = moe_mod.moe_apply(params, cfg, x, mesh, mi)
     assert float(dropped) > 0       # silent caps forbidden — must surface
 

@@ -1,0 +1,192 @@
+"""Differential property tests: every ``neighborhash.VARIANTS`` builder vs. a
+plain-dict oracle, on random AND adversarial key sets (colliding homes,
+near-full load, 12-bit offset overflow forcing capacity growth).
+
+Conventions (see ROADMAP "Testing"): the oracle for any hash variant is a
+python dict built with last-write-wins semantics — duplicate keys in the
+insert stream are updates, exactly like the paper's Update Subsystem.  Every
+variant must agree with the dict on hits, misses and payloads, host-side and
+device-side; relocating variants must additionally keep every chain
+home-pure."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # image has no hypothesis: use the shim
+    from minihyp import given, settings, strategies as st
+
+from repro.core import hashcore as hc
+from repro.core import lookup as lk
+from repro.core import neighborhash as nh
+
+RELOCATING = ("perfect_cellar", "linear_lodger", "neighbor_probing",
+              "neighborhash")
+
+
+# ---------------------------------------------------------------------------
+# oracle + invariant helpers
+# ---------------------------------------------------------------------------
+def dict_oracle(keys: np.ndarray, payloads: np.ndarray) -> dict:
+    """Last-write-wins reference (duplicate key == update)."""
+    return {int(k): int(p) for k, p in zip(keys, payloads)}
+
+
+def assert_matches_oracle(table: nh.HashTable, oracle: dict,
+                          misses: np.ndarray, device: bool = True):
+    keys = np.fromiter(oracle.keys(), dtype=np.uint64, count=len(oracle))
+    want = np.fromiter(oracle.values(), dtype=np.uint64, count=len(oracle))
+    f, p = table.lookup_host(keys)
+    assert f.all(), "oracle key missing from table"
+    assert (p == want).all(), "payload mismatch vs dict oracle"
+    fm, _ = table.lookup_host(misses)
+    assert not fm.any(), "phantom hit for key never inserted"
+    if device and table.variant != "linear":
+        q = np.concatenate([keys, misses])
+        fd, pd = lk.lookup_table(table, q)
+        assert (np.asarray(fd)[:len(keys)] == True).all()  # noqa: E712
+        assert not np.asarray(fd)[len(keys):].any()
+        assert (pd[:len(keys)] == want).all()
+
+
+def assert_home_pure(table: nh.HashTable):
+    """Every chain contains exactly the records homed at its head (the
+    lodger-relocation invariant the paper's APCL claim rests on)."""
+    occupied = np.flatnonzero(table.key_hi != np.uint32(hc.EMPTY_HI))
+    reached = set()
+    for head in occupied:
+        head = int(head)
+        khi, klo = int(table.key_hi[head]), int(table.key_lo[head])
+        if hc.bucket_of_int(khi, klo, table.home_capacity) != head:
+            continue                     # lodger: no chain rooted here
+        idx, steps = head, 0
+        while idx >= 0:
+            khi = int(table.key_hi[idx])
+            klo = int(table.key_lo[idx])
+            assert hc.bucket_of_int(khi, klo, table.home_capacity) == head, \
+                f"chain rooted at {head} contains foreign key (bucket {idx})"
+            reached.add(idx)
+            idx = table._next_of(idx)
+            steps += 1
+            assert steps <= table.capacity, "cycle in chain"
+    assert reached == {int(i) for i in occupied}, \
+        "some occupied bucket unreachable from its home chain"
+
+
+# ---------------------------------------------------------------------------
+# adversarial key-set constructions
+# ---------------------------------------------------------------------------
+def keys_homed_in(window: int, count: int, cap: int,
+                  start: int = 1) -> np.ndarray:
+    """``count`` uint64 keys whose hash-home < ``window`` for home range
+    ``cap`` (colliding-home construction, vectorized search)."""
+    out, k = [], start
+    while len(out) < count:
+        cand = np.arange(k, k + 200_000, dtype=np.uint64)
+        hi, lo = hc.key_split_np(cand)
+        homes = hc.bucket_of_np(hi, lo, cap)
+        out.extend(cand[homes < window].tolist())
+        k += 200_000
+    return np.array(out[:count], dtype=np.uint64)
+
+
+def keys_with_home(home: int, count: int, cap: int,
+                   start: int = 1) -> np.ndarray:
+    """``count`` distinct keys all hashing to bucket ``home`` exactly."""
+    out, k = [], start
+    while len(out) < count:
+        cand = np.arange(k, k + 500_000, dtype=np.uint64)
+        hi, lo = hc.key_split_np(cand)
+        homes = hc.bucket_of_np(hi, lo, cap)
+        out.extend(cand[homes == home].tolist())
+        k += 500_000
+    return np.array(out[:count], dtype=np.uint64)
+
+
+def one_key_per_home(cap: int, lo_bucket: int, hi_bucket: int) -> np.ndarray:
+    """One key per home bucket in [lo_bucket, hi_bucket) — a dense occupied
+    band with no chains."""
+    cand = np.arange(1, 3_000_000, dtype=np.uint64)
+    hi, lo = hc.key_split_np(cand)
+    homes = hc.bucket_of_np(hi, lo, cap)
+    _, first = np.unique(homes, return_index=True)
+    per_home = {int(homes[i]): int(cand[i]) for i in first}
+    return np.array([per_home[h] for h in range(lo_bucket, hi_bucket)
+                     if h in per_home], dtype=np.uint64)
+
+
+MISSES = np.arange(2**62, 2**62 + 200, dtype=np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+@given(st.integers(0, 2**31 - 1), st.integers(50, 1200),
+       st.floats(0.4, 0.9))
+@settings(max_examples=8)
+def test_random_sets_match_dict_oracle(variant, seed, n, lf):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(1, 2**63, n).astype(np.uint64)
+    # inject duplicates: ~20% of inserts are updates of earlier keys
+    dup = rng.integers(0, n, n // 5)
+    keys[dup[: len(dup) // 2]] = keys[dup[len(dup) // 2:]]
+    payloads = rng.integers(0, hc.PAYLOAD_MASK, n).astype(np.uint64)
+    t = nh.build_grow(keys, payloads, variant=variant, load_factor=lf)
+    assert_matches_oracle(t, dict_oracle(keys, payloads), MISSES)
+    if variant in RELOCATING:
+        assert_home_pure(t)
+
+
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+def test_colliding_homes_match_dict_oracle(variant):
+    """All keys hash into a 16-bucket window: worst-case chains/probe runs."""
+    cap = 4096
+    keys = keys_homed_in(16, 600, cap)
+    payloads = np.arange(1, 601, dtype=np.uint64)
+    t = nh.build_grow(keys, payloads, variant=variant, load_factor=0.5)
+    # adversarial misses: same homes, never inserted (full chain traversal)
+    misses = keys_homed_in(16, 100, cap, start=int(keys.max()) + 1)
+    misses = misses[~np.isin(misses, keys)]
+    assert_matches_oracle(t, dict_oracle(keys, payloads), misses)
+    if variant in RELOCATING:
+        assert_home_pure(t)
+
+
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+def test_near_full_load_matches_dict_oracle(variant):
+    """Load factor 0.98: free-slot search and relocation under pressure."""
+    keys, payloads = nh.random_kv(2000, seed=13)
+    t = nh.build_grow(keys, payloads, variant=variant, load_factor=0.98)
+    assert t.stats.load_factor > 0.9
+    assert_matches_oracle(t, dict_oracle(keys, payloads), MISSES)
+    if variant in RELOCATING:
+        assert_home_pure(t)
+
+
+def test_offset_overflow_forces_growth():
+    """A dense occupied band around one hot home bucket leaves no free slot
+    within ±2047: the inline 12-bit offset cannot encode the append, build()
+    must raise BuildError, and build_grow() must recover and still match the
+    oracle (the capacity-growth contract)."""
+    cap = 8192
+    band = one_key_per_home(cap, 500, 7200)
+    # hot chain in the middle of the band: nearest free bucket is ~3000 away
+    hot = keys_with_home(4000, 8, cap)
+    keys = np.concatenate([band, hot])
+    _, first = np.unique(keys, return_index=True)
+    keys = keys[np.sort(first)]               # keep stream order, no dups
+    payloads = np.arange(1, len(keys) + 1, dtype=np.uint64)
+    with pytest.raises(nh.BuildError):
+        nh.build(keys, payloads, variant="neighborhash", capacity=cap)
+    t = nh.build_grow(keys, payloads, variant="neighborhash")
+    assert t.capacity > cap * 0.9          # grew past the failing layout
+    assert_matches_oracle(t, dict_oracle(keys, payloads), MISSES)
+    assert_home_pure(t)
+
+
+def test_build_grow_gives_up_eventually():
+    with pytest.raises(ValueError):
+        # duplicate of reserved key is rejected before any growth loop
+        nh.build_grow(np.array([hc.EMPTY_KEY], np.uint64),
+                      np.array([0], np.uint64))

@@ -1,11 +1,14 @@
 """Optimization-path correctness (§Perf variants must equal baselines):
 sparse embedding training, a2a/psum16 serving lookups, grad accumulation,
 flash-decode.  Multi-device checks run in subprocesses (8 host devices)."""
+import os
 import subprocess
 import sys
 import textwrap
 
 import jax
+
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -43,7 +46,7 @@ def test_sparse_train_matches_dense(mesh, arch):
     if cfg.arch == "two_tower":
         for b in batches:
             b.pop("label", None)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         pd, sd, std = params, opt.init_opt_state(params, ocfg), jnp.int32(0)
         ps, ss, sts = params, opt.init_opt_state(params, ocfg), jnp.int32(0)
         first_dense = first_sparse = None
@@ -71,7 +74,7 @@ def test_grad_accumulation_equivalence(mesh):
     batch = {k: jnp.asarray(v) for k, v in
              synthetic.recsys_batch(np.random.default_rng(2), cfg,
                                     32).items()}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         f1 = ts.make_train_step(loss_fn, ocfg, accum_steps=1)
         f4 = ts.make_train_step(loss_fn, ocfg, accum_steps=4)
         s = opt.init_opt_state(params, ocfg)
@@ -87,14 +90,14 @@ SERVE_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, numpy as np, jax.numpy as jnp
+    from repro.core import compat
     from repro.models import embedding_service as es, common as cm
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     mi = cm.MeshInfo.from_mesh(mesh)
     rng = np.random.default_rng(0)
     table = jnp.asarray(rng.normal(size=(408, 12)).astype(np.float32))
     ids = jnp.asarray(rng.integers(-1, 408, size=(24, 7)), jnp.int32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         ref_rows = es.embed_lookup(table, ids, mi)
         a2a = es.embed_lookup_a2a(table, ids, mesh, mi)
         ref_bag = es.embed_bag(table, ids, None, "mean", mi)
@@ -111,7 +114,8 @@ def test_serving_lookup_paths_8dev():
     r = subprocess.run([sys.executable, "-c", SERVE_SCRIPT],
                        capture_output=True, text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert "SERVE_PATHS_OK" in r.stdout, r.stderr[-3000:]
 
 
@@ -119,17 +123,17 @@ FLASH_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, numpy as np, jax.numpy as jnp
+    from repro.core import compat
     from repro.launch import mesh as mesh_mod
     from repro.models import common as cm, lm as lm_mod
     from repro.configs import registry
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     mi = cm.MeshInfo.from_mesh(mesh)
     cfg = registry.get("qwen3-14b").smoke
     params, _ = cm.unbox(lm_mod.lm_init(jax.random.key(0), cfg))
     tokens = jnp.asarray(np.random.default_rng(1).integers(
         0, cfg.vocab, (2, 9)), jnp.int32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         h, _ = lm_mod.lm_backbone(params, cfg, tokens, mesh, mi)
         full_logits = lm_mod.lm_logits(params, cfg, h)
         shapes, _ = lm_mod.make_decode_cache_specs(cfg, 2, 16, mi)
@@ -154,5 +158,6 @@ def test_flash_decode_matches_prefill_8dev():
     r = subprocess.run([sys.executable, "-c", FLASH_SCRIPT],
                        capture_output=True, text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert "FLASH_DECODE_OK" in r.stdout, r.stderr[-3000:]

@@ -1,4 +1,5 @@
 """Delta publishing end-to-end + launcher (train/serve CLI) integration."""
+import os
 import subprocess
 import sys
 
@@ -62,9 +63,11 @@ def _run(mod, *args):
     return subprocess.run(
         [sys.executable, "-m", mod, *args],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["deepfm", "graphsage-reddit"])
 def test_train_launcher_smoke(arch):
     r = _run("repro.launch.train", "--arch", arch, "--smoke", "--steps", "3")
@@ -72,6 +75,7 @@ def test_train_launcher_smoke(arch):
     assert "done" in r.stdout
 
 
+@pytest.mark.slow
 def test_serve_launcher_smoke():
     r = _run("repro.launch.serve", "--arch", "deepfm", "--smoke",
              "--requests", "3")

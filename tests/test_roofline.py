@@ -1,6 +1,7 @@
 """Roofline analyzer: HLO shape parsing, collective accounting, and the
 empirical facts the methodology rests on (cost_analysis is per-device; scan
 bodies are counted once)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -9,6 +10,8 @@ import numpy as np
 import pytest
 
 from repro.roofline import analysis
+
+from repro.core import compat
 
 
 def test_shape_bytes():
@@ -70,21 +73,21 @@ VERIFY_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core import compat
 
-    mesh = jax.make_mesh((4,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((4,), ("d",))
     M = 256
 
     def mm(a, b):
         return a @ b
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         c = jax.jit(mm, in_shardings=(NamedSharding(mesh, P("d", None)),
                                       NamedSharding(mesh, P(None, None)))
                     ).lower(jax.ShapeDtypeStruct((M, M), jnp.float32),
                             jax.ShapeDtypeStruct((M, M), jnp.float32)
                             ).compile()
-    flops = c.cost_analysis()["flops"]
+    flops = compat.cost_analysis(c)["flops"]
     assert abs(flops - 2 * M**3 / 4) / (2 * M**3 / 4) < 0.05, flops
 
     def scanned(x):
@@ -95,7 +98,7 @@ VERIFY_SCRIPT = textwrap.dedent("""
 
     c2 = jax.jit(scanned).lower(
         jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
-    f2 = c2.cost_analysis()["flops"]
+    f2 = compat.cost_analysis(c2)["flops"]
     # counted less than the full 8-trip unroll (XLA may partially unroll
     # small scans on CPU; the point is the count is NOT trips x body, which
     # is the fact _fit_layers corrects for)
@@ -108,5 +111,6 @@ def test_cost_analysis_conventions():
     r = subprocess.run([sys.executable, "-c", VERIFY_SCRIPT],
                        capture_output=True, text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert "VERIFY_OK" in r.stdout, r.stderr[-2000:]

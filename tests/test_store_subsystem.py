@@ -1,7 +1,10 @@
 """Hybrid store, sharding, versioning, batch-query subsystem, cluster sim."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # image has no hypothesis: use the shim
+    from minihyp import given, settings, strategies as st
 
 from repro.core.hybrid_store import HybridKVStore, TIER_MASK
 from repro.core.batch_query import BatchQueryService
