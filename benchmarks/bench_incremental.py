@@ -1,0 +1,90 @@
+"""Delta publish vs full rebuild (ISSUE 2 acceptance: a 1%-of-rows delta
+must publish >= 10x faster than a full ``publish()`` rebuild of the same
+table set).
+
+The workload is the Update Subsystem's steady state: a trained table set is
+live, and a training tick ships payload updates for a small fraction of
+rows.  ``publish()`` rebuilds every table of every shard from scratch —
+O(total rows) — while ``publish_delta()`` copy-on-writes only the shards
+the delta touches and mutates O(delta) records in place.
+
+Rows:
+  incremental/full_publish      rebuild-everything baseline
+  incremental/delta_<frac>      publish_delta at that fraction of rows
+                                (derived: speedup vs full + shard sharing)
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_incremental.py
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.engine import EmbeddingTable, MultiTableEngine, ScalarTable
+
+
+def main(quick: bool = False) -> None:
+    n_item = 8_000 if quick else 40_000
+    n_cat = 2_000 if quick else 10_000
+    n_emb = 2_000 if quick else 10_000
+    emb_bytes = 64
+    shard_bytes = 1 << (14 if quick else 16)
+    fractions = (0.001, 0.01, 0.1)
+
+    rng = np.random.default_rng(0)
+    item_keys = np.arange(1, n_item + 1, dtype=np.uint64)
+    item_payloads = rng.integers(0, 1 << 50, n_item).astype(np.uint64)
+    cat_keys = np.arange(1, n_cat + 1, dtype=np.uint64)
+    cat_payloads = rng.integers(0, 1 << 50, n_cat).astype(np.uint64)
+    emb_values = rng.integers(0, 255, size=(n_emb, emb_bytes), dtype=np.uint8)
+
+    def tables():
+        return ([ScalarTable("item_attr", item_keys, item_payloads),
+                 ScalarTable("cat_attr", cat_keys, cat_payloads)],
+                [EmbeddingTable("item_emb", item_keys[:n_emb], emb_values,
+                                hot_fraction=0.1)])
+
+    engine = MultiTableEngine(*tables(), max_shard_bytes=shard_bytes)
+    n_shards = engine.window.get(None)[2].n_shards
+    version = [engine.latest_version]
+
+    def full_publish():
+        version[0] += 1
+        engine.publish(version[0], *tables())
+
+    us_full = common.timeit(full_publish, warmup=1, iters=3)
+    total_rows = n_item + n_cat + n_emb
+    common.row("incremental/full_publish", us_full,
+               f"{total_rows} rows {n_shards} shards")
+
+    for frac in fractions:
+        k_item = max(int(n_item * frac), 1)
+        k_emb = max(int(n_emb * frac), 1)
+        drng = np.random.default_rng(int(frac * 1e6))
+
+        def delta_publish(k_item=k_item, k_emb=k_emb, drng=drng):
+            sel = drng.choice(n_item, k_item, replace=False)
+            esel = drng.choice(n_emb, k_emb, replace=False)
+            upserts = {
+                "item_attr": (item_keys[sel],
+                              drng.integers(0, 1 << 50, k_item)
+                              .astype(np.uint64)),
+                "item_emb": (item_keys[esel],
+                             drng.integers(0, 255, (k_emb, emb_bytes))
+                             .astype(np.uint8)),
+            }
+            version[0] += 1
+            engine.publish_delta(version[0], upserts)
+
+        before = (engine.stats.shards_copied, engine.stats.shards_shared)
+        us_delta = common.timeit(delta_publish, warmup=1, iters=3)
+        copied = engine.stats.shards_copied - before[0]
+        shared = engine.stats.shards_shared - before[1]
+        common.row(f"incremental/delta_{frac:g}", us_delta,
+                   f"speedup={us_full / us_delta:.1f}x "
+                   f"shards_shared={shared}/{shared + copied}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main(quick=True)

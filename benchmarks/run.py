@@ -17,7 +17,8 @@ def main() -> None:
     from benchmarks import (bench_scalar_tables, bench_size_sweep,
                             bench_ablation, bench_batch_latency,
                             bench_vectorization, bench_consistency,
-                            bench_resource, bench_multitable)
+                            bench_resource, bench_multitable,
+                            bench_incremental)
     suites = {
         "t1": bench_scalar_tables.main,
         "t2": bench_size_sweep.main,
@@ -27,6 +28,7 @@ def main() -> None:
         "f10": bench_consistency.main,
         "t5": bench_resource.main,
         "mt": bench_multitable.main,
+        "inc": bench_incremental.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,us_per_call,derived")

@@ -127,7 +127,8 @@ class ClusterSim:
     each shard answers from whatever version its chosen replica has."""
 
     def __init__(self, cfg: SimConfig, protocol: str = "paper",
-                 tables_for_version: Optional[Callable] = None):
+                 tables_for_version: Optional[Callable] = None,
+                 deltas_for_version: Optional[Callable] = None):
         assert protocol in ("paper", "naming")
         self.cfg = cfg
         self.protocol = protocol
@@ -142,8 +143,16 @@ class ClusterSim:
         self.current_version = 0
         # optional real data plane: ``tables_for_version(v) -> (scalars,
         # embeddings)``; the fleet then answers queries through an actual
-        # MultiTableEngine whose retention window mirrors the replicas'
+        # MultiTableEngine whose retention window mirrors the replicas'.
+        # ``deltas_for_version(v) -> (upserts, deletes) | None`` lets a
+        # rolling update ship a *delta generation* (engine.publish_delta)
+        # instead of a full rebuild — the incremental-learning cadence
         self.tables_for_version = tables_for_version
+        self.deltas_for_version = deltas_for_version
+        if deltas_for_version is not None and tables_for_version is None:
+            raise ValueError(
+                "deltas_for_version requires tables_for_version: the engine "
+                "data plane needs a base build to apply deltas to")
         self.engine = None
         if tables_for_version is not None:
             from repro.core.engine import MultiTableEngine
@@ -183,9 +192,16 @@ class ClusterSim:
 
             def finish(rep_idx=rep_idx):
                 if rep_idx == 0 and self.engine is not None:
-                    # first wave ready: the new build exists in the fleet
-                    scalars, embeddings = self.tables_for_version(version)
-                    self.engine.publish(version, scalars, embeddings)
+                    # first wave ready: the new build exists in the fleet —
+                    # as a delta generation when the publisher ships one
+                    delta = (self.deltas_for_version(version)
+                             if self.deltas_for_version is not None else None)
+                    if delta is not None:
+                        upserts, deletes = delta
+                        self.engine.publish_delta(version, upserts, deletes)
+                    else:
+                        scalars, embeddings = self.tables_for_version(version)
+                        self.engine.publish(version, scalars, embeddings)
                 for s in range(cfg.n_shards):
                     rep = self.replicas[s][rep_idx]
                     if not rep.alive:

@@ -75,6 +75,9 @@ class EngineStats:
     hits: int = 0
     launches: int = 0             # fused device launches (one per shard hit)
     repins: int = 0               # NACK -> re-pin events
+    delta_publishes: int = 0      # publish_delta calls
+    shards_copied: int = 0        # copy-on-write shard rebuilds across deltas
+    shards_shared: int = 0        # shards whose arrays were shared across deltas
     versions_served: set = dataclasses.field(default_factory=set)
 
     @property
@@ -151,6 +154,8 @@ class _FusedBuild:
                     {k: jnp.asarray(v) for k, v in
                      tbl.device_arrays().items()})
         self._fused_fns = [self._make_fused_fn(s) for s in range(n_shards)]
+        self.shards_copied = 0
+        self.shards_shared = 0
 
         self.stores: dict[str, HybridKVStore] = {}
         for t in embeddings:
@@ -171,6 +176,89 @@ class _FusedBuild:
                                                 q_his, q_los)]
 
         return fused
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_delta(cls, prev: "_FusedBuild",
+                   upserts: dict, deletes: dict) -> "_FusedBuild":
+        """Copy-on-write build: only the shards a delta touches get new
+        tables/arrays/fused programs; everything else is shared with
+        ``prev``, so retaining both versions costs O(delta), not O(rows).
+
+        ``upserts[name]`` is ``(keys, payloads)`` for scalar tables or
+        ``(keys, value_rows)`` for embedding tables; ``deletes[name]`` is a
+        key array.  Upserts apply before deletes."""
+        self = cls.__new__(cls)
+        self.scalar_names = prev.scalar_names
+        self.scalar_index = prev.scalar_index
+        self.table_kinds = dict(prev.table_kinds)
+        self.plan = prev.plan
+        n_shards = prev.n_shards
+        self.shard_tables = [list(ts) for ts in prev.shard_tables]
+        self.shard_arrays = [list(a) for a in prev.shard_arrays]
+        self.stores = dict(prev.stores)
+
+        for name in set(upserts) | set(deletes):
+            if name not in self.table_kinds:
+                raise KeyError(
+                    f"unknown table {name!r}; a delta must target the "
+                    f"previous build's tables {sorted(self.table_kinds)}")
+
+        def statics(tbl: nh.HashTable):
+            # everything lookup.make_lookup_fn bakes into the trace; if none
+            # of it changed, prev's already-compiled fused fn stays valid
+            return (tbl.variant, tbl.home_capacity, tbl.inline,
+                    tbl.capacity, tbl.max_probe_len())
+
+        touched: set[int] = set()
+        for name in sorted(set(upserts) | set(deletes)):
+            if self.table_kinds[name] != "scalar":
+                continue
+            bi = self.scalar_index[name]
+            uk, up = upserts.get(name, ((), ()))
+            uk = np.asarray(uk, dtype=np.uint64).ravel()
+            up = np.asarray(up, dtype=np.uint64).ravel()
+            dk = np.asarray(deletes.get(name, ()),
+                            dtype=np.uint64).ravel()
+            u_owner = self.plan.shard_of_np(uk)
+            d_owner = self.plan.shard_of_np(dk)
+            for s in range(n_shards):
+                ku, pu = uk[u_owner == s], up[u_owner == s]
+                kd = dk[d_owner == s]
+                if not len(ku) and not len(kd):
+                    continue
+                tbl = nh.apply_delta(prev.shard_tables[s][bi], ku, pu, kd,
+                                     copy=True)
+                self.shard_tables[s][bi] = tbl
+                self.shard_arrays[s][bi] = {
+                    k: jnp.asarray(v)
+                    for k, v in tbl.device_arrays().items()}
+                touched.add(s)
+        # fused programs bake max_probes/home_capacity statically; reuse
+        # prev's compiled fn unless one of its tables' statics actually
+        # changed (a small delta usually leaves max chain length alone, so
+        # even touched shards skip the retrace)
+        self._fused_fns = [
+            self._make_fused_fn(s)
+            if s in touched and any(
+                statics(a) != statics(b)
+                for a, b in zip(self.shard_tables[s], prev.shard_tables[s]))
+            else prev._fused_fns[s]
+            for s in range(n_shards)]
+        self.shards_copied = len(touched)
+        self.shards_shared = n_shards - len(touched)
+
+        for name in sorted(set(upserts) | set(deletes)):
+            if self.table_kinds[name] != "embedding":
+                continue
+            store = prev.stores[name].clone()
+            if name in upserts:
+                k, v = upserts[name]
+                store.upsert_batch(k, v, copy_on_write=True)
+            if name in deletes:
+                store.delete_batch(deletes[name])
+            self.stores[name] = store
+        return self
 
     @property
     def n_shards(self) -> int:
@@ -252,6 +340,31 @@ class MultiTableEngine:
                             max_shard_bytes=self.max_shard_bytes,
                             buckets_per_line=self.buckets_per_line)
         self.window.publish(version, build)
+
+    def publish_delta(self, version: int,
+                      upserts: Optional[dict] = None,
+                      deletes: Optional[dict] = None) -> None:
+        """Install ``version`` as an incremental delta on the latest build
+        (paper Fig 2, the Update Subsystem's minute-level publish path).
+
+        ``upserts`` maps table name to ``(keys, payloads)`` for scalar
+        tables or ``(keys, uint8 value rows)`` for embedding tables (new
+        keys extend the table); ``deletes`` maps table name to keys.
+        Upserts apply before deletes.  Only the shards the delta touches
+        are copy-on-written — untouched shards share arrays and compiled
+        lookup programs with the previous build, so retaining the old
+        version for in-flight batches stays O(delta).  A batch pinned to
+        the previous version keeps reading the old rows bitwise."""
+        ok, _, prev = self.window.get(None)
+        if not ok:
+            raise RuntimeError(
+                "publish_delta needs a published base version; call "
+                "publish() first")
+        build = _FusedBuild.from_delta(prev, upserts or {}, deletes or {})
+        self.window.publish(version, build)
+        self.stats.delta_publishes += 1
+        self.stats.shards_copied += build.shards_copied
+        self.stats.shards_shared += build.shards_shared
 
     @property
     def versions(self) -> list[int]:

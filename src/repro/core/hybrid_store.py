@@ -62,6 +62,7 @@ class HybridKVStore:
             raise ValueError("keys/values length mismatch")
         self.n = len(keys)
         self.value_bytes = values.shape[1]
+        self._load_factor = load_factor
         self.stats = TierStats()
 
         # --- tier assignment: requested hot set, else the first fraction ---
@@ -105,11 +106,16 @@ class HybridKVStore:
                 hot_slot += 1
             else:
                 payloads[i] = np.uint64(TIER_MASK | i)
+        # slots never occupied at build time (e.g. hot_fraction=0, where
+        # hot_capacity is clamped to 1) must start on the free list or the
+        # hot tier is permanently unusable — _admit would always bail
+        self._hot_free = list(range(self.hot_capacity - 1, hot_slot - 1, -1))
         self._cold_slot_of_key_order = {int(k): i for i, k in enumerate(keys)}
         self.index = nh.build(keys, payloads, variant=variant,
                               load_factor=load_factor,
                               buckets_per_line=buckets_per_line)
         self._lock = threading.Lock()   # update-path only; reads lock-free
+        self._retired = False           # True once a clone() owns the writes
         self._evict_thread: Optional[threading.Thread] = None
         self._evict_stop = threading.Event()
 
@@ -126,7 +132,10 @@ class HybridKVStore:
         out = np.zeros((len(keys), self.value_bytes), dtype=np.uint8)
         found = np.zeros(len(keys), dtype=bool)
         self._clock += 1
-        cold_to_admit: list[tuple[int, int]] = []   # (key, cold_slot)
+        # insertion-ordered dedup: the same cold key twice in one batch must
+        # queue ONE admission (a second _admit would pop a second hot slot
+        # and orphan the first); _admit re-derives the slot under the lock
+        cold_to_admit: dict[int, None] = {}
         for i, k in enumerate(keys):
             ok, payload, _, _ = self.index.probe_trace(int(k))
             self.stats.lookups += 1
@@ -140,24 +149,31 @@ class HybridKVStore:
                 self.stats.cold_misses += 1
                 self.stats.cold_bytes_read += self.value_bytes
                 if admit:
-                    cold_to_admit.append((int(k), slot))
+                    cold_to_admit[int(k)] = None
             else:                                   # hot
                 slot = int(payload)
                 out[i] = self._hot_values[slot]
                 self._hot_last_access[slot] = self._clock
                 self.stats.hot_hits += 1
                 self.stats.hot_bytes_read += self.value_bytes
-        for k, slot in cold_to_admit:
-            self._admit(k, slot)
+        for k in cold_to_admit:
+            self._admit(k)
         return found, out
 
     # ------------------------------------------------------------------
     # tier movement (update path — serialized, like the Update Subsystem)
     # ------------------------------------------------------------------
-    def _admit(self, key: int, cold_slot: int):
+    def _admit(self, key: int):
         with self._lock:
+            # re-check the payload tier under the lock: a concurrent admit
+            # (or an earlier admission of the same key) may have already
+            # moved it hot, and admitting twice would orphan a hot slot
+            ok, payload, _, _ = self.index.probe_trace(key)
+            if not ok or not (payload & TIER_MASK):
+                return
             if not self._hot_free:
                 return          # hot tier full: eviction pass will make room
+            cold_slot = int(payload & np.uint64(SLOT_MASK))
             hot_slot = self._hot_free.pop()
             self._hot_values[hot_slot] = self._cold[cold_slot]
             self._hot_key[hot_slot] = key
@@ -209,21 +225,26 @@ class HybridKVStore:
 
     # ------------------------------------------------------------------
     def _set_payload(self, key: int, payload: np.uint64):
-        ok, _, visited, _ = self.index.probe_trace(key)
-        if not ok:
-            raise KeyError(key)
-        idx = visited[-1]
-        _, code = hc.unpack_value_int(int(self.index.val_hi[idx]),
-                                      int(self.index.val_lo[idx]))
-        vhi, vlo = hc.pack_value_int(int(payload),
-                                     code if self.index.inline else 0)
-        self.index.val_hi[idx] = vhi
-        self.index.val_lo[idx] = vlo
+        self.index.update(key, int(payload))     # in-place, offset-preserving
+
+    def _check_writable(self):
+        if self._retired:
+            raise RuntimeError(
+                "store was retired by clone(): the clone owns the write "
+                "path now (writes here would corrupt rows the clone serves "
+                "through the shared cold file)")
 
     def update_value(self, key: int, value: np.ndarray):
         """Update-path write: cold home slot is rewritten; a hot copy, if
         present, is refreshed in place (single-writer Update Subsystem)."""
+        self._check_writable()
         value = np.asarray(value, dtype=np.uint8)
+        if value.shape != (self.value_bytes,):
+            # a scalar or wrong-length value would silently broadcast over
+            # the whole row — reject instead
+            raise ValueError(
+                f"value must have shape ({self.value_bytes},), "
+                f"got {value.shape}")
         with self._lock:
             ok, payload, _, _ = self.index.probe_trace(int(key))
             if not ok:
@@ -233,13 +254,170 @@ class HybridKVStore:
             if not (payload & TIER_MASK):
                 self._hot_values[int(payload)] = value
 
+    # ------------------------------------------------------------------
+    # incremental write path (Update Subsystem: delta publishing)
+    # ------------------------------------------------------------------
+    def upsert_batch(self, keys: Sequence[int], values: np.ndarray, *,
+                     copy_on_write: bool = False) -> dict:
+        """Batch upsert: update existing keys and ADD brand-new keys,
+        extending the cold file and the NeighborHash index.
+
+        ``copy_on_write=True`` never rewrites an existing cold row — updated
+        values are appended to the cold file and the index repointed, so a
+        ``clone()`` of this store taken before the upsert keeps serving its
+        rows bitwise (the engine's delta-publish retention window).  The
+        superseded rows await background compaction (ROADMAP).
+
+        Duplicate keys within one batch are last-write-wins.  Returns
+        ``{"inserted": ..., "updated": ..., "cold_rows_appended": ...}``.
+        """
+        self._check_writable()
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        values = np.asarray(values, dtype=np.uint8)
+        if values.ndim != 2 or values.shape != (len(keys), self.value_bytes):
+            raise ValueError(
+                f"values must be uint8 [{len(keys)}, {self.value_bytes}], "
+                f"got {values.dtype} {values.shape}")
+        with self._lock:
+            last = {int(k): i for i, k in enumerate(keys)}   # last-write-wins
+            sel = sorted(last.values())
+            exists = {}
+            rows_needed = 0
+            for i in sel:
+                ok, payload, _, _ = self.index.probe_trace(int(keys[i]))
+                exists[i] = payload if ok else None
+                if not ok or copy_on_write:
+                    rows_needed += 1
+            next_slot = self._grow_cold(rows_needed)
+            inserted = updated = 0
+            new_entries: list[tuple[int, int]] = []
+            for i in sel:
+                k, v, payload = int(keys[i]), values[i], exists[i]
+                if payload is None:                          # brand-new key
+                    self._cold[next_slot] = v
+                    self._cold_slot_of_key_order[k] = next_slot
+                    new_entries.append((k, TIER_MASK | next_slot))
+                    next_slot += 1
+                    self.n += 1
+                    inserted += 1
+                elif copy_on_write:
+                    self._cold[next_slot] = v
+                    self._cold_slot_of_key_order[k] = next_slot
+                    if payload & TIER_MASK:
+                        self.index.update(k, TIER_MASK | next_slot)
+                    else:
+                        # hot copy (ours, freshly cloned) refreshed in
+                        # place; the repointed cold slot above already holds
+                        # the new value, so a later eviction flip to it
+                        # stays consistent
+                        self._hot_values[int(payload)] = v
+                    next_slot += 1
+                    updated += 1
+                else:
+                    self._cold[self._cold_slot_of_key_order[k]] = v
+                    if not (payload & TIER_MASK):
+                        self._hot_values[int(payload)] = v
+                    updated += 1
+            if new_entries:
+                # one apply_delta call: in-place while there is headroom,
+                # at most ONE growth rebuild per batch (not per key)
+                ks = np.array([k for k, _ in new_entries], dtype=np.uint64)
+                ps = np.array([p for _, p in new_entries], dtype=np.uint64)
+                self.index = nh.apply_delta(self.index, ks, ps,
+                                            load_factor=self._load_factor)
+            return {"inserted": inserted, "updated": updated,
+                    "cold_rows_appended": rows_needed}
+
+    def delete_batch(self, keys: Sequence[int]) -> int:
+        """Remove keys from the index (hot slots are freed; cold rows are
+        orphaned until compaction).  Returns the number removed."""
+        self._check_writable()
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        removed = 0
+        with self._lock:
+            for k in keys:
+                k = int(k)
+                ok, payload, _, _ = self.index.probe_trace(k)
+                if not ok:
+                    continue
+                if not (payload & TIER_MASK):
+                    slot = int(payload)
+                    self._hot_key[slot] = hc.EMPTY_KEY
+                    self._hot_free.append(slot)
+                try:
+                    self.index.delete(k)
+                except nh.BuildError:        # coalesced-variant index
+                    self.index = nh.apply_delta(
+                        self.index, (), (), np.array([k], dtype=np.uint64),
+                        load_factor=self._load_factor)
+                self._cold_slot_of_key_order.pop(k, None)
+                self.n -= 1
+                removed += 1
+        return removed
+
+    def clone(self) -> "HybridKVStore":
+        """O(index + hot tier) snapshot sharing the cold file.  The clone
+        may take ``upsert_batch(..., copy_on_write=True)`` / ``delete_batch``
+        writes while this store keeps serving every row bitwise — the
+        substrate of per-version embedding tables in delta publishing.
+
+        Cloning RETIRES this store from the write path (further writes here
+        raise): two writers allocating cold-file slots from divergent views
+        of the shared file's end would corrupt each other's rows.  Reads,
+        admissions, and evictions remain untouched — exactly the lifecycle
+        of a retained previous version."""
+        new = object.__new__(HybridKVStore)
+        with self._lock:
+            # snapshot under the lock: a concurrent _admit / eviction pass
+            # mutating hot arrays + index mid-copy would tear the snapshot
+            # (index says hot slot S, but S's bytes/key/free-list state are
+            # from before the admission)
+            new.n = self.n
+            new.value_bytes = self.value_bytes
+            new._load_factor = self._load_factor
+            new.stats = TierStats()
+            new.hot_capacity = self.hot_capacity
+            new._hot_values = self._hot_values.copy()
+            new._hot_last_access = self._hot_last_access.copy()
+            new._hot_key = self._hot_key.copy()
+            new._hot_free = list(self._hot_free)
+            new._clock = self._clock
+            new._cold_dir = self._cold_dir
+            new._cold_path = self._cold_path
+            new._cold = np.memmap(self._cold_path, dtype=np.uint8, mode="r+",
+                                  shape=self._cold.shape)
+            new._cold_slot_of_key_order = dict(self._cold_slot_of_key_order)
+            new.index = self.index.copy()
+            self._retired = True          # single writer: the clone
+        new._lock = threading.Lock()
+        new._retired = False
+        new._evict_thread = None
+        new._evict_stop = threading.Event()
+        return new
+
+    def _grow_cold(self, extra_rows: int) -> int:
+        """Extend the cold file by ``extra_rows``; returns the first new
+        slot.  Clones mapping the old (shorter) prefix stay valid — the file
+        only ever grows and existing offsets never move."""
+        old_rows = self._cold.shape[0]
+        if extra_rows > 0:
+            self._cold.flush()
+            with open(self._cold_path, "r+b") as f:
+                f.truncate((old_rows + extra_rows) * self.value_bytes)
+            self._cold = np.memmap(
+                self._cold_path, dtype=np.uint8, mode="r+",
+                shape=(old_rows + extra_rows, self.value_bytes))
+        return old_rows
+
     def memory_bytes(self) -> dict:
         idx_bytes = self.index.capacity * 16
+        if self.index.next_idx is not None:   # side offset array variants
+            idx_bytes += self.index.next_idx.nbytes
         return {
             "index": idx_bytes,
             "hot_values": self._hot_values.nbytes,
             "hot_metadata": self._hot_last_access.nbytes + self._hot_key.nbytes,
             "resident_total": idx_bytes + self._hot_values.nbytes
             + self._hot_last_access.nbytes + self._hot_key.nbytes,
-            "cold_file": self.n * self.value_bytes,
+            "cold_file": self._cold.shape[0] * self.value_bytes,
         }

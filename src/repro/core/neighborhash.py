@@ -61,6 +61,7 @@ class BuildStats:
     relocations: int = 0
     inserts: int = 0
     updates: int = 0
+    deletes: int = 0
     build_seconds: float = 0.0
 
 
@@ -78,6 +79,8 @@ class HashTable:
     next_idx: Optional[np.ndarray]   # int32[capacity], -1 END; None if inline
     home_capacity: int          # hash range (== capacity except coalesced)
     stats: BuildStats
+    _mut: Optional[object] = dataclasses.field(default=None, repr=False,
+                                               compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -186,6 +189,97 @@ class HashTable:
     def max_probe_len(self) -> int:
         return self.stats.max_chain_len
 
+    # ------------------------------------------------------------------
+    # in-place mutation (the Update Subsystem's host-side write path)
+    # ------------------------------------------------------------------
+    def copy(self) -> "HashTable":
+        """Deep copy of the SoA arrays + stats (copy-on-write deltas)."""
+        return HashTable(
+            variant=self.variant, capacity=self.capacity,
+            buckets_per_line=self.buckets_per_line,
+            key_hi=self.key_hi.copy(), key_lo=self.key_lo.copy(),
+            val_hi=self.val_hi.copy(), val_lo=self.val_lo.copy(),
+            next_idx=None if self.next_idx is None else self.next_idx.copy(),
+            home_capacity=self.home_capacity,
+            stats=dataclasses.replace(self.stats),
+        )
+
+    def items_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Every resident (keys uint64, payloads uint64) — rebuild fodder."""
+        occ = ~((self.key_hi == np.uint32(hc.EMPTY_HI))
+                & (self.key_lo == np.uint32(hc.EMPTY_LO)))
+        idx = np.flatnonzero(occ)
+        keys = (self.key_hi[idx].astype(np.uint64) << np.uint64(32)) \
+            | self.key_lo[idx].astype(np.uint64)
+        return keys, hc.payload_np(self.val_hi[idx], self.val_lo[idx])
+
+    def _ops(self) -> "_Builder":
+        if self._mut is None:
+            self._mut = _Builder.wrap(self)
+        return self._mut
+
+    def insert(self, key: int, payload: int) -> None:
+        """In-place upsert (last-write-wins, exactly the builder's insert
+        semantics).  Raises BuildError when the variant cannot place the
+        record — callers fall back to ``build_grow`` (see ``apply_delta``)."""
+        key, payload = int(key), int(payload)
+        if key == hc.EMPTY_KEY:
+            raise ValueError("EMPTY_KEY (2^64-1) is reserved")
+        if payload & ~hc.PAYLOAD_MASK:
+            raise ValueError("payload exceeds 52 bits")
+        ops = self._ops()
+        hi, lo = hc.key_split_int(key)
+        home = hc.bucket_of_int(hi, lo, self.home_capacity)
+        before = self.stats.inserts
+        placed = ops.insert(hi, lo, payload, home)
+        if self.stats.inserts != before:          # real insert, not update
+            self.stats.n += 1
+            self.stats.load_factor = self.stats.n / self.capacity
+            if self.variant == "linear" and placed >= 0:
+                # filling a gap can merge two occupied runs, lengthening the
+                # probe bound past the new key's own PSL — rescan just the
+                # run containing the placed slot (O(run), not O(capacity))
+                self.stats.max_chain_len = max(
+                    self.stats.max_chain_len,
+                    ops._run_len_around(placed) + 1)
+
+    def update(self, key: int, payload: int) -> None:
+        """Strict in-place payload update; KeyError if the key is absent.
+        Never relocates, so it is safe on a table shared read-only with
+        device lookups of the same version."""
+        payload = int(payload)
+        if payload & ~hc.PAYLOAD_MASK:
+            raise ValueError("payload exceeds 52 bits")
+        found, _, visited, _ = self.probe_trace(int(key))
+        if not found:
+            raise KeyError(key)
+        idx = visited[-1]
+        _, code = hc.unpack_value_int(int(self.val_hi[idx]),
+                                      int(self.val_lo[idx]))
+        vhi, vlo = hc.pack_value_int(payload, code if self.inline else 0)
+        self.val_hi[idx] = vhi
+        self.val_lo[idx] = vlo
+        self.stats.updates += 1
+
+    def delete(self, key: int) -> bool:
+        """In-place removal; returns False if absent.  Relocating variants
+        stay home-pure (the chain's tail record is pulled into the vacated
+        slot, so every already-encoded offset remains valid); linear probing
+        uses backward-shift deletion.  Classic coalesced chains are not
+        home-pure and raise BuildError — ``apply_delta`` rebuilds instead."""
+        key = int(key)
+        if key == hc.EMPTY_KEY:
+            return False
+        ops = self._ops()
+        hi, lo = hc.key_split_int(key)
+        home = hc.bucket_of_int(hi, lo, self.home_capacity)
+        removed = ops.delete(hi, lo, home)
+        if removed:
+            self.stats.n -= 1
+            self.stats.load_factor = self.stats.n / self.capacity
+            self.stats.deletes += 1
+        return removed
+
 
 # ---------------------------------------------------------------------------
 # builder
@@ -255,6 +349,27 @@ class _Builder:
         self.free_ptr = capacity - 1          # for end-pointer strategies
         self.stats = BuildStats(capacity=capacity)
 
+    @classmethod
+    def wrap(cls, table: HashTable) -> "_Builder":
+        """Adopt a built table's arrays for in-place mutation (no copies:
+        mutations through the returned ops are visible in ``table``)."""
+        b = cls.__new__(cls)
+        b.variant = table.variant
+        b.capacity = table.capacity
+        b.bpl = table.buckets_per_line
+        b.home_capacity = table.home_capacity
+        b.key_hi = table.key_hi
+        b.key_lo = table.key_lo
+        b.val_hi = table.val_hi
+        b.val_lo = table.val_lo
+        b.occ = ~((table.key_hi == np.uint32(hc.EMPTY_HI))
+                  & (table.key_lo == np.uint32(hc.EMPTY_LO)))
+        b.inline = table.inline
+        b.next_idx = table.next_idx
+        b.free_ptr = table.capacity - 1
+        b.stats = table.stats                 # shared: counters stay in sync
+        return b
+
     # -- primitive bucket ops ------------------------------------------------
     def _empty(self, idx: int) -> bool:
         return not self.occ[idx]
@@ -267,6 +382,18 @@ class _Builder:
         self.val_hi[idx] = vhi
         self.val_lo[idx] = vlo
         self.occ[idx] = True
+
+    def _clear(self, idx: int):
+        self.key_hi[idx] = hc.EMPTY_HI
+        self.key_lo[idx] = hc.EMPTY_LO
+        self.val_hi[idx] = 0
+        self.val_lo[idx] = 0
+        self.occ[idx] = False
+        if not self.inline:
+            self.next_idx[idx] = -1
+        if self.variant in ("coalesced", "perfect_cellar"):
+            # freed slots above the end pointer become reusable again
+            self.free_ptr = max(self.free_ptr, idx)
 
     def _set_next(self, idx: int, nxt: int):
         """Point idx's chain successor at nxt (or END when nxt < 0)."""
@@ -412,10 +539,11 @@ class _Builder:
         return -1
 
     # -- insert --------------------------------------------------------------
-    def insert(self, khi: int, klo: int, payload: int, home: int):
+    def insert(self, khi: int, klo: int, payload: int, home: int) -> int:
+        """For the linear variant returns the placed bucket index on a real
+        insert (PSL-bound maintenance), -1 otherwise."""
         if self.variant == "linear":
-            self._insert_linear(khi, klo, payload, home)
-            return
+            return self._insert_linear(khi, klo, payload, home)
         existing = self._find_update(khi, klo, home)
         if existing >= 0:
             # update-in-place (Update Subsystem semantics): keep chain intact
@@ -427,28 +555,44 @@ class _Builder:
             if not self.inline:
                 pass                       # next_idx untouched
             self.stats.updates += 1
-            return
+            return -1
         if self.variant == "coalesced":
             self._insert_coalesced(khi, klo, payload, home)
         else:
             self._insert_relocating(khi, klo, payload, home)
         self.stats.inserts += 1
+        return -1
 
-    def _insert_linear(self, khi: int, klo: int, payload: int, home: int):
+    def _insert_linear(self, khi: int, klo: int, payload: int,
+                       home: int) -> int:
         idx = home
         for _ in range(self.capacity):
             if self._empty(idx):
                 self._place(idx, khi, klo, payload)
                 self.stats.inserts += 1
-                return
+                return idx
             if int(self.key_hi[idx]) == khi and int(self.key_lo[idx]) == klo:
                 vhi, vlo = hc.pack_value_int(payload, 0)
                 self.val_hi[idx] = vhi
                 self.val_lo[idx] = vlo
                 self.stats.updates += 1
-                return
+                return -1
             idx = (idx + 1) % self.capacity
         raise BuildError("linear probing table full")
+
+    def _run_len_around(self, idx: int) -> int:
+        """Length of the contiguous occupied run containing ``idx``
+        (wrap-aware) — O(run), for incremental linear PSL maintenance."""
+        cap = self.capacity
+        length, j = 1, (idx - 1) % cap
+        while self.occ[j] and length < cap:
+            length += 1
+            j = (j - 1) % cap
+        j = (idx + 1) % cap
+        while self.occ[j] and length < cap:
+            length += 1
+            j = (j + 1) % cap
+        return length
 
     def _insert_coalesced(self, khi: int, klo: int, payload: int, home: int):
         if self._empty(home):
@@ -501,15 +645,78 @@ class _Builder:
         self._place(f, int(self.key_hi[j]), int(self.key_lo[j]), payload)
         self._set_next(f, succ)
         self._set_next(pred, f)
-        # clear j
-        self.key_hi[j] = hc.EMPTY_HI
-        self.key_lo[j] = hc.EMPTY_LO
-        self.val_hi[j] = 0
-        self.val_lo[j] = 0
-        self.occ[j] = False
-        if not self.inline:
-            self.next_idx[j] = -1
+        self._clear(j)
         self.stats.relocations += 1
+
+    # -- delete --------------------------------------------------------------
+    def delete(self, khi: int, klo: int, home: int) -> bool:
+        if self.variant == "linear":
+            return self._delete_linear(khi, klo, home)
+        idx = self._find_update(khi, klo, home)
+        if idx < 0:
+            return False
+        if self.variant == "coalesced":
+            raise BuildError(
+                "in-place delete unsupported for classic coalesced chains "
+                "(not home-pure); rebuild via apply_delta")
+        # home-pure chain: walk once to find the tail and its predecessor
+        prev, cur = -1, home
+        while True:
+            nxt = self._next_of(cur)
+            if nxt < 0:
+                break
+            prev, cur = cur, nxt
+        tail, tail_pred = cur, prev
+        if idx == tail:
+            if tail_pred >= 0:
+                self._set_next(tail_pred, -1)     # END is always encodable
+            self._clear(tail)
+            return True
+        # pull the tail record into the vacated slot: the chain keeps its
+        # shape (idx's own next pointer survives), every already-encoded
+        # offset stays valid, and home-purity is preserved because all
+        # chain members share the head's home
+        payload, _ = hc.unpack_value_int(int(self.val_hi[tail]),
+                                         int(self.val_lo[tail]))
+        self.key_hi[idx] = self.key_hi[tail]
+        self.key_lo[idx] = self.key_lo[tail]
+        _, code = hc.unpack_value_int(int(self.val_hi[idx]),
+                                      int(self.val_lo[idx]))
+        vhi, vlo = hc.pack_value_int(payload, code if self.inline else 0)
+        self.val_hi[idx] = vhi
+        self.val_lo[idx] = vlo
+        self._set_next(tail_pred, -1)
+        self._clear(tail)
+        return True
+
+    def _delete_linear(self, khi: int, klo: int, home: int) -> bool:
+        cap = self.capacity
+        idx = home
+        for _ in range(cap):
+            if self._empty(idx):
+                return False
+            if int(self.key_hi[idx]) == khi and int(self.key_lo[idx]) == klo:
+                break
+            idx = (idx + 1) % cap
+        else:
+            return False
+        # backward-shift deletion: keep every probe sequence gap-free
+        i = idx
+        self._clear(i)
+        j = i
+        for _ in range(cap):
+            j = (j + 1) % cap
+            if self._empty(j):
+                break
+            h = self._home_of_resident(j)
+            if (j - h) % cap >= (j - i) % cap:    # j's probe path covers i
+                payload, _ = hc.unpack_value_int(int(self.val_hi[j]),
+                                                 int(self.val_lo[j]))
+                self._place(i, int(self.key_hi[j]), int(self.key_lo[j]),
+                            payload)
+                self._clear(j)
+                i = j
+        return True
 
     # -------------------------------------------------------------------
     def finish(self) -> HashTable:
@@ -581,6 +788,56 @@ def build_grow(
     raise BuildError(
         f"could not place {n} keys after {max_attempts} growth attempts "
         f"(last capacity {capacity})") from last
+
+
+def apply_delta(
+    table: HashTable,
+    upsert_keys: np.ndarray,
+    upsert_payloads: np.ndarray,
+    delete_keys: np.ndarray = (),
+    *,
+    copy: bool = False,
+    load_factor: float = 0.8,
+) -> HashTable:
+    """Apply an incremental delta (upserts then deletes) to a table.
+
+    The fast path mutates in place — O(delta), not O(rows).  When a
+    placement fails (table full, 12-bit inline offset exhausted, or a
+    coalesced-variant delete) the BuildError contract kicks in: the current
+    residents plus the full delta are rebuilt through ``build_grow``.
+    Either way the returned table holds exactly ``old ∪ upserts − deletes``.
+
+    ``copy=True`` leaves ``table`` untouched (copy-on-write for retention
+    windows); with ``copy=False`` the caller must adopt the return value —
+    after a fallback it is a brand-new, larger table.
+    """
+    upsert_keys = np.asarray(upsert_keys, dtype=np.uint64).ravel()
+    upsert_payloads = np.asarray(upsert_payloads, dtype=np.uint64).ravel()
+    delete_keys = np.asarray(delete_keys, dtype=np.uint64).ravel()
+    if upsert_keys.shape != upsert_payloads.shape:
+        raise ValueError("upsert keys/payloads must be equal-length")
+    t = table.copy() if copy else table
+    try:
+        for k, p in zip(upsert_keys, upsert_payloads):
+            t.insert(int(k), int(p))
+        for k in delete_keys:
+            t.delete(int(k))
+        return t
+    except BuildError:
+        # every single op is atomic (it either completed or raised before
+        # mutating), so t's residents are a consistent prefix of the delta;
+        # re-applying the whole delta on top is idempotent
+        keys, payloads = t.items_arrays()
+        kv = {int(k): int(p) for k, p in zip(keys, payloads)}
+        for k, p in zip(upsert_keys, upsert_payloads):
+            kv[int(k)] = int(p)
+        for k in delete_keys:
+            kv.pop(int(k), None)
+        ks = np.fromiter(kv.keys(), dtype=np.uint64, count=len(kv))
+        ps = np.fromiter(kv.values(), dtype=np.uint64, count=len(kv))
+        return build_grow(ks, ps, variant=table.variant,
+                          load_factor=load_factor,
+                          buckets_per_line=table.buckets_per_line)
 
 
 # ---------------------------------------------------------------------------

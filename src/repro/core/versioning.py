@@ -163,6 +163,7 @@ class ConsistentBatchClient:
         self.shard_of = shard_of
         self.enforce = enforce
         self.report = ConsistencyReport()
+        self._value_spec = None     # (row shape, dtype) seen on last success
 
     def _common_version(self) -> int:
         """Highest version every shard can serve (ask the shards, not the
@@ -208,10 +209,32 @@ class ConsistentBatchClient:
                 if ok:
                     break
             if not ok:
+                # Fail the whole batch *consistently*: earlier shards may
+                # already have gathered rows, and returning them against
+                # zeroed values (or a (n, 1) float64 array that ignores the
+                # table's real value shape/dtype) would hand the caller
+                # found=True rows paired with garbage.  Clear the found
+                # mask, keep the gathered array's shape/dtype for the
+                # zeros, and record an EMPTY versions entry — the batch
+                # answered from no version at all — so the report's
+                # len(versions_used) == attempts invariant holds without
+                # the partial list inflating mixed_version_batches.
                 self.report.failures += 1
-                return found, np.zeros((len(keys), 1)), versions_used
+                self.report.versions_used.append([])
+                found[:] = False
+                if values is not None:
+                    values = np.zeros_like(values)
+                elif self._value_spec is not None:
+                    # nothing gathered this time, but an earlier success
+                    # told us the table's real row shape/dtype
+                    shape, dtype = self._value_spec
+                    values = np.zeros((len(keys),) + shape, dtype)
+                else:
+                    values = np.zeros((len(keys), 1))
+                return found, values, []
             if values is None:
                 values = np.zeros((len(keys),) + vals.shape[1:], vals.dtype)
+                self._value_spec = (vals.shape[1:], vals.dtype)
             found[mask] = f
             values[mask] = vals
             versions_used.append(v)

@@ -6,7 +6,7 @@ function, so the roofline terms include backward pass and optimizer."""
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,13 +19,20 @@ from repro.models import gnn as gnn_mod
 
 
 def make_train_step(loss_fn: Callable, opt_cfg: opt.OptConfig,
-                    accum_steps: int = 1):
+                    accum_steps: int = 1,
+                    delta_ids_fn: Optional[Callable] = None):
     """loss_fn(params, batch) -> (loss, metrics).
 
     ``accum_steps`` > 1 splits the batch into microbatches scanned with
     gradient accumulation — activation memory scales with the microbatch
     while optimizer/collective cost is unchanged (the standard way to fit
-    a big global batch per device; §Perf B2)."""
+    a big global batch per device; §Perf B2).
+
+    ``delta_ids_fn(batch) -> {table_name: ids}`` adds the embedding rows
+    this step touched to ``metrics["delta_ids"]`` — the per-step delta a
+    driver accumulates into incremental serving publishes
+    (engine.publish_delta; the paper's Update Subsystem train->serve
+    path)."""
 
     def train_step(params, opt_state, step, batch):
         if accum_steps == 1:
@@ -55,6 +62,8 @@ def make_train_step(loss_fn: Callable, opt_cfg: opt.OptConfig,
         metrics = dict(metrics)
         metrics["grad_norm"] = gnorm
         metrics["loss"] = loss
+        if delta_ids_fn is not None:
+            metrics["delta_ids"] = delta_ids_fn(batch)
         return new_params, new_state, step + 1, metrics
 
     return train_step
@@ -69,7 +78,11 @@ def make_train_step(loss_fn: Callable, opt_cfg: opt.OptConfig,
 # (Duplicate ids within a batch scatter-accumulate into the same Adagrad row;
 # matches TF/IndexedSlices semantics up to per-occurrence accumulator order.)
 # ---------------------------------------------------------------------------
-def make_sparse_recsys_train_step(cfg, mesh, mi, opt_cfg: opt.OptConfig):
+def make_sparse_recsys_train_step(cfg, mesh, mi, opt_cfg: opt.OptConfig,
+                                  emit_deltas: bool = False):
+    """``emit_deltas=True`` adds ``metrics["delta_ids"]`` — the raw (possibly
+    repeated, -1-padded) row ids each table scattered into this step, for the
+    incremental-publish pipeline.  The host dedupes; shapes stay static."""
     from repro.models import recsys as rec
 
     def train_step(params, opt_state, step, batch):
@@ -115,6 +128,12 @@ def make_sparse_recsys_train_step(cfg, mesh, mi, opt_cfg: opt.OptConfig):
             new_state[t] = {"acc": acc}
         metrics = dict(metrics)
         metrics["grad_norm"] = gnorm
+        if emit_deltas:
+            metrics["delta_ids"] = {
+                t: jnp.concatenate([ids.reshape(-1)
+                                    for k, (tn, ids) in sorted(ids_map.items())
+                                    if tn == t])
+                for t in table_names}
         return new_params, new_state, step + 1, metrics
 
     return train_step

@@ -148,6 +148,115 @@ def test_cluster_sim_data_plane_versions_match_protocol():
     assert drive("naming") > 0
 
 
+def test_client_failure_returns_consistent_found_and_values():
+    """ISSUE 2 satellite: when a shard is unanswerable the client used to
+    return found=True rows (from shards already gathered) paired with a
+    zeroed (n, 1) float64 array — wrong values, wrong shape, wrong dtype —
+    and skipped the report.versions_used append.  A failed batch must be
+    all-or-nothing: found all False, zeros in the table's real value
+    shape/dtype, and report invariants intact."""
+    n_rows = 400
+    plan = plan_shards(TableSpec("t", n_rows, 16), 1024)
+    assert plan.n_shards >= 2
+    reps = [[ShardReplica(s, r) for r in range(2)]
+            for s in range(plan.n_shards)]
+    keys = np.arange(1, n_rows + 1, dtype=np.uint64)
+    vals = np.tile(np.arange(n_rows, dtype=np.float32)[:, None], (1, 4))
+    for s, rows in enumerate(plan.partition(keys)):
+        for rep in reps[s]:
+            rep.publish(Generation(1, keys[rows], vals[rows]))
+    client = ConsistentBatchClient(reps, plan.shard_of, enforce=False)
+
+    # sanity: multi-dim values round-trip when healthy
+    f, v, _ = client.query(keys[:32])
+    assert f.all() and v.shape == (32, 4) and v.dtype == np.float32
+
+    # kill the LAST shard the loop visits, so earlier shards have already
+    # gathered rows before the failure surfaces
+    for rep in reps[plan.n_shards - 1]:
+        rep.serving = False
+    q = keys[:64]
+    assert len(set(plan.shard_of(int(k)) for k in q)) == plan.n_shards
+    attempts_before = client.report.attempts
+    f, v, versions = client.query(q)
+    assert not f.any()                       # no found=True with zeroed value
+    assert v.shape == (len(q), 4) and v.dtype == np.float32
+    assert (v == 0).all()
+    assert client.report.failures == 1
+    # invariant: one versions_used entry per attempt, even on failure
+    assert len(client.report.versions_used) == client.report.attempts \
+        == attempts_before + 1
+
+    # a failed batch answered from NO version must not count as mixed
+    assert client.report.versions_used[-1] == []
+    assert client.report.mixed_version_batches == 0
+
+    # even when the FIRST shard visited is the dead one (nothing gathered
+    # yet), a client that has succeeded before knows the table's value
+    # shape/dtype and returns correctly-shaped zeros
+    for s in range(plan.n_shards):
+        for rep in reps[s]:
+            rep.serving = s == plan.n_shards - 1    # only the last survives
+    f, v, _ = client.query(q)
+    assert not f.any()
+    assert v.shape == (len(q), 4) and v.dtype == np.float32
+
+    # the enforcing client with a fully-dead shard refuses up front (the
+    # pin is unsatisfiable) — same all-or-nothing reply, same invariants
+    strict = ConsistentBatchClient(reps, plan.shard_of, enforce=True)
+    f, v, _ = strict.query(q)
+    assert not f.any() and (np.asarray(v) == 0).all()
+    assert strict.report.failures == 1
+    assert len(strict.report.versions_used) == strict.report.attempts == 1
+
+
+def test_cluster_sim_delta_generations_during_rolling_update():
+    """ISSUE 2 tentpole wiring: replicas accept *delta* generations during
+    a rolling update (engine.publish_delta behind the fleet); batches stay
+    single-version and the post-update data plane equals base + all deltas
+    applied in order, bitwise."""
+    n = 256
+    keys = np.arange(1, n + 1, dtype=np.uint64)
+
+    def tables(version):
+        return [ScalarTable("t", keys, np.zeros(n, dtype=np.uint64))], []
+
+    def deltas(version):
+        sel = keys[(version * 13) % (n - n // 4): ][:n // 4]
+        return ({"t": (sel, np.full(len(sel), version, dtype=np.uint64))},
+                {})
+
+    cfg = SimConfig(n_shards=4, n_replicas=2, seed=7)
+    import pytest
+    with pytest.raises(ValueError):
+        ClusterSim(cfg, deltas_for_version=deltas)   # no base build
+    sim = ClusterSim(cfg, protocol="paper", tables_for_version=tables,
+                     deltas_for_version=deltas)
+    v = 1
+    for step in range(30):
+        if step % 5 == 1:
+            sim.start_rolling_update(v)
+            v += 1
+        sim.sim.run_until(sim.sim.now + 1_000_000)
+        ok, versions, _lat, data = sim.query_batch({"t": keys[:64]})
+        if not ok:
+            continue
+        found, payloads = data["t"]
+        assert found.all()
+        assert len(set(versions)) == 1
+        assert set(int(p) for p in payloads) <= set(range(versions[0] + 1))
+    assert sim.engine.stats.delta_publishes > 0
+    assert sim.metrics.mixed_version_batches == 0
+    want = np.zeros(n, dtype=np.uint64)
+    for vv in range(1, sim.current_version + 1):
+        upserts, _ = deltas(vv)
+        sel, pays = upserts["t"]
+        want[sel.astype(np.int64) - 1] = pays
+    res = sim.engine.query({"t": keys}, version=sim.current_version,
+                           strict=True)
+    assert (res["t"].payloads == want).all()
+
+
 def test_cluster_sim_data_plane_serves_embedding_tables():
     """The data plane is table-kind-agnostic: embedding tables return value
     rows, not payloads."""

@@ -1,0 +1,191 @@
+"""Dict-oracle differential tests for the in-place Update Subsystem path:
+``HashTable.insert/update/delete`` + ``apply_delta`` across all six variants
+(ROADMAP convention: last-write-wins dict oracle, random AND adversarial key
+sets, host- and device-side, home-pure chains for relocating variants)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # image has no hypothesis: use the shim
+    from minihyp import given, settings, strategies as st
+
+from repro.core import hashcore as hc
+from repro.core import lookup as lk
+from repro.core import neighborhash as nh
+
+from test_neighborhash_properties import (MISSES, assert_home_pure,
+                                          dict_oracle, keys_with_home)
+
+RELOCATING = ("perfect_cellar", "linear_lodger", "neighbor_probing",
+              "neighborhash")
+
+
+def assert_matches(table: nh.HashTable, oracle: dict, misses: np.ndarray):
+    if oracle:
+        keys = np.fromiter(oracle.keys(), dtype=np.uint64, count=len(oracle))
+        want = np.fromiter(oracle.values(), dtype=np.uint64,
+                           count=len(oracle))
+        f, p = table.lookup_host(keys)
+        assert f.all(), "oracle key missing after mutation"
+        assert (p == want).all(), "payload mismatch vs dict oracle"
+    fm, _ = table.lookup_host(np.asarray(misses, dtype=np.uint64))
+    assert not fm.any(), "phantom hit after mutation"
+    assert table.stats.n == len(oracle)
+    if table.variant != "linear" and oracle:
+        q = np.concatenate([keys, np.asarray(misses, dtype=np.uint64)])
+        fd, pd = lk.lookup_table(table, q)
+        assert np.asarray(fd)[:len(keys)].all(), "device miss on live key"
+        assert not np.asarray(fd)[len(keys):].any()
+        assert (pd[:len(keys)] == want).all(), "device payload mismatch"
+
+
+# ---------------------------------------------------------------------------
+# apply_delta: random op sequences vs the dict oracle, every variant
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4)
+def test_random_delta_sequences_match_dict_oracle(variant, seed):
+    rng = np.random.default_rng(seed)
+    keys, payloads = nh.random_kv(400, seed=seed % 1000)
+    table = nh.build_grow(keys, payloads, variant=variant, load_factor=0.7)
+    oracle = dict_oracle(keys, payloads)
+    for _ in range(4):
+        n_new = int(rng.integers(0, 80))
+        n_upd = int(rng.integers(0, 80))
+        n_del = int(rng.integers(0, 80))
+        new_k = rng.integers(10**7, 2**62, n_new).astype(np.uint64)
+        live = np.fromiter(oracle.keys(), dtype=np.uint64)
+        upd_k = rng.choice(live, min(n_upd, len(live)), replace=False)
+        uk = np.concatenate([new_k, upd_k])
+        up = rng.integers(0, hc.PAYLOAD_MASK, len(uk)).astype(np.uint64)
+        dk = rng.choice(live, min(n_del, len(live)), replace=False)
+        table = nh.apply_delta(table, uk, up, dk)
+        for k, p in zip(uk, up):
+            oracle[int(k)] = int(p)
+        for k in dk:
+            oracle.pop(int(k), None)
+        assert_matches(table, oracle, MISSES)
+        if table.variant in RELOCATING:
+            assert_home_pure(table)
+
+
+# ---------------------------------------------------------------------------
+# direct in-place ops (no fallback): relocating variants + linear
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant", RELOCATING + ("linear",))
+def test_inplace_ops_match_dict_oracle(variant):
+    rng = np.random.default_rng(7)
+    keys, payloads = nh.random_kv(600, seed=11)
+    table = nh.build_grow(keys, payloads, variant=variant, load_factor=0.6)
+    oracle = dict_oracle(keys, payloads)
+    for step in range(400):
+        op = rng.integers(0, 4)
+        if op == 0:
+            k = int(rng.integers(1, 2**62))
+            p = int(rng.integers(0, hc.PAYLOAD_MASK))
+            table.insert(k, p)
+            oracle[k] = p
+        elif op == 1 and oracle:
+            k = int(rng.choice(list(oracle)))
+            p = int(rng.integers(0, hc.PAYLOAD_MASK))
+            table.update(k, p)
+            oracle[k] = p
+        elif op == 2 and oracle:
+            k = int(rng.choice(list(oracle)))
+            assert table.delete(k)
+            del oracle[k]
+        else:
+            assert not table.delete(int(2**63 + step))    # absent: False
+    assert_matches(table, oracle, MISSES)
+    if variant in RELOCATING:
+        assert_home_pure(table)
+
+
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+def test_delete_then_reinsert_roundtrip(variant):
+    keys, payloads = nh.random_kv(300, seed=3)
+    table = nh.build_grow(keys, payloads, variant=variant, load_factor=0.7)
+    half = keys[::2]
+    table = nh.apply_delta(table, (), (), half)
+    oracle = {int(k): int(p) for k, p in zip(keys, payloads)
+              if int(k) not in set(int(x) for x in half)}
+    assert_matches(table, oracle, half[:64])
+    table = nh.apply_delta(table, half, payloads[::2] ^ np.uint64(1))
+    for k, p in zip(half, payloads[::2] ^ np.uint64(1)):
+        oracle[int(k)] = int(p)
+    assert_matches(table, oracle, MISSES)
+    if variant in RELOCATING:
+        assert_home_pure(table)
+
+
+def test_update_missing_key_raises():
+    keys, payloads = nh.random_kv(50, seed=1)
+    t = nh.build_grow(keys, payloads)
+    with pytest.raises(KeyError):
+        t.update(int(2**62), 1)
+    with pytest.raises(ValueError):
+        t.insert(hc.EMPTY_KEY, 1)
+    with pytest.raises(ValueError):
+        t.insert(1, 1 << 60)          # payload > 52 bits
+
+
+def test_copy_isolates_mutations():
+    keys, payloads = nh.random_kv(200, seed=9)
+    t = nh.build_grow(keys, payloads)
+    t2 = t.copy()
+    t2.insert(int(10**9), 42)
+    t2.delete(int(keys[0]))
+    t2.update(int(keys[1]), 7)
+    f, p = t.lookup_host(keys)
+    assert f.all() and (p == payloads).all()
+    f, _ = t.lookup_host(np.array([10**9], dtype=np.uint64))
+    assert not f.any()
+
+
+# ---------------------------------------------------------------------------
+# adversarial: growth fallback + colliding-home chains under churn
+# ---------------------------------------------------------------------------
+def test_insert_beyond_capacity_falls_back_to_grow():
+    keys, payloads = nh.random_kv(100, seed=5)
+    t = nh.build(keys, payloads, variant="neighborhash", capacity=128)
+    uk, up = nh.random_kv(400, seed=6)
+    with pytest.raises(nh.BuildError):
+        for k, p in zip(uk, up):
+            t.insert(int(k), int(p))      # must eventually fail in place
+    t = nh.build(keys, payloads, variant="neighborhash", capacity=128)
+    t2 = nh.apply_delta(t, uk, up, copy=True)
+    assert t2.capacity > 128
+    oracle = dict_oracle(np.concatenate([keys, uk]),
+                         np.concatenate([payloads, up]))
+    assert_matches(t2, oracle, MISSES)
+    assert_home_pure(t2)
+    # copy=True left the original untouched at its old capacity
+    assert t.capacity == 128
+    f, p = t.lookup_host(keys)
+    assert f.all() and (p == payloads).all()
+
+
+@pytest.mark.parametrize("variant", RELOCATING)
+def test_colliding_home_chain_churn(variant):
+    """Insert/delete churn on keys all homed at ONE bucket: chain surgery
+    (tail-pull delete, lodger relocation) in its worst case."""
+    cap = 2048
+    hot = keys_with_home(37, 24, cap)
+    payloads = np.arange(1, len(hot) + 1, dtype=np.uint64)
+    t = nh.build(np.array([], dtype=np.uint64), np.array([], dtype=np.uint64),
+                 variant=variant, capacity=cap)
+    oracle = {}
+    rng = np.random.default_rng(0)
+    for step in range(200):
+        if oracle and rng.random() < 0.45:
+            k = int(rng.choice(list(oracle)))
+            assert t.delete(k)
+            del oracle[k]
+        else:
+            i = int(rng.integers(0, len(hot)))
+            t.insert(int(hot[i]), int(payloads[i]))
+            oracle[int(hot[i])] = int(payloads[i])
+        assert_home_pure(t)
+    assert_matches(t, oracle, MISSES)

@@ -225,6 +225,137 @@ class TestClusterSim:
         assert m.mixed_version_batches == 0
 
 
+class TestHybridStoreRegressions:
+    """ISSUE 2 satellite fixes, each pinned by a regression test."""
+
+    def _store(self, n=60, vb=8, hot_fraction=0.2, **kw):
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+        vals = (np.arange(n, dtype=np.uint8)[:, None]
+                * np.ones((1, vb), np.uint8))
+        return keys, vals, HybridKVStore(keys, vals.copy(),
+                                         hot_fraction=hot_fraction, **kw)
+
+    def test_duplicate_cold_keys_one_batch_admit_once(self):
+        """The same cold key twice in one batch used to queue two _admit
+        calls: the second popped a second hot slot and orphaned the first,
+        and a later maintain() evicting the stale slot flipped the key cold
+        while a live hot copy existed.  Now: one admission, and the
+        maintain() round-trip reads back the correct value."""
+        keys, vals, st_ = self._store(hot_fraction=0.2)
+        st_.maintain(target_free_fraction=0.5)          # make hot room
+        free_before = len(st_._hot_free)
+        k = int(keys[-1])                               # cold key
+        f, out = st_.get_batch([k, k, k])
+        assert f.all() and (out == vals[-1]).all()
+        assert st_.stats.admissions == 1
+        assert free_before - len(st_._hot_free) == 1    # exactly one slot
+        # no orphan: every occupied hot slot maps to a key whose index
+        # payload points back at it
+        import repro.core.hashcore as hc_
+        occupied = np.flatnonzero(st_._hot_key != np.uint64(hc_.EMPTY_KEY))
+        for slot in occupied:
+            ok, payload, _, _ = st_.index.probe_trace(
+                int(st_._hot_key[int(slot)]))
+            assert ok and not (payload & TIER_MASK) \
+                and int(payload) == int(slot)
+        st_.maintain(target_free_fraction=1.0)          # evict everything
+        f, out = st_.get_batch([k], admit=False)
+        assert f.all() and (out == vals[-1]).all()
+
+    def test_hot_fraction_zero_store_still_admits(self):
+        """hot_capacity is clamped to 1 when hot_fraction=0; the slot was
+        never occupied at build time so it never entered _hot_free and the
+        hot tier was permanently unusable."""
+        keys, vals, st_ = self._store(hot_fraction=0.0)
+        f, out = st_.get_batch(keys[:3])
+        assert f.all()
+        assert st_.stats.admissions > 0                 # the one slot filled
+        f, out = st_.get_batch([keys[0]])               # admitted first
+        assert f.all() and (out == vals[0]).all()
+        assert st_.stats.hot_hits > 0
+
+    def test_update_value_rejects_wrong_shape(self):
+        keys, vals, st_ = self._store(vb=8)
+        with pytest.raises(ValueError):
+            st_.update_value(int(keys[0]), np.uint8(7))         # scalar
+        with pytest.raises(ValueError):
+            st_.update_value(int(keys[0]), np.zeros(3, np.uint8))
+        f, out = st_.get_batch([keys[0]])
+        assert (out == vals[0]).all()                   # row not clobbered
+
+    def test_memory_bytes_counts_next_idx_of_noninline_variants(self):
+        _, _, side = self._store(variant="neighbor_probing")
+        _, _, inl = self._store(variant="neighborhash")
+        assert side.index.next_idx is not None
+        assert side.memory_bytes()["index"] == \
+            side.index.capacity * 16 + side.index.next_idx.nbytes
+        assert inl.memory_bytes()["index"] == inl.index.capacity * 16
+
+    def test_upsert_batch_extends_cold_file_and_index(self):
+        keys, vals, st_ = self._store(n=40, vb=8)
+        rows_before = st_._cold.shape[0]
+        new_keys = np.array([1001, 1002, 5, 1001], dtype=np.uint64)
+        new_vals = np.stack([np.full(8, i + 1, np.uint8) for i in range(4)])
+        r = st_.upsert_batch(new_keys, new_vals)
+        assert r["inserted"] == 2 and r["updated"] == 1
+        assert st_._cold.shape[0] == rows_before + 2    # new keys only
+        assert st_.n == 42
+        f, out = st_.get_batch([1001, 1002, 5])
+        assert f.all()
+        assert (out[0] == 4).all()                      # last write wins
+        assert (out[1] == 2).all()
+        assert (out[2] == 3).all()
+        with pytest.raises(ValueError):
+            st_.upsert_batch(new_keys, new_vals[:, :4])  # wrong width
+
+    def test_clone_copy_on_write_isolation(self):
+        """A clone takes COW upserts + deletes while the original keeps
+        serving every row bitwise (the delta-publish retention window)."""
+        keys, vals, st_ = self._store(n=50, vb=8)
+        st_.get_batch(keys)                             # warm admissions
+        cl = st_.clone()
+        cl.upsert_batch(keys[:10],
+                        np.full((10, 8), 200, np.uint8), copy_on_write=True)
+        cl.delete_batch(keys[20:25])
+        cl.upsert_batch(np.array([9999], dtype=np.uint64),
+                        np.full((1, 8), 123, np.uint8), copy_on_write=True)
+        # clone view
+        f, out = cl.get_batch(keys[:10], admit=False)
+        assert f.all() and (out == 200).all()
+        f, _ = cl.get_batch(keys[20:25])
+        assert not f.any()
+        f, out = cl.get_batch([9999])
+        assert f.all() and (out == 123).all()
+        # original bitwise intact, including after ITS eviction churn
+        st_.maintain(target_free_fraction=1.0)
+        f, out = st_.get_batch(keys, admit=False)
+        assert f.all() and (out == vals).all()
+        f, _ = st_.get_batch([9999])
+        assert not f.any()
+
+    def test_clone_retires_parent_from_write_path(self):
+        """Two writers allocating slots from divergent views of the shared
+        cold file's end would corrupt each other's rows — cloning makes the
+        clone the single writer; parent writes raise, parent reads and
+        tier movement keep working."""
+        keys, vals, st_ = self._store(n=30, vb=8)
+        cl = st_.clone()
+        with pytest.raises(RuntimeError):
+            st_.upsert_batch(np.array([8888], dtype=np.uint64),
+                             np.full((1, 8), 1, np.uint8))
+        with pytest.raises(RuntimeError):
+            st_.update_value(int(keys[0]), np.full(8, 1, np.uint8))
+        with pytest.raises(RuntimeError):
+            st_.delete_batch(keys[:1])
+        st_.maintain(target_free_fraction=0.5)          # still allowed
+        f, out = st_.get_batch(keys)                    # reads untouched
+        assert f.all() and (out == vals).all()
+        cl.upsert_batch(np.array([9999], dtype=np.uint64),
+                        np.full((1, 8), 111, np.uint8), copy_on_write=True)
+        f, out = cl.get_batch([9999])
+        assert f.all() and (out == 111).all()
+
+
 class TestHybridStoreProperties:
     @given(st.integers(0, 5000), st.floats(0.05, 0.5))
     @settings(max_examples=15, deadline=None)
