@@ -1,0 +1,142 @@
+"""Concurrent serving: QueryServer coalescing vs. one-request-one-query.
+
+Workload: N client threads, each firing small zipfian feature requests
+(two scalar tables + one hybrid embedding table, ~150 keys/request) — the
+recsys serving regime where per-request key sets are tiny but concurrent
+traffic is heavy, so per-query fixed costs (host staging + one launch set
+per request) dominate the naive path.
+
+Rows (per client count c and fused key budget b):
+  serving/naive_c{c}          each client calls engine.query directly
+  serving/coalesced_c{c}_b{b} clients submit to a QueryServer; requests
+                              coalesce into deadline-aware micro-batches
+
+``derived`` carries qps, speedup over naive at the same client count, and
+server p99/occupancy.  Acceptance target: coalesced >= 2x naive qps at
+>= 8 concurrent clients.
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_serving.py
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.engine import EmbeddingTable, MultiTableEngine, ScalarTable
+from repro.data.synthetic import zipf_ids
+from repro.serve.scheduler import BatchPolicy
+from repro.serve.server import QueryServer
+
+KEYS_SCALAR = 96
+KEYS_EMB = 48
+
+
+def _requests(seed: int, n_requests: int, keys: np.ndarray):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_requests):
+        qa = keys[zipf_ids(rng, len(keys), KEYS_SCALAR).astype(np.int64)]
+        qb = keys[zipf_ids(rng, len(keys), KEYS_SCALAR).astype(np.int64)]
+        qe = keys[zipf_ids(rng, len(keys), KEYS_EMB).astype(np.int64)]
+        out.append({"item_attr": qa, "cat_attr": qb, "item_emb": qe})
+    return out
+
+
+def _drive(n_clients: int, n_requests: int, keys: np.ndarray, fn):
+    """fn(request) per client thread; returns (wall_s, per-request ms)."""
+    reqs = [_requests(1000 + c, n_requests, keys) for c in range(n_clients)]
+    lats: list[float] = []
+    lock = threading.Lock()
+
+    def client(c: int):
+        mine = []
+        for req in reqs[c]:
+            t0 = time.perf_counter()
+            fn(req)
+            mine.append((time.perf_counter() - t0) * 1e3)
+        with lock:
+            lats.extend(mine)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, lats
+
+
+def main(quick: bool = False) -> None:
+    n_items = 20_000 if quick else 100_000
+    n_requests = 30 if quick else 60
+    client_counts = (1, 8) if quick else (1, 4, 8, 16)
+    key_budgets = (2048, 8192) if quick else (1024, 4096, 16384)
+    max_clients = max(client_counts)
+
+    rng = np.random.default_rng(0)
+    keys = np.arange(1, n_items + 1, dtype=np.uint64)
+    engine = MultiTableEngine(
+        [ScalarTable("item_attr",
+                     keys, rng.integers(0, 1 << 50, n_items)
+                     .astype(np.uint64)),
+         ScalarTable("cat_attr",
+                     keys, rng.integers(0, 1 << 50, n_items)
+                     .astype(np.uint64))],
+        [EmbeddingTable("item_emb", keys,
+                        rng.integers(0, 255, (n_items, 32), dtype=np.uint8),
+                        hot_fraction=0.2)],
+        max_shard_bytes=1 << 20)
+
+    # warm every pad shape both paths will see: sequential (occupancy-1
+    # pads) and full fan-in (coalesced pads), twice so the zipfian unique
+    # counts visit the pad boundaries
+    _drive(1, n_requests, keys, engine.query)
+    for key_budget in key_budgets:
+        with QueryServer(engine, BatchPolicy(max_batch_keys=key_budget,
+                                             max_wait_s=0.003)) as warm_srv:
+            for _ in range(2):
+                _drive(max_clients, n_requests, keys,
+                       lambda r: warm_srv.query(r))
+
+    naive_qps = {}
+    for c in client_counts:
+        wall, lats = _drive(c, n_requests, keys, engine.query)
+        qps = c * n_requests / wall
+        naive_qps[c] = qps
+        common.row(f"serving/naive_c{c}", np.median(lats) * 1e3,
+                   f"qps={qps:.0f} p99={np.percentile(lats, 99):.1f}ms")
+
+    best_8plus = 0.0
+    for key_budget in key_budgets:
+        for c in client_counts:
+            server = QueryServer(engine,
+                                 BatchPolicy(max_batch_keys=key_budget,
+                                             max_wait_s=0.003))
+            _drive(c, 8, keys, lambda r: server.query(r))   # settle EWMA
+            server.reset_stats()
+            wall, lats = _drive(c, n_requests, keys,
+                                lambda r: server.query(r))
+            snap = server.stats_snapshot()
+            server.close()
+            qps = c * n_requests / wall
+            speedup = qps / naive_qps[c]
+            if c >= 8:
+                best_8plus = max(best_8plus, speedup)
+            common.row(
+                f"serving/coalesced_c{c}_b{key_budget}",
+                np.median(lats) * 1e3,
+                f"qps={qps:.0f} speedup={speedup:.2f}x "
+                f"p99={np.percentile(lats, 99):.1f}ms "
+                f"occupancy={snap.mean_occupancy:.1f} "
+                f"coalesce={snap.coalesce_rate:.0%}")
+    common.row("serving/acceptance_8clients",
+               0.0, f"best_speedup={best_8plus:.2f}x (target >= 2x)")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main(quick=True)

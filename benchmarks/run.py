@@ -11,14 +11,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t2,t3,t4,f9,f10,t5,mt")
+                    help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv")
     args = ap.parse_args()
 
     from benchmarks import (bench_scalar_tables, bench_size_sweep,
                             bench_ablation, bench_batch_latency,
                             bench_vectorization, bench_consistency,
                             bench_resource, bench_multitable,
-                            bench_incremental)
+                            bench_incremental, bench_serving)
     suites = {
         "t1": bench_scalar_tables.main,
         "t2": bench_size_sweep.main,
@@ -29,6 +29,7 @@ def main() -> None:
         "t5": bench_resource.main,
         "mt": bench_multitable.main,
         "inc": bench_incremental.main,
+        "srv": bench_serving.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,us_per_call,derived")

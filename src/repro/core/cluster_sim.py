@@ -128,7 +128,9 @@ class ClusterSim:
 
     def __init__(self, cfg: SimConfig, protocol: str = "paper",
                  tables_for_version: Optional[Callable] = None,
-                 deltas_for_version: Optional[Callable] = None):
+                 deltas_for_version: Optional[Callable] = None,
+                 use_query_server: bool = False,
+                 server_policy=None):
         assert protocol in ("paper", "naming")
         self.cfg = cfg
         self.protocol = protocol
@@ -154,6 +156,10 @@ class ClusterSim:
                 "deltas_for_version requires tables_for_version: the engine "
                 "data plane needs a base build to apply deltas to")
         self.engine = None
+        self.query_server = None
+        if use_query_server and tables_for_version is None:
+            raise ValueError("use_query_server needs a data plane: pass "
+                             "tables_for_version")
         if tables_for_version is not None:
             from repro.core.engine import MultiTableEngine
             scalars, embeddings = tables_for_version(0)
@@ -163,6 +169,25 @@ class ClusterSim:
             self.engine = MultiTableEngine(
                 scalars, embeddings,
                 retain=cfg.retain_versions + cfg.n_replicas, version=0)
+            if use_query_server:
+                # replicas front their data plane with the concurrent
+                # serving layer: every sim query rides a QueryServer
+                # micro-batch (one pinned version per batch) while rolling
+                # updates publish new builds into the same engine.  The
+                # sim issues queries one at a time and blocks on each, so
+                # the default close rule's max_wait would be pure idle
+                # time — close immediately instead
+                from repro.serve.scheduler import BatchPolicy
+                from repro.serve.server import QueryServer
+                self.query_server = QueryServer(
+                    self.engine,
+                    policy=server_policy or BatchPolicy(max_wait_s=0.0))
+
+    def close(self) -> None:
+        """Shut down the query-server pipeline (no-op without one)."""
+        if self.query_server is not None:
+            self.query_server.close()
+            self.query_server = None
 
     # ------------------------------------------------------------------
     # update machinery
@@ -308,7 +333,10 @@ class ClusterSim:
             # strict: a replica that claims version v really holds it;
             # silently substituting a newer build would hide the very
             # mixing this data plane exists to expose
-            res = self.engine.query(sub, version=v, strict=True)
+            if self.query_server is not None:
+                res = self.query_server.query(sub, version=v, strict=True)
+            else:
+                res = self.engine.query(sub, version=v, strict=True)
             for name, mask in masks.items():
                 tr = res[name]
                 found[name][mask] = tr.found

@@ -28,6 +28,9 @@ through core/hybrid_store.HybridKVStore (dedup also dedups NVMe IO).
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Iterable, Iterator, Optional, Sequence
 
 import jax
@@ -210,7 +213,9 @@ class _FusedBuild:
             return (tbl.variant, tbl.home_capacity, tbl.inline,
                     tbl.capacity, tbl.max_probe_len())
 
-        touched: set[int] = set()
+        # route the delta: per touched shard, the list of (table, keys)
+        # pieces it owns — shards are independent, so they build in parallel
+        shard_work: dict[int, list[tuple]] = {}
         for name in sorted(set(upserts) | set(deletes)):
             if self.table_kinds[name] != "scalar":
                 continue
@@ -227,13 +232,38 @@ class _FusedBuild:
                 kd = dk[d_owner == s]
                 if not len(ku) and not len(kd):
                     continue
+                shard_work.setdefault(s, []).append((bi, ku, pu, kd))
+
+        def build_shard(s: int) -> tuple[int, list[tuple]]:
+            out = []
+            for bi, ku, pu, kd in shard_work[s]:
                 tbl = nh.apply_delta(prev.shard_tables[s][bi], ku, pu, kd,
                                      copy=True)
+                arrs = {k: jnp.asarray(v)
+                        for k, v in tbl.device_arrays().items()}
+                out.append((bi, tbl, arrs))
+            return s, out
+
+        # the per-shard capacity copies / device puts release the GIL and
+        # overlap on the pool; the per-key insert loop inside apply_delta
+        # does NOT (ROADMAP: GIL-free delta application), so threads only
+        # pay off when the copy side is substantive — tiny shards convoy
+        # on the GIL and build faster serially
+        copy_bytes = sum(prev.shard_tables[s][bi].capacity * 16
+                         for s, tasks in shard_work.items()
+                         for bi, *_ in tasks)
+        if len(shard_work) > 1 and \
+                copy_bytes // len(shard_work) >= (1 << 20):
+            # result adoption stays deterministic (each shard's output
+            # lands in its own slot regardless of completion order)
+            built = list(_shard_pool().map(build_shard, sorted(shard_work)))
+        else:
+            built = [build_shard(s) for s in sorted(shard_work)]
+        for s, out in built:
+            for bi, tbl, arrs in out:
                 self.shard_tables[s][bi] = tbl
-                self.shard_arrays[s][bi] = {
-                    k: jnp.asarray(v)
-                    for k, v in tbl.device_arrays().items()}
-                touched.add(s)
+                self.shard_arrays[s][bi] = arrs
+        touched = set(shard_work)
         # fused programs bake max_probes/home_capacity statically; reuse
         # prev's compiled fn unless one of its tables' statics actually
         # changed (a small delta usually leaves max chain length alone, so
@@ -248,16 +278,25 @@ class _FusedBuild:
         self.shards_copied = len(touched)
         self.shards_shared = n_shards - len(touched)
 
+        cloned_parents = []
         for name in sorted(set(upserts) | set(deletes)):
             if self.table_kinds[name] != "embedding":
                 continue
-            store = prev.stores[name].clone()
+            parent = prev.stores[name]
+            store = parent.clone(retire=False)
             if name in upserts:
                 k, v = upserts[name]
                 store.upsert_batch(k, v, copy_on_write=True)
             if name in deletes:
                 store.delete_batch(deletes[name])
             self.stores[name] = store
+            cloned_parents.append(parent)
+        # hand over the write paths only now that EVERY table's delta
+        # applied: a delta that raised above (bad dtype, growth failure)
+        # leaves the base build's stores writable, so a corrected
+        # publish_delta retry works instead of hitting retired stores
+        for parent in cloned_parents:
+            parent.retire()
         return self
 
     @property
@@ -309,6 +348,23 @@ class VersionEvictedError(KeyError):
     """Strict query pinned a version no longer in the retention window."""
 
 
+# shared executor for per-shard delta builds: publish_delta runs at rolling-
+# update cadence (tens of ms), so paying pool spawn/teardown per delta would
+# rival the O(delta) work the incremental path exists to minimize
+_delta_pool: Optional[ThreadPoolExecutor] = None
+_delta_pool_lock = threading.Lock()
+
+
+def _shard_pool() -> ThreadPoolExecutor:
+    global _delta_pool
+    with _delta_pool_lock:
+        if _delta_pool is None:
+            _delta_pool = ThreadPoolExecutor(
+                max_workers=os.cpu_count() or 1,
+                thread_name_prefix="delta-shard")
+        return _delta_pool
+
+
 class MultiTableEngine:
     """N named tables behind one fused batch-query front end.
 
@@ -325,6 +381,14 @@ class MultiTableEngine:
         self.buckets_per_line = buckets_per_line
         self.window = VersionWindow(retain)
         self.stats = EngineStats()
+        # concurrent _finish calls (QueryServer worker pool) update the
+        # shared counters under this lock; query paths stay lock-free
+        self._stats_lock = threading.Lock()
+        # publishes serialize: publish_delta's read-prev -> build -> install
+        # must be atomic, or two concurrent publishers would both clone the
+        # same base build's stores (two live writers on one shared cold
+        # file) and one delta would silently vanish
+        self._publish_lock = threading.Lock()
         if scalars or embeddings:
             self.publish(version, scalars, embeddings)
 
@@ -336,10 +400,11 @@ class MultiTableEngine:
         """Build + install one consistent version of the full table set.
         The previous ``retain-1`` builds stay queryable, so batches pinned
         mid-rollout still succeed (paper Fig 7/8)."""
-        build = _FusedBuild(scalars, embeddings,
-                            max_shard_bytes=self.max_shard_bytes,
-                            buckets_per_line=self.buckets_per_line)
-        self.window.publish(version, build)
+        with self._publish_lock:
+            build = _FusedBuild(scalars, embeddings,
+                                max_shard_bytes=self.max_shard_bytes,
+                                buckets_per_line=self.buckets_per_line)
+            self.window.publish(version, build)
 
     def publish_delta(self, version: int,
                       upserts: Optional[dict] = None,
@@ -355,16 +420,19 @@ class MultiTableEngine:
         lookup programs with the previous build, so retaining the old
         version for in-flight batches stays O(delta).  A batch pinned to
         the previous version keeps reading the old rows bitwise."""
-        ok, _, prev = self.window.get(None)
-        if not ok:
-            raise RuntimeError(
-                "publish_delta needs a published base version; call "
-                "publish() first")
-        build = _FusedBuild.from_delta(prev, upserts or {}, deletes or {})
-        self.window.publish(version, build)
-        self.stats.delta_publishes += 1
-        self.stats.shards_copied += build.shards_copied
-        self.stats.shards_shared += build.shards_shared
+        with self._publish_lock:
+            ok, _, prev = self.window.get(None)
+            if not ok:
+                raise RuntimeError(
+                    "publish_delta needs a published base version; call "
+                    "publish() first")
+            build = _FusedBuild.from_delta(prev, upserts or {},
+                                           deletes or {})
+            self.window.publish(version, build)
+        with self._stats_lock:
+            self.stats.delta_publishes += 1
+            self.stats.shards_copied += build.shards_copied
+            self.stats.shards_shared += build.shards_shared
 
     @property
     def versions(self) -> list[int]:
@@ -385,8 +453,13 @@ class MultiTableEngine:
     # ------------------------------------------------------------------
     def _pin(self, version: Optional[int],
              strict: bool = False) -> tuple[int, _FusedBuild]:
-        ok, v, build = self.window.get(version)
-        if not ok:
+        # the NACK -> re-pin handshake loops: between one get() and the
+        # next, a fast concurrent publisher may evict the hinted version
+        # again, so a single retry is not enough under serving load
+        for _ in range(64):
+            ok, v, build = self.window.get(version)
+            if ok:
+                return v, build
             if v < 0:
                 raise RuntimeError("engine has no published version")
             if strict:
@@ -394,10 +467,11 @@ class MultiTableEngine:
                     f"version {version} not retained; have {self.versions}")
             # NACK: requested version evicted from the window — re-pin to
             # the newest retained version (protocol metadata in the reply)
-            self.stats.repins += 1
-            ok, v, build = self.window.get(v)
-            assert ok
-        return v, build
+            with self._stats_lock:
+                self.stats.repins += 1
+            version = v
+        raise RuntimeError(
+            "could not pin a version: publisher outran the re-pin loop")
 
     def _stage(self, request: dict[str, np.ndarray],
                version: Optional[int] = None,
@@ -497,12 +571,13 @@ class MultiTableEngine:
             values = vals_u[se.inverse]
             hits += int(found.sum())
             tables[se.name] = TableResult(found=found, values=values)
-        self.stats.batches += 1
-        self.stats.keys_requested += staged.keys_requested
-        self.stats.keys_deviceside += staged.keys_deviceside
-        self.stats.hits += hits
-        self.stats.launches += inflight.launches
-        self.stats.versions_served.add(staged.version)
+        with self._stats_lock:
+            self.stats.batches += 1
+            self.stats.keys_requested += staged.keys_requested
+            self.stats.keys_deviceside += staged.keys_deviceside
+            self.stats.hits += hits
+            self.stats.launches += inflight.launches
+            self.stats.versions_served.add(staged.version)
         return QueryResult(version=staged.version, tables=tables)
 
     # ------------------------------------------------------------------
@@ -516,6 +591,24 @@ class MultiTableEngine:
         surfaces the NACK (VersionEvictedError) instead of re-pinning."""
         return self._finish(self._launch(
             self._stage(request, version, strict)))
+
+    def begin(self, request: dict[str, np.ndarray],
+              version: Optional[int] = None,
+              strict: bool = False) -> _InflightBatch:
+        """Split-phase face for serving pipelines (serve/server.QueryServer):
+        stage (host dedup + shard routing, pins the version for the batch's
+        whole lifetime) and launch (async device dispatch) WITHOUT blocking
+        on results.  ``finish`` blocks and scatters back.  The returned
+        batch's build reference keeps its version's tables alive even if the
+        window evicts it mid-flight."""
+        return self._launch(self._stage(request, version, strict))
+
+    def finish(self, inflight: _InflightBatch) -> QueryResult:
+        """Second half of ``begin``: block on the device, inverse-gather to
+        request order, resolve embedding tables.  Safe to call from a worker
+        thread while another thread begins the next batch — that overlap is
+        the server's double buffering."""
+        return self._finish(inflight)
 
     def query_stream(self, requests: Iterable[dict[str, np.ndarray]],
                      version: Optional[int] = None

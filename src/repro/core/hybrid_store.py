@@ -115,6 +115,17 @@ class HybridKVStore:
                               load_factor=load_factor,
                               buckets_per_line=buckets_per_line)
         self._lock = threading.Lock()   # update-path only; reads lock-free
+        # seqlock for the lock-free read path: every tier-moving mutation
+        # (_admit / eviction / value or index write) bumps this once on
+        # entry and once on exit under _lock, so it is odd while arrays are
+        # mid-mutation; get_batch retries its probe+gather when the counter
+        # moved, instead of risking a torn payload read (e.g. a cold->hot
+        # repoint seen half-written classifying a hot slot as a cold one)
+        self._write_seq = 0
+        # counter updates from concurrent readers (QueryServer finish
+        # workers) go through their own lock so they never contend with —
+        # or get lost against — the long-held update-path _lock
+        self._stats_lock = threading.Lock()
         self._retired = False           # True once a clone() owns the writes
         self._evict_thread: Optional[threading.Thread] = None
         self._evict_stop = threading.Event()
@@ -126,39 +137,76 @@ class HybridKVStore:
                   ) -> tuple[np.ndarray, np.ndarray]:
         """-> (found bool[n], values uint8[n, value_bytes]).
 
-        One index probe per key; hot hits gather from memory; cold misses do
-        one memmap IO each and are optionally admitted to the hot tier."""
-        keys = np.asarray(keys, dtype=np.uint64)
-        out = np.zeros((len(keys), self.value_bytes), dtype=np.uint8)
-        found = np.zeros(len(keys), dtype=bool)
-        self._clock += 1
-        # insertion-ordered dedup: the same cold key twice in one batch must
-        # queue ONE admission (a second _admit would pop a second hot slot
-        # and orphan the first); _admit re-derives the slot under the lock
-        cold_to_admit: dict[int, None] = {}
-        for i, k in enumerate(keys):
-            ok, payload, _, _ = self.index.probe_trace(int(k))
-            self.stats.lookups += 1
-            if not ok:
-                self.stats.not_found += 1
+        One vectorized index probe over the whole batch
+        (``NeighborHash.lookup_host_batch``, the numpy masked-advance loop);
+        hot hits gather from memory; cold misses do one memmap IO each and
+        are optionally admitted to the hot tier."""
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        with self._stats_lock:
+            self._clock += 1
+        # seqlock read: if a concurrent tier move (admission/eviction from
+        # another reader's batch or the async eviction thread) bumps
+        # _write_seq while we probe+gather, the payloads we classified may
+        # be torn — retry, and serialize under the lock as a last resort
+        for _ in range(8):
+            seq0 = self._write_seq
+            if seq0 & 1:
                 continue
-            found[i] = True
-            if payload & TIER_MASK:                 # cold
-                slot = int(payload & np.uint64(SLOT_MASK))
-                out[i] = self._cold[slot]           # the one NVMe IO
-                self.stats.cold_misses += 1
-                self.stats.cold_bytes_read += self.value_bytes
-                if admit:
-                    cold_to_admit[int(k)] = None
-            else:                                   # hot
-                slot = int(payload)
-                out[i] = self._hot_values[slot]
-                self._hot_last_access[slot] = self._clock
-                self.stats.hot_hits += 1
-                self.stats.hot_bytes_read += self.value_bytes
-        for k in cold_to_admit:
-            self._admit(k)
+            found, out, cold, hot_slots = self._probe_and_gather(keys)
+            if self._write_seq == seq0:
+                break
+        else:
+            with self._lock:
+                found, out, cold, hot_slots = self._probe_and_gather(keys)
+        # LRU touch only AFTER the read validated: a discarded torn attempt
+        # must leave no side effects, or a bogus recency stamp would keep
+        # the wrong entry hot through the next eviction scan
+        if len(hot_slots):
+            self._hot_last_access[hot_slots] = self._clock
+        n_cold = int(cold.sum())
+        n_hot = int(found.sum()) - n_cold
+        with self._stats_lock:
+            self.stats.lookups += len(keys)
+            self.stats.not_found += int(len(keys) - found.sum())
+            self.stats.cold_misses += n_cold
+            self.stats.cold_bytes_read += n_cold * self.value_bytes
+            self.stats.hot_hits += n_hot
+            self.stats.hot_bytes_read += n_hot * self.value_bytes
+        if admit and n_cold:
+            # first-occurrence-ordered dedup: the same cold key twice in
+            # one batch must queue ONE admission (a second _admit would pop
+            # a second hot slot and orphan the first); _admit re-derives
+            # the slot under the lock
+            for k in dict.fromkeys(keys[cold].tolist()):
+                self._admit(int(k))
         return found, out
+
+    def _probe_and_gather(self, keys: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray]:
+        """One vectorized probe + tier-split gather (no stats, no
+        admission, no LRU writes) — the seqlock-retryable section of
+        get_batch.  Returns (found, rows, cold mask, hot slots); the
+        caller applies the LRU touch only once the read proves stable."""
+        out = np.zeros((len(keys), self.value_bytes), dtype=np.uint8)
+        found, payloads = self.index.lookup_host_batch(keys)
+        cold = found & ((payloads & np.uint64(TIER_MASK)) != 0)
+        hot = found & ~cold
+        # slots are clipped (mirroring the device lookup's mode="clip"
+        # takes): a torn payload read mid-mutation may carry an
+        # out-of-range slot, and the gather must survive long enough for
+        # the caller's seqlock check to discard and retry the batch
+        hot_slots = np.empty(0, dtype=np.int64)
+        if hot.any():
+            hot_slots = np.clip(payloads[hot].astype(np.int64), 0,
+                                self.hot_capacity - 1)
+            out[hot] = self._hot_values[hot_slots]
+        if cold.any():
+            slots = np.clip(
+                (payloads[cold] & np.uint64(SLOT_MASK)).astype(np.int64),
+                0, self._cold.shape[0] - 1)
+            out[cold] = self._cold[slots]           # the one NVMe IO per row
+        return found, out, cold, hot_slots
 
     # ------------------------------------------------------------------
     # tier movement (update path — serialized, like the Update Subsystem)
@@ -173,13 +221,20 @@ class HybridKVStore:
                 return
             if not self._hot_free:
                 return          # hot tier full: eviction pass will make room
-            cold_slot = int(payload & np.uint64(SLOT_MASK))
-            hot_slot = self._hot_free.pop()
-            self._hot_values[hot_slot] = self._cold[cold_slot]
-            self._hot_key[hot_slot] = key
-            self._hot_last_access[hot_slot] = self._clock
-            self._set_payload(key, np.uint64(hot_slot))
-            self.stats.admissions += 1
+            # closing bump in finally: an exception mid-write must not
+            # leave the seqlock odd forever (which would silently demote
+            # every future read to the serialized lock fallback)
+            self._write_seq += 1
+            try:
+                cold_slot = int(payload & np.uint64(SLOT_MASK))
+                hot_slot = self._hot_free.pop()
+                self._hot_values[hot_slot] = self._cold[cold_slot]
+                self._hot_key[hot_slot] = key
+                self._hot_last_access[hot_slot] = self._clock
+                self._set_payload(key, np.uint64(hot_slot))
+                self.stats.admissions += 1
+            finally:
+                self._write_seq += 1
 
     def maintain(self, target_free_fraction: float = 0.05) -> int:
         """One asynchronous-eviction pass: scan LRU metadata of the hot tier
@@ -197,16 +252,22 @@ class HybridKVStore:
                 return 0
             order = occupied[np.argsort(self._hot_last_access[occupied])]
             evicted = 0
-            for slot in order[:need]:
-                slot = int(slot)
-                key = int(self._hot_key[slot])
-                cold_slot = self._cold_slot_of_key_order[key]
-                # flip tier bit back to cold (cold copy is authoritative)
-                self._set_payload(key, np.uint64(TIER_MASK | cold_slot))
-                self._hot_key[slot] = hc.EMPTY_KEY
-                self._hot_free.append(slot)
-                evicted += 1
-                self.stats.evictions += 1
+            self._write_seq += 1
+            try:
+                for slot in order[:need]:
+                    slot = int(slot)
+                    key = int(self._hot_key[slot])
+                    cold_slot = self._cold_slot_of_key_order[key]
+                    # flip tier bit back to cold (cold copy is
+                    # authoritative)
+                    self._set_payload(key,
+                                      np.uint64(TIER_MASK | cold_slot))
+                    self._hot_key[slot] = hc.EMPTY_KEY
+                    self._hot_free.append(slot)
+                    evicted += 1
+                    self.stats.evictions += 1
+            finally:
+                self._write_seq += 1
             return evicted
 
     def start_async_eviction(self, period_s: float = 0.01):
@@ -249,10 +310,14 @@ class HybridKVStore:
             ok, payload, _, _ = self.index.probe_trace(int(key))
             if not ok:
                 raise KeyError(key)
-            cold_slot = self._cold_slot_of_key_order[int(key)]
-            self._cold[cold_slot] = value
-            if not (payload & TIER_MASK):
-                self._hot_values[int(payload)] = value
+            self._write_seq += 1
+            try:
+                cold_slot = self._cold_slot_of_key_order[int(key)]
+                self._cold[cold_slot] = value
+                if not (payload & TIER_MASK):
+                    self._hot_values[int(payload)] = value
+            finally:
+                self._write_seq += 1
 
     # ------------------------------------------------------------------
     # incremental write path (Update Subsystem: delta publishing)
@@ -279,54 +344,65 @@ class HybridKVStore:
                 f"values must be uint8 [{len(keys)}, {self.value_bytes}], "
                 f"got {values.dtype} {values.shape}")
         with self._lock:
-            last = {int(k): i for i, k in enumerate(keys)}   # last-write-wins
-            sel = sorted(last.values())
-            exists = {}
-            rows_needed = 0
-            for i in sel:
-                ok, payload, _, _ = self.index.probe_trace(int(keys[i]))
-                exists[i] = payload if ok else None
-                if not ok or copy_on_write:
-                    rows_needed += 1
-            next_slot = self._grow_cold(rows_needed)
-            inserted = updated = 0
-            new_entries: list[tuple[int, int]] = []
-            for i in sel:
-                k, v, payload = int(keys[i]), values[i], exists[i]
-                if payload is None:                          # brand-new key
-                    self._cold[next_slot] = v
-                    self._cold_slot_of_key_order[k] = next_slot
-                    new_entries.append((k, TIER_MASK | next_slot))
-                    next_slot += 1
-                    self.n += 1
-                    inserted += 1
-                elif copy_on_write:
-                    self._cold[next_slot] = v
-                    self._cold_slot_of_key_order[k] = next_slot
-                    if payload & TIER_MASK:
-                        self.index.update(k, TIER_MASK | next_slot)
-                    else:
-                        # hot copy (ours, freshly cloned) refreshed in
-                        # place; the repointed cold slot above already holds
-                        # the new value, so a later eviction flip to it
-                        # stays consistent
-                        self._hot_values[int(payload)] = v
-                    next_slot += 1
-                    updated += 1
+            self._write_seq += 1
+            try:
+                return self._upsert_locked(keys, values, copy_on_write)
+            finally:
+                # in finally: a mid-write exception (index growth failure,
+                # cold-file IO error) must not leave the seqlock odd, which
+                # would silently demote all future reads to the lock path
+                self._write_seq += 1
+
+    def _upsert_locked(self, keys: np.ndarray, values: np.ndarray,
+                   copy_on_write: bool) -> dict:
+        last = {int(k): i for i, k in enumerate(keys)}   # last-write-wins
+        sel = sorted(last.values())
+        # one vectorized probe over the batch (mirrors get_batch)
+        f_sel, p_sel = self.index.lookup_host_batch(keys[sel])
+        exists = {i: (int(p_sel[j]) if f_sel[j] else None)
+                  for j, i in enumerate(sel)}
+        rows_needed = int((~f_sel).sum())
+        if copy_on_write:
+            rows_needed += int(f_sel.sum())
+        next_slot = self._grow_cold(rows_needed)
+        inserted = updated = 0
+        new_entries: list[tuple[int, int]] = []
+        for i in sel:
+            k, v, payload = int(keys[i]), values[i], exists[i]
+            if payload is None:                          # brand-new key
+                self._cold[next_slot] = v
+                self._cold_slot_of_key_order[k] = next_slot
+                new_entries.append((k, TIER_MASK | next_slot))
+                next_slot += 1
+                self.n += 1
+                inserted += 1
+            elif copy_on_write:
+                self._cold[next_slot] = v
+                self._cold_slot_of_key_order[k] = next_slot
+                if payload & TIER_MASK:
+                    self.index.update(k, TIER_MASK | next_slot)
                 else:
-                    self._cold[self._cold_slot_of_key_order[k]] = v
-                    if not (payload & TIER_MASK):
-                        self._hot_values[int(payload)] = v
-                    updated += 1
-            if new_entries:
-                # one apply_delta call: in-place while there is headroom,
-                # at most ONE growth rebuild per batch (not per key)
-                ks = np.array([k for k, _ in new_entries], dtype=np.uint64)
-                ps = np.array([p for _, p in new_entries], dtype=np.uint64)
-                self.index = nh.apply_delta(self.index, ks, ps,
-                                            load_factor=self._load_factor)
-            return {"inserted": inserted, "updated": updated,
-                    "cold_rows_appended": rows_needed}
+                    # hot copy (ours, freshly cloned) refreshed in
+                    # place; the repointed cold slot above already holds
+                    # the new value, so a later eviction flip to it
+                    # stays consistent
+                    self._hot_values[int(payload)] = v
+                next_slot += 1
+                updated += 1
+            else:
+                self._cold[self._cold_slot_of_key_order[k]] = v
+                if not (payload & TIER_MASK):
+                    self._hot_values[int(payload)] = v
+                updated += 1
+        if new_entries:
+            # one apply_delta call: in-place while there is headroom,
+            # at most ONE growth rebuild per batch (not per key)
+            ks = np.array([k for k, _ in new_entries], dtype=np.uint64)
+            ps = np.array([p for _, p in new_entries], dtype=np.uint64)
+            self.index = nh.apply_delta(self.index, ks, ps,
+                                        load_factor=self._load_factor)
+        return {"inserted": inserted, "updated": updated,
+                "cold_rows_appended": rows_needed}
 
     def delete_batch(self, keys: Sequence[int]) -> int:
         """Remove keys from the index (hot slots are freed; cold rows are
@@ -335,27 +411,32 @@ class HybridKVStore:
         keys = np.asarray(keys, dtype=np.uint64).ravel()
         removed = 0
         with self._lock:
-            for k in keys:
-                k = int(k)
-                ok, payload, _, _ = self.index.probe_trace(k)
-                if not ok:
-                    continue
-                if not (payload & TIER_MASK):
-                    slot = int(payload)
-                    self._hot_key[slot] = hc.EMPTY_KEY
-                    self._hot_free.append(slot)
-                try:
-                    self.index.delete(k)
-                except nh.BuildError:        # coalesced-variant index
-                    self.index = nh.apply_delta(
-                        self.index, (), (), np.array([k], dtype=np.uint64),
-                        load_factor=self._load_factor)
-                self._cold_slot_of_key_order.pop(k, None)
-                self.n -= 1
-                removed += 1
+            self._write_seq += 1
+            try:
+                for k in keys:
+                    k = int(k)
+                    ok, payload, _, _ = self.index.probe_trace(k)
+                    if not ok:
+                        continue
+                    if not (payload & TIER_MASK):
+                        slot = int(payload)
+                        self._hot_key[slot] = hc.EMPTY_KEY
+                        self._hot_free.append(slot)
+                    try:
+                        self.index.delete(k)
+                    except nh.BuildError:    # coalesced-variant index
+                        self.index = nh.apply_delta(
+                            self.index, (), (),
+                            np.array([k], dtype=np.uint64),
+                            load_factor=self._load_factor)
+                    self._cold_slot_of_key_order.pop(k, None)
+                    self.n -= 1
+                    removed += 1
+            finally:
+                self._write_seq += 1
         return removed
 
-    def clone(self) -> "HybridKVStore":
+    def clone(self, *, retire: bool = True) -> "HybridKVStore":
         """O(index + hot tier) snapshot sharing the cold file.  The clone
         may take ``upsert_batch(..., copy_on_write=True)`` / ``delete_batch``
         writes while this store keeps serving every row bitwise — the
@@ -365,9 +446,20 @@ class HybridKVStore:
         raise): two writers allocating cold-file slots from divergent views
         of the shared file's end would corrupt each other's rows.  Reads,
         admissions, and evictions remain untouched — exactly the lifecycle
-        of a retained previous version."""
+        of a retained previous version.
+
+        ``retire=False`` defers the handover: the caller must invoke
+        ``retire()`` once the clone's deltas all applied (engine.from_delta
+        does this so a delta that fails mid-apply leaves the base build
+        writable for a corrected retry instead of wedged)."""
         new = object.__new__(HybridKVStore)
         with self._lock:
+            if self._retired:
+                # a second clone would create two live writers sharing one
+                # cold file — exactly the corruption retirement prevents
+                raise RuntimeError(
+                    "store already retired by a previous clone(); clone "
+                    "the newest generation instead")
             # snapshot under the lock: a concurrent _admit / eviction pass
             # mutating hot arrays + index mid-copy would tear the snapshot
             # (index says hot slot S, but S's bytes/key/free-list state are
@@ -388,12 +480,20 @@ class HybridKVStore:
                                   shape=self._cold.shape)
             new._cold_slot_of_key_order = dict(self._cold_slot_of_key_order)
             new.index = self.index.copy()
-            self._retired = True          # single writer: the clone
+            self._retired = retire        # single writer: the clone
         new._lock = threading.Lock()
+        new._stats_lock = threading.Lock()
+        new._write_seq = 0
         new._retired = False
         new._evict_thread = None
         new._evict_stop = threading.Event()
         return new
+
+    def retire(self) -> None:
+        """Deferred half of ``clone(retire=False)``: hand the write path to
+        the clone once its deltas are fully applied."""
+        with self._lock:
+            self._retired = True
 
     def _grow_cold(self, extra_rows: int) -> int:
         """Extend the cold file by ``extra_rows``; returns the first new

@@ -165,6 +165,81 @@ class HashTable:
             payloads[i] = p
         return found, payloads
 
+    def lookup_host_batch(self, keys: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized host-side batch probe — numpy analogue of the device
+        lookup's masked-advance loop (core/lookup.lookup): the whole batch
+        advances one probe step per iteration under an active-lane mask, so
+        host probing costs O(max chain length) numpy passes instead of one
+        Python probe loop per key.  Bit-identical to per-key
+        ``probe_trace`` / ``lookup_host`` for every variant.
+        """
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        n = len(keys)
+        found = np.zeros(n, dtype=bool)
+        payloads = np.zeros(n, dtype=np.uint64)
+        if n == 0:
+            return found, payloads
+        q_hi, q_lo = hc.key_split_np(keys)
+        idx = hc.bucket_of_np(q_hi, q_lo, self.home_capacity)
+        khi, klo = self.key_hi[idx], self.key_lo[idx]
+        empty = (khi == np.uint32(hc.EMPTY_HI)) \
+            & (klo == np.uint32(hc.EMPTY_LO))
+
+        if self.variant == "linear":
+            hit = ~empty & (khi == q_hi) & (klo == q_lo)
+            found[hit] = True
+            payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
+                                          self.val_lo[idx[hit]])
+            active = ~empty & ~hit
+            for _ in range(self.capacity):
+                if not active.any():
+                    break
+                idx[active] = (idx[active] + 1) % self.capacity
+                khi, klo = self.key_hi[idx], self.key_lo[idx]
+                empty = (khi == np.uint32(hc.EMPTY_HI)) \
+                    & (klo == np.uint32(hc.EMPTY_LO))
+                hit = active & ~empty & (khi == q_hi) & (klo == q_lo)
+                found[hit] = True
+                payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
+                                              self.val_lo[idx[hit]])
+                active = active & ~hit & ~empty
+            return found, payloads
+
+        # chained variants: walk the home-rooted chain under the mask
+        active = ~empty
+        if self.variant in _RELOCATING:
+            # home-pure chains: a lodger resident means no chain roots here
+            rooted = hc.bucket_of_np(khi, klo, self.home_capacity) == idx
+            active &= rooted
+        hit = active & (khi == q_hi) & (klo == q_lo)
+        found[hit] = True
+        payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
+                                      self.val_lo[idx[hit]])
+        active = active & ~hit
+        for _ in range(self.capacity + 1):
+            if not active.any():
+                break
+            if self.next_idx is not None:
+                nxt = self.next_idx[idx].astype(np.int64)
+                has_next = nxt >= 0
+            else:
+                off = hc.decode_offset_np(self.val_hi[idx]).astype(np.int64)
+                has_next = off != 0
+                nxt = idx + off
+            active = active & has_next
+            # clip like the device lookup's mode="clip" takes: a torn
+            # offset read (concurrent in-place mutation; the caller's
+            # seqlock discards the batch) must not index out of range
+            idx = np.clip(np.where(active, nxt, idx), 0, self.capacity - 1)
+            khi, klo = self.key_hi[idx], self.key_lo[idx]
+            hit = active & (khi == q_hi) & (klo == q_lo)
+            found[hit] = True
+            payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
+                                          self.val_lo[idx[hit]])
+            active = active & ~hit
+        return found, payloads
+
     def apcl(self, keys: np.ndarray, buckets_per_line: Optional[int] = None,
              separate_offset_array: bool = False) -> float:
         """Average Probing Cache Lines over the given query keys (paper §3.1).

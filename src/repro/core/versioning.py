@@ -20,6 +20,7 @@ exists without waiting for naming-service convergence.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional
 
 import numpy as np
@@ -38,43 +39,55 @@ class VersionWindow:
     shard's Generation (ShardReplica) or a whole fused multi-table build
     (core/engine.MultiTableEngine).  ``get(v)`` implements the protocol's
     reply semantics: ok=False is the NACK (requested version not retained),
-    with the retained versions available so the caller can re-pin."""
+    with the retained versions available so the caller can re-pin.
+
+    Thread-safe: concurrent publishers (the Update Subsystem) and pinners
+    (QueryServer micro-batches) go through one lock, so a ``get`` can never
+    observe the window between "latest moved" and "old state evicted" — the
+    (ok, version, state) triple it returns is always one atomic snapshot."""
 
     def __init__(self, retain: int = 2):
         if retain < 1:
             raise ValueError("retain must be >= 1")
         self.retain = retain
         self._states: dict[int, object] = {}
+        self._lock = threading.Lock()
 
     @property
     def versions(self) -> list[int]:
-        return sorted(self._states)
+        with self._lock:
+            return sorted(self._states)
 
     @property
     def latest(self) -> int:
-        return max(self._states) if self._states else -1
+        with self._lock:
+            return max(self._states) if self._states else -1
 
     def publish(self, version: int, state) -> None:
-        self._states[version] = state
-        while len(self._states) > self.retain:
-            del self._states[min(self._states)]
+        with self._lock:
+            self._states[version] = state
+            while len(self._states) > self.retain:
+                del self._states[min(self._states)]
 
     def reset(self, versions_to_states: dict) -> None:
         """Replace the whole window (node repair / replica revive); the
         retain bound still applies."""
-        self._states = {int(v): s for v, s in versions_to_states.items()}
-        while len(self._states) > self.retain:
-            del self._states[min(self._states)]
+        with self._lock:
+            self._states = {int(v): s for v, s in versions_to_states.items()}
+            while len(self._states) > self.retain:
+                del self._states[min(self._states)]
 
     def get(self, version: Optional[int] = None
             ) -> tuple[bool, int, Optional[object]]:
         """-> (ok, version_served, state).  ``version=None`` pins latest."""
-        if not self._states:
-            return False, -1, None
-        v = self.latest if version is None else version
-        if v not in self._states:
-            return False, self.latest, None      # NACK + best retained hint
-        return True, v, self._states[v]
+        with self._lock:
+            if not self._states:
+                return False, -1, None
+            v = max(self._states) if version is None else version
+            if v not in self._states:
+                # NACK + best retained hint
+                return False, max(self._states), None
+            return True, v, self._states[v]
 
 
 @dataclasses.dataclass

@@ -1,0 +1,438 @@
+"""Deadline-aware micro-batching scheduler for the QueryServer (serving side
+of the paper's batch-query architecture).
+
+Many concurrent clients each carry a small per-request key set and a latency
+budget; serving them one engine query at a time repays none of the
+architecture's batching wins.  The scheduler turns the concurrent stream into
+fused micro-batches:
+
+  - **Admission** is bounded (``BatchPolicy.max_queue_requests``): when the
+    queue is full, or a request's budget is already smaller than the current
+    service-time estimate, it is shed *at submit time* with a typed error
+    (``QueueFullError`` / ``DeadlineError``) instead of queueing work that
+    can only miss — bounded-queue backpressure.
+  - **Batch close rule**: a forming batch closes on ``max_batch_keys`` /
+    ``max_batch_requests``, or when the earliest admitted deadline's slack
+    (deadline − now − service-time estimate) runs out, whichever first.
+    Requests without deadlines close after ``max_wait_s`` so a lone request
+    never waits for co-travellers that may not come.
+  - **Version grouping**: only requests pinned to the same explicit version
+    (or all unpinned) coalesce into one micro-batch, so a batch pins exactly
+    one engine build for its whole lifetime — no micro-batch ever mixes
+    versions, even while ``publish``/``publish_delta`` run concurrently.
+
+The service-time estimate is an EWMA of observed batch service times,
+reported back by the server after every finish.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import QueryResult, TableResult
+
+
+# ---------------------------------------------------------------------------
+# typed shed / admission errors
+# ---------------------------------------------------------------------------
+class ShedError(RuntimeError):
+    """Base class: the server refused or dropped the request by policy."""
+
+
+class QueueFullError(ShedError):
+    """Admission queue at capacity — back off and retry (backpressure)."""
+
+
+class DeadlineError(ShedError):
+    """The latency budget cannot be met (at admission) or has already
+    expired (in queue) — serving it would only burn capacity on a result
+    the client will discard."""
+
+
+class ServerClosedError(ShedError):
+    """Submitted to a server that is shutting down."""
+
+
+# ---------------------------------------------------------------------------
+# policy + stats
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    max_batch_keys: int = 8192        # fused key budget per micro-batch
+    max_batch_requests: int = 64
+    max_queue_requests: int = 256     # admission bound (backpressure)
+    max_wait_s: float = 2e-3          # close rule for deadline-less traffic
+    service_time_init_s: float = 3e-3  # EWMA seed for the slack computation
+    service_time_alpha: float = 0.2   # EWMA weight when service gets SLOWER
+    service_time_alpha_down: float = 0.5  # weight when it gets faster — a
+    # transient stall (cold jit compile, publish burst) must not keep
+    # admission shedding long after service recovers
+    latency_reservoir: int = 200_000  # completed-request latencies kept
+
+
+@dataclasses.dataclass
+class StatsSnapshot:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    shed_queue_full: int = 0
+    shed_deadline: int = 0
+    batches: int = 0
+    launches: int = 0
+    keys_requested: int = 0
+    keys_deviceside: int = 0
+    deadline_hits: int = 0
+    deadline_misses: int = 0
+    p50_ms: float = 0.0
+    p99_ms: float = 0.0
+    mean_occupancy: float = 0.0       # requests per micro-batch
+    coalesce_rate: float = 0.0        # keys eliminated before the device
+    shed_rate: float = 0.0
+
+    def summary(self) -> str:
+        return (f"{self.completed}/{self.submitted} served "
+                f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
+                f"occupancy={self.mean_occupancy:.1f} req/batch "
+                f"coalesce={self.coalesce_rate:.0%} "
+                f"shed={self.shed_rate:.1%} "
+                f"({self.shed_queue_full} queue-full, "
+                f"{self.shed_deadline} deadline)")
+
+
+class ServerStats:
+    """Thread-safe counters + latency reservoir behind ``snapshot()``."""
+
+    def __init__(self, policy: BatchPolicy):
+        self._lock = threading.Lock()
+        self._policy = policy
+        self._c = StatsSnapshot()
+        self._latencies_s: list[float] = []
+        self._lat_next = 0
+
+    def on_submit(self) -> None:
+        with self._lock:
+            self._c.submitted += 1
+
+    def on_shed(self, kind: str) -> None:
+        with self._lock:
+            if kind == "queue_full":
+                self._c.shed_queue_full += 1
+            else:
+                self._c.shed_deadline += 1
+
+    def on_batch(self, n_requests: int, keys_requested: int,
+                 keys_deviceside: int, launches: int) -> None:
+        with self._lock:
+            self._c.batches += 1
+            self._c.launches += launches
+            self._c.keys_requested += keys_requested
+            self._c.keys_deviceside += keys_deviceside
+
+    def on_complete(self, latency_s: float,
+                    deadline_met: Optional[bool]) -> None:
+        with self._lock:
+            self._c.completed += 1
+            if deadline_met is not None:
+                if deadline_met:
+                    self._c.deadline_hits += 1
+                else:
+                    self._c.deadline_misses += 1
+            # ring buffer of the most recent latencies: percentiles must
+            # track current behavior, not freeze on the first N requests
+            if len(self._latencies_s) < self._policy.latency_reservoir:
+                self._latencies_s.append(latency_s)
+            else:
+                self._latencies_s[self._lat_next] = latency_s
+                self._lat_next = (self._lat_next + 1) \
+                    % self._policy.latency_reservoir
+
+    def on_failure(self, n: int = 1) -> None:
+        with self._lock:
+            self._c.failed += n
+
+    def snapshot(self) -> StatsSnapshot:
+        with self._lock:
+            s = dataclasses.replace(self._c)
+            lats = np.asarray(self._latencies_s, dtype=np.float64)
+        if len(lats):
+            s.p50_ms = float(np.percentile(lats, 50) * 1e3)
+            s.p99_ms = float(np.percentile(lats, 99) * 1e3)
+        if s.batches:
+            s.mean_occupancy = s.completed / s.batches
+        if s.keys_requested:
+            s.coalesce_rate = 1.0 - s.keys_deviceside / s.keys_requested
+        shed = s.shed_queue_full + s.shed_deadline
+        if s.submitted:
+            s.shed_rate = shed / s.submitted
+        return s
+
+
+# ---------------------------------------------------------------------------
+# tickets + pending requests
+# ---------------------------------------------------------------------------
+class Ticket:
+    """Client-side handle: blocks on ``result()`` until the micro-batch the
+    request rode in finishes (or the request is shed in queue)."""
+
+    def __init__(self, deadline: Optional[float]):
+        self._event = threading.Event()
+        self._result: Optional[QueryResult] = None
+        self._error: Optional[BaseException] = None
+        self.deadline = deadline
+        self.batch_id: Optional[int] = None
+        self.latency_s: Optional[float] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> QueryResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError("result not ready")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+    # server-side faces -------------------------------------------------
+    def _complete(self, result: QueryResult, batch_id: int,
+                  latency_s: float) -> None:
+        self._result = result
+        self.batch_id = batch_id
+        self.latency_s = latency_s
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+
+@dataclasses.dataclass
+class _Pending:
+    tables: dict[str, np.ndarray]
+    n_keys: int
+    t_submit: float
+    deadline: Optional[float]         # monotonic; None = no budget
+    version: Optional[int]
+    strict: bool
+    ticket: Ticket
+
+    @property
+    def group(self) -> tuple:
+        """Requests coalesce only within one (version, strict) group —
+        the single-version-per-micro-batch invariant."""
+        return (self.version, self.strict)
+
+
+# ---------------------------------------------------------------------------
+# coalesce / scatter-back
+# ---------------------------------------------------------------------------
+def coalesce(batch: list[_Pending]) -> tuple[dict[str, np.ndarray],
+                                             list[dict[str, tuple[int, int]]]]:
+    """Fuse per-request key sets into one engine request; returns the fused
+    ``{table: keys}`` dict plus, per request, its ``{table: (lo, hi)}``
+    spans for scatter-back.  The engine dedups the fused arrays, so overlap
+    ACROSS requests is eliminated exactly like overlap within one."""
+    parts: dict[str, list[np.ndarray]] = {}
+    lens: dict[str, int] = {}
+    spans: list[dict[str, tuple[int, int]]] = []
+    for req in batch:
+        mine: dict[str, tuple[int, int]] = {}
+        for name, keys in req.tables.items():
+            lo = lens.get(name, 0)
+            parts.setdefault(name, []).append(keys)
+            lens[name] = lo + len(keys)
+            mine[name] = (lo, lens[name])
+        spans.append(mine)
+    fused = {name: np.concatenate(ps) for name, ps in parts.items()}
+    return fused, spans
+
+
+def scatter(result: QueryResult,
+            span: dict[str, tuple[int, int]]) -> QueryResult:
+    """Slice one request's rows back out of the fused result (same version
+    tag: every request in the batch was answered from the one pinned
+    build)."""
+    tables: dict[str, TableResult] = {}
+    for name, (lo, hi) in span.items():
+        tr = result.tables[name]
+        tables[name] = TableResult(
+            found=tr.found[lo:hi],
+            payloads=None if tr.payloads is None else tr.payloads[lo:hi],
+            values=None if tr.values is None else tr.values[lo:hi])
+    return QueryResult(version=result.version, tables=tables)
+
+
+# ---------------------------------------------------------------------------
+# the micro-batcher
+# ---------------------------------------------------------------------------
+class MicroBatcher:
+    """Bounded admission queue + deadline-aware batch formation.
+
+    ``admit`` is called from client threads; ``next_batch`` from the single
+    scheduler thread.  Expired requests are shed (their tickets fail with
+    ``DeadlineError``) during formation, never silently dropped."""
+
+    def __init__(self, policy: BatchPolicy, stats: ServerStats):
+        self.policy = policy
+        self.stats = stats
+        self._queue: deque[_Pending] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._service_time_s = policy.service_time_init_s
+        self._last_observe = time.monotonic()
+
+    # ------------------------------------------------------------------
+    @property
+    def service_time_s(self) -> float:
+        return self._service_time_s
+
+    def observe_service_time(self, seconds: float) -> None:
+        with self._cond:        # pool workers report concurrently; a lost
+            # fast-side update would keep admission shedding after a stall
+            a = (self.policy.service_time_alpha_down
+                 if seconds < self._service_time_s
+                 else self.policy.service_time_alpha)
+            self._service_time_s = ((1 - a) * self._service_time_s
+                                    + a * seconds)
+            self._last_observe = time.monotonic()
+
+    def _estimate(self, now: float) -> float:
+        """Admission-time service estimate.  The EWMA only refreshes when
+        batches complete, so with EVERY request being shed there would be
+        no observations and a stale stall reading would wedge admission
+        into permanent shedding; instead the estimate decays toward the
+        policy seed (halving every 250 ms of observation silence)."""
+        idle = now - self._last_observe
+        if idle <= 0.25:
+            return self._service_time_s
+        # floor at min(seed, ewma): decay pulls a stalled-high estimate
+        # back DOWN toward the seed but must never raise an estimate that
+        # is already below it (a fast engine's tight-budget traffic would
+        # otherwise shed forever after one idle gap)
+        floor = min(self.policy.service_time_init_s, self._service_time_s)
+        return max(floor, self._service_time_s * 0.5 ** (idle / 0.25 - 1.0))
+
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    # ------------------------------------------------------------------
+    def admit(self, req: _Pending) -> None:
+        now = time.monotonic()
+        with self._cond:
+            if self._closed:
+                raise ServerClosedError("server is shutting down")
+            if len(self._queue) >= self.policy.max_queue_requests:
+                self.stats.on_shed("queue_full")
+                raise QueueFullError(
+                    f"admission queue full "
+                    f"({self.policy.max_queue_requests} requests)")
+            est = self._estimate(now)
+            if req.deadline is not None and req.deadline - now < est:
+                self.stats.on_shed("deadline")
+                raise DeadlineError(
+                    f"budget {max(req.deadline - now, 0) * 1e3:.2f}ms < "
+                    f"estimated service time {est * 1e3:.2f}ms")
+            self._queue.append(req)
+            self._cond.notify()
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def drain(self) -> list[_Pending]:
+        """Pop every still-queued request (after close, when no scheduler
+        thread exists to serve them) so the caller can fail their tickets
+        instead of leaving result() waiters hanging."""
+        with self._cond:
+            out = list(self._queue)
+            self._queue.clear()
+            return out
+
+    # ------------------------------------------------------------------
+    def _shed_expired(self, now: float) -> None:
+        # must hold self._cond
+        live: deque[_Pending] = deque()
+        for req in self._queue:
+            if req.deadline is not None and now > req.deadline:
+                self.stats.on_shed("deadline")
+                req.ticket._fail(DeadlineError(
+                    "deadline expired while queued"))
+            else:
+                live.append(req)
+        self._queue = live
+
+    def _collect(self) -> tuple[list[_Pending], bool]:
+        # must hold self._cond; head-of-line request picks the group.
+        # ``saturated`` reports that a matching request exists but could
+        # not fit — the batch is as full as it can get, so the caller must
+        # close it now rather than wait out max_wait_s for riders that can
+        # never join
+        head = self._queue[0]
+        batch, n_keys, saturated = [], 0, False
+        for req in self._queue:
+            if req.group != head.group:
+                continue
+            if batch and (n_keys + req.n_keys > self.policy.max_batch_keys
+                          or len(batch) >= self.policy.max_batch_requests):
+                saturated = True
+                break
+            batch.append(req)
+            n_keys += req.n_keys
+        return batch, saturated
+
+    def next_batch(self) -> Optional[list[_Pending]]:
+        """Blocks until a micro-batch closes; ``None`` once the batcher is
+        closed and drained."""
+        with self._cond:
+            while True:
+                # wait for at least one live request
+                while True:
+                    self._shed_expired(time.monotonic())
+                    if self._queue:
+                        break
+                    if self._closed:
+                        return None
+                    self._cond.wait(timeout=0.05)
+
+                t_open = time.monotonic()
+                batch: list[_Pending] = []
+                while True:
+                    batch, saturated = self._collect()
+                    n_keys = sum(r.n_keys for r in batch)
+                    if (saturated
+                            or n_keys >= self.policy.max_batch_keys
+                            or len(batch) >= self.policy.max_batch_requests
+                            or self._closed):
+                        break
+                    # earliest deadline across the WHOLE queue, not just
+                    # this batch: a different-(version,strict)-group request
+                    # behind the head cannot be served until this batch
+                    # closes, so its slack must bound the wait too
+                    deadlines = [r.deadline for r in self._queue
+                                 if r.deadline is not None]
+                    close_at = t_open + self.policy.max_wait_s
+                    if deadlines:
+                        # earliest deadline's slack, net of the service cost
+                        close_at = min(close_at,
+                                       min(deadlines) - self._service_time_s)
+                    now = time.monotonic()
+                    if now >= close_at:
+                        break
+                    self._cond.wait(timeout=min(close_at - now, 0.01))
+                    self._shed_expired(time.monotonic())
+                    if not self._queue:
+                        batch = []
+                        break       # everything shed mid-wait — start over
+                if not batch:
+                    continue
+                members = set(map(id, batch))
+                self._queue = deque(r for r in self._queue
+                                    if id(r) not in members)
+                return batch

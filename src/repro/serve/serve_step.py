@@ -36,21 +36,37 @@ def lm_prefill_fn(cfg, mesh, mi):
 
 def recsys_score_fn(cfg, mesh, mi, lookup_impl: str = "xla",
                     feature_engine=None,
-                    feature_fields: Optional[Sequence[tuple]] = None):
+                    feature_fields: Optional[Sequence[tuple]] = None,
+                    feature_server=None,
+                    feature_budget_s: Optional[float] = None):
     """Scoring step; with ``feature_engine`` (a MultiTableEngine) the step
     first resolves ``feature_fields`` — ``(table_name, batch_field)`` pairs —
     in ONE fused batch query and splices the returned float32 rows into the
-    batch's dense columns before the model runs."""
+    batch's dense columns before the model runs.
+
+    ``feature_server`` (a serve/server.QueryServer) routes that same request
+    through the concurrent serving layer instead: the step's lookup then
+    coalesces with other in-flight scoring requests into one micro-batch
+    (cross-request dedup + a single pinned version per batch), carrying
+    ``feature_budget_s`` as its latency budget.  Exactly one of
+    ``feature_engine`` / ``feature_server`` may be given."""
     def step(params, batch):
         return rec_mod.recsys_score(params, cfg, batch, mi, mesh,
                                     lookup_impl)
 
-    if feature_engine is None:
+    if feature_engine is not None and feature_server is not None:
+        raise ValueError("pass feature_engine OR feature_server, not both")
+    if feature_engine is None and feature_server is None:
         return step
+
+    def resolve(request):
+        if feature_server is not None:
+            return feature_server.query(request, budget_s=feature_budget_s)
+        return feature_engine.query(request)
 
     fields = list(feature_fields or ())
     if not fields:
-        raise ValueError("feature_engine given but no feature_fields")
+        raise ValueError("feature engine/server given but no feature_fields")
     names = [t for t, _ in fields]
     if len(set(names)) != len(names):
         raise ValueError("duplicate table names in feature_fields: one "
@@ -66,7 +82,7 @@ def recsys_score_fn(cfg, mesh, mi, lookup_impl: str = "xla",
                     f"feature field {field!r} must be 1-D of length "
                     f"{n_rows} (one key per example), got {ids.shape}")
             request[table] = ids.astype(np.uint64)
-        res = feature_engine.query(request)      # one fused launch, pinned
+        res = resolve(request)                   # one fused query, pinned
         cols = []
         for table, _field in fields:
             tr = res[table]

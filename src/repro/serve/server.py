@@ -1,0 +1,253 @@
+"""QueryServer — concurrent batch-query serving over a MultiTableEngine.
+
+The paper's headline is answering batch queries "within milliseconds" under
+heavy concurrent traffic; the engine (core/engine.py) supplies the fused,
+deduplicated, version-pinned query, and this module supplies the serving
+layer in front of it:
+
+  - many concurrent clients ``submit`` small per-table key sets, each with
+    an optional latency budget;
+  - the scheduler (serve/scheduler.py) coalesces them into deadline-aware
+    micro-batches — cross-REQUEST dedup rides the engine's existing
+    per-batch dedup, since the fused request is just one big engine batch;
+  - each micro-batch pins exactly one engine version for its whole lifetime
+    (``engine.begin`` resolves the build once; the build object is
+    immutable), so concurrent ``publish``/``publish_delta`` calls can never
+    produce a mixed-version batch;
+  - launch/finish are double-buffered: the single scheduler thread stages +
+    launches batch i+1 while the worker pool blocks on batch i's device
+    results and scatters rows back to each request's ticket.
+
+Example::
+
+    server = QueryServer(engine, BatchPolicy(max_batch_keys=4096))
+    ticket = server.submit({"item_attr": ids}, budget_s=0.050)
+    result = ticket.result()          # engine QueryResult, request-sliced
+    print(server.stats_snapshot().summary())
+    server.close()
+
+Shedding surfaces as typed errors (``QueueFullError``, ``DeadlineError``)
+from ``submit``/``Ticket.result`` — see serve/scheduler.py.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import MultiTableEngine, QueryResult
+from repro.serve.scheduler import (BatchPolicy, MicroBatcher, ServerStats,
+                                   ServerClosedError, StatsSnapshot, Ticket,
+                                   _Pending, coalesce, scatter)
+
+
+class QueryServer:
+    """Admission + micro-batching + double-buffered execution in front of a
+    ``MultiTableEngine``.  Thread-safe: ``submit``/``query`` may be called
+    from any number of client threads; ``publish``/``publish_delta`` on the
+    engine may run concurrently from an updater thread."""
+
+    def __init__(self, engine: MultiTableEngine,
+                 policy: Optional[BatchPolicy] = None, *,
+                 workers: int = 2, pipeline_depth: int = 2,
+                 start: bool = True):
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self.engine = engine
+        self.policy = policy or BatchPolicy()
+        self.stats = ServerStats(self.policy)
+        self._batcher = MicroBatcher(self.policy, self.stats)
+        self._pool = ThreadPoolExecutor(max_workers=max(workers, 1),
+                                        thread_name_prefix="qs-finish")
+        # bounds batches between launch and finish: depth 2 is the classic
+        # double buffer (one in flight on device, one being finished)
+        self._inflight = threading.BoundedSemaphore(pipeline_depth)
+        self._batch_ids = itertools.count()
+        self._scheduler: Optional[threading.Thread] = None
+        self._closed = False
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._scheduler is not None:
+            return
+        self._scheduler = threading.Thread(
+            target=self._run, name="qs-scheduler", daemon=True)
+        self._scheduler.start()
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Stop admitting, drain queued batches, join the pipeline.  Any
+        request no scheduler will ever serve (server never started, or the
+        join timed out mid-drain) has its ticket failed with
+        ``ServerClosedError`` rather than left hanging."""
+        self._closed = True
+        self._batcher.close()
+        if self._scheduler is not None:
+            self._scheduler.join(timeout)
+            self._scheduler = None
+        for req in self._batcher.drain():
+            self.stats.on_failure(1)
+            req.ticket._fail(ServerClosedError("server closed before the "
+                                               "request was served"))
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "QueryServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # client faces
+    # ------------------------------------------------------------------
+    def submit(self, request: dict, *, budget_s: Optional[float] = None,
+               version: Optional[int] = None,
+               strict: bool = False) -> Ticket:
+        """Enqueue one request (``{table: keys}``) and return its ticket.
+
+        Raises ``QueueFullError`` / ``DeadlineError`` / ``ServerClosedError``
+        at admission time when the request is shed by policy."""
+        if self._closed:
+            raise ServerClosedError("server is closed")
+        if not request:
+            raise ValueError("empty request: no tables")
+        tables = {name: np.asarray(keys, dtype=np.uint64).ravel()
+                  for name, keys in request.items()}
+        now = time.monotonic()
+        deadline = None if budget_s is None else now + budget_s
+        ticket = Ticket(deadline)
+        req = _Pending(tables=tables,
+                       n_keys=sum(len(k) for k in tables.values()),
+                       t_submit=now, deadline=deadline, version=version,
+                       strict=strict, ticket=ticket)
+        self.stats.on_submit()
+        try:
+            self._batcher.admit(req)    # raises the typed shed errors
+        except ServerClosedError:
+            # keep the snapshot reconcilable (submitted == completed +
+            # failed + shed): a close() racing this submit is a failure,
+            # not a silently vanished request
+            self.stats.on_failure(1)
+            raise
+        return ticket
+
+    def query(self, request: dict, *, budget_s: Optional[float] = None,
+              version: Optional[int] = None, strict: bool = False,
+              timeout: Optional[float] = None) -> QueryResult:
+        """Synchronous convenience: submit + wait.  Exceptions that failed
+        the micro-batch (e.g. ``VersionEvictedError`` under ``strict``) or
+        shed the request re-raise here."""
+        return self.submit(request, budget_s=budget_s, version=version,
+                           strict=strict).result(timeout)
+
+    def stats_snapshot(self) -> StatsSnapshot:
+        return self.stats.snapshot()
+
+    def reset_stats(self) -> None:
+        """Fresh counters/latencies — start a measurement window after
+        warmup (cold jit compiles otherwise dominate the percentiles)."""
+        self.stats = ServerStats(self.policy)
+        self._batcher.stats = self.stats
+
+    @property
+    def queue_depth(self) -> int:
+        return self._batcher.depth()
+
+    # ------------------------------------------------------------------
+    # scheduler pipeline
+    # ------------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            batch = self._batcher.next_batch()
+            if batch is None:
+                return
+            self._inflight.acquire()
+            batch_id = next(self._batch_ids)
+            fused, spans = coalesce(batch)
+            t_launch = time.monotonic()
+            try:
+                # stage pins ONE version for the whole micro-batch; the
+                # build reference keeps that version's tables alive even if
+                # a concurrent publish evicts it from the window mid-flight
+                inflight = self.engine.begin(
+                    fused, version=batch[0].version, strict=batch[0].strict)
+            except BaseException as e:  # noqa: BLE001
+                self._inflight.release()
+                if len(batch) == 1:
+                    self.stats.on_failure(1)
+                    batch[0].ticket._fail(e)
+                else:
+                    # a request-specific fault (e.g. one rider's unknown
+                    # table name) must not fail its co-batched riders:
+                    # retry each request as its own batch so only the
+                    # offender errors
+                    for req in batch:
+                        self._serve_single(req)
+                continue
+            # the pool blocks on device results + scatters back while this
+            # thread loops on to stage/launch the next micro-batch
+            try:
+                self._pool.submit(self._finish_batch, batch_id, batch,
+                                  spans, inflight, t_launch)
+            except RuntimeError:
+                # pool already shut down (close() raced a long drain):
+                # finish inline so no ticket is ever left hanging
+                self._finish_batch(batch_id, batch, spans, inflight,
+                                   t_launch)
+
+    def _serve_single(self, req) -> None:
+        """Rare fallback: serve one request as its own micro-batch, inline
+        on the scheduler thread (used when a fused begin() failed, to
+        isolate a request-specific fault to its origin)."""
+        fused, spans = coalesce([req])
+        t_launch = time.monotonic()
+        try:
+            inflight = self.engine.begin(fused, version=req.version,
+                                         strict=req.strict)
+            result = self.engine.finish(inflight)
+        except BaseException as e:  # noqa: BLE001
+            self.stats.on_failure(1)
+            req.ticket._fail(e)
+            return
+        now = time.monotonic()
+        self._batcher.observe_service_time(now - t_launch)
+        latency = now - req.t_submit
+        met = None if req.deadline is None else now <= req.deadline
+        staged = inflight.staged
+        self.stats.on_batch(1, staged.keys_requested,
+                            staged.keys_deviceside, inflight.launches)
+        self.stats.on_complete(latency, met)
+        req.ticket._complete(scatter(result, spans[0]),
+                             next(self._batch_ids), latency)
+
+    def _finish_batch(self, batch_id: int, batch: list, spans: list,
+                      inflight, t_launch: float) -> None:
+        try:
+            result = self.engine.finish(inflight)
+        except BaseException as e:  # noqa: BLE001
+            self.stats.on_failure(len(batch))
+            for req in batch:
+                req.ticket._fail(e)
+            return
+        finally:
+            self._inflight.release()
+        now = time.monotonic()
+        self._batcher.observe_service_time(now - t_launch)
+        staged = inflight.staged
+        self.stats.on_batch(len(batch), staged.keys_requested,
+                            staged.keys_deviceside, inflight.launches)
+        for req, span in zip(batch, spans):
+            latency = now - req.t_submit
+            met = None if req.deadline is None else now <= req.deadline
+            # stats BEFORE waking the ticket: a client observing its result
+            # (e.g. warmup join followed by reset_stats) must never find
+            # its own completion still unrecorded
+            self.stats.on_complete(latency, met)
+            req.ticket._complete(scatter(result, span), batch_id, latency)

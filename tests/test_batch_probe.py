@@ -1,0 +1,162 @@
+"""Vectorized host-side batch probing (ISSUE 3 satellite): the numpy
+masked-advance ``lookup_host_batch`` must be bit-identical to the per-key
+``probe_trace`` path for every variant — random and adversarial key sets,
+before and after in-place mutation — and the hybrid store's batched
+get/upsert must keep serving exactly what the per-key path served."""
+import numpy as np
+import pytest
+
+from repro.core import hashcore as hc
+from repro.core import neighborhash as nh
+from repro.core.hybrid_store import HybridKVStore
+
+
+def _mixed_queries(rng, keys, n_miss=64):
+    q = np.concatenate([
+        keys,                                     # every hit
+        keys[: max(len(keys) // 4, 1)],           # duplicates
+        rng.integers(0, 2**63, n_miss, dtype=np.uint64),   # misses
+    ])
+    rng.shuffle(q)
+    return q
+
+
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+class TestLookupHostBatch:
+    def test_matches_per_key_random(self, variant):
+        rng = np.random.default_rng(1)
+        for n, lf in [(1, 0.5), (37, 0.8), (800, 0.95)]:
+            keys, pays = nh.random_kv(n, seed=n)
+            t = nh.build_grow(keys, pays, variant=variant, load_factor=lf)
+            q = _mixed_queries(rng, keys)
+            f_ref, p_ref = t.lookup_host(q)
+            f_got, p_got = t.lookup_host_batch(q)
+            assert (f_ref == f_got).all()
+            assert (p_ref == p_got).all()
+
+    def test_matches_per_key_colliding_homes(self, variant):
+        """Adversarial: many keys hashing to the same home bucket — long
+        chains / probe sequences, where a masked-advance off-by-one would
+        show."""
+        cap = 256
+        rng = np.random.default_rng(2)
+        pool = rng.integers(1, 2**62, 4000, dtype=np.uint64)
+        pool = np.unique(pool)
+        hi, lo = hc.key_split_np(pool)
+        homes = hc.bucket_of_np(hi, lo, cap)
+        # keep only keys landing in 4 distinct homes
+        target_homes = np.unique(homes)[:4]
+        keys = pool[np.isin(homes, target_homes)][:80]
+        pays = rng.integers(0, 1 << 50, len(keys)).astype(np.uint64)
+        t = nh.build_grow(keys, pays, variant=variant, load_factor=0.5)
+        q = _mixed_queries(rng, keys)
+        f_ref, p_ref = t.lookup_host(q)
+        f_got, p_got = t.lookup_host_batch(q)
+        assert (f_ref == f_got).all()
+        assert (p_ref == p_got).all()
+
+    def test_matches_per_key_after_mutation(self, variant):
+        """The vectorized probe must track in-place inserts, updates AND
+        deletes (tail-pulled chains, backward-shifted linear runs)."""
+        keys, pays = nh.random_kv(500, seed=7)
+        t = nh.build_grow(keys, pays, variant=variant)
+        new_keys = np.arange(10**9, 10**9 + 60, dtype=np.uint64)
+        t2 = nh.apply_delta(
+            t,
+            np.concatenate([keys[:80], new_keys]),
+            np.concatenate([pays[:80] ^ np.uint64(3),
+                            pays[:60] | np.uint64(1)]),
+            keys[200:240], copy=True)
+        rng = np.random.default_rng(3)
+        q = _mixed_queries(rng, np.concatenate([keys, new_keys]))
+        f_ref, p_ref = t2.lookup_host(q)
+        f_got, p_got = t2.lookup_host_batch(q)
+        assert (f_ref == f_got).all()
+        assert (p_ref == p_got).all()
+
+    def test_empty_batch(self, variant):
+        keys, pays = nh.random_kv(50, seed=4)
+        t = nh.build_grow(keys, pays, variant=variant)
+        f, p = t.lookup_host_batch(np.array([], dtype=np.uint64))
+        assert f.shape == (0,) and p.shape == (0,)
+
+
+class TestStoreBatchedProbing:
+    """get_batch / upsert_batch now probe through lookup_host_batch; these
+    pin their observable behavior to the per-key reference."""
+
+    def _store(self, n=300, vb=8, hot_fraction=0.2, seed=0):
+        rng = np.random.default_rng(seed)
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+        values = rng.integers(0, 255, (n, vb), dtype=np.uint8)
+        return keys, values, HybridKVStore(keys, values.copy(),
+                                           hot_fraction=hot_fraction)
+
+    def _reference_get(self, store, keys):
+        """Per-key oracle over the same index/tiers (no admission)."""
+        out = np.zeros((len(keys), store.value_bytes), dtype=np.uint8)
+        found = np.zeros(len(keys), dtype=bool)
+        from repro.core.hybrid_store import SLOT_MASK, TIER_MASK
+        for i, k in enumerate(np.asarray(keys, dtype=np.uint64)):
+            ok, payload, _, _ = store.index.probe_trace(int(k))
+            if not ok:
+                continue
+            found[i] = True
+            if payload & TIER_MASK:
+                out[i] = store._cold[int(payload & np.uint64(SLOT_MASK))]
+            else:
+                out[i] = store._hot_values[int(payload)]
+        return found, out
+
+    def test_get_batch_matches_reference(self):
+        keys, values, store = self._store()
+        rng = np.random.default_rng(1)
+        q = _mixed_queries(rng, keys)
+        f_ref, v_ref = self._reference_get(store, q)
+        f_got, v_got = store.get_batch(q, admit=False)
+        assert (f_ref == f_got).all()
+        assert (v_ref == v_got).all()
+        # and the tier stats add up
+        assert store.stats.lookups == len(q)
+        assert store.stats.hot_hits + store.stats.cold_misses \
+            == int(f_got.sum())
+
+    def test_get_batch_admission_still_once_per_key(self):
+        keys, values, store = self._store(hot_fraction=0.1)
+        store.maintain(target_free_fraction=0.2)   # make hot slots free
+        cold_key = keys[-1]
+        before = store.stats.admissions
+        f, v = store.get_batch([cold_key, cold_key, cold_key], admit=True)
+        assert f.all() and (v == values[-1]).all()
+        assert store.stats.admissions == before + 1
+        # admitted: now a hot hit, same bytes
+        f, v = store.get_batch([cold_key])
+        assert f.all() and (v == values[-1]).all()
+        assert store.stats.hot_hits >= 1
+
+    def test_upsert_batch_parity_with_duplicates_and_new_keys(self):
+        keys, values, s1 = self._store(seed=2)
+        _, _, s2 = self._store(seed=2)
+        rng = np.random.default_rng(5)
+        up_keys = np.array([5, 5, 900, 17, 900], dtype=np.uint64)
+        up_vals = rng.integers(0, 255, (5, 8), dtype=np.uint8)
+
+        r1 = s1.upsert_batch(up_keys, up_vals)
+        # reference semantics: last-write-wins dict applied per key
+        want = {int(k): up_vals[i] for i, k in enumerate(up_keys)}
+        assert r1["inserted"] == 1 and r1["updated"] == 2
+        q = np.concatenate([keys, [np.uint64(900)]])
+        f, v = s1.get_batch(q, admit=False)
+        assert f.all()
+        for i, k in enumerate(q):
+            expect = want.get(int(k), values[i] if i < len(keys) else None)
+            assert (v[i] == expect).all()
+        # copy-on-write path probes the same way
+        clone = s2.clone()
+        r2 = clone.upsert_batch(up_keys, up_vals, copy_on_write=True)
+        assert r2["inserted"] == 1 and r2["updated"] == 2
+        f2, v2 = clone.get_batch(q, admit=False)
+        assert (f2 == f).all() and (v2 == v).all()
+        # the retained original still serves pre-upsert rows bitwise
+        f0, v0 = s2.get_batch(keys, admit=False)
+        assert f0.all() and (v0 == values).all()

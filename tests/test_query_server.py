@@ -1,0 +1,403 @@
+"""QueryServer (ISSUE 3 tentpole): scatter-back correctness under concurrent
+clients (dict oracle), the single-version-per-micro-batch invariant while
+``publish_delta`` runs from another thread, deadline/queue shedding with
+typed errors, and the serving example as a slow multi-threaded stress."""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (EmbeddingTable, MultiTableEngine, ScalarTable,
+                               VersionEvictedError)
+from repro.serve.scheduler import (BatchPolicy, DeadlineError, QueueFullError,
+                                   ShedError)
+from repro.serve.server import QueryServer
+
+SHARD_BYTES = 1 << 15
+N_KEYS = 2_000
+VALUE_BYTES = 16
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(0)
+    keys = np.arange(1, N_KEYS + 1, dtype=np.uint64)
+    payloads = rng.integers(0, 1 << 50, N_KEYS).astype(np.uint64)
+    values = rng.integers(0, 255, (N_KEYS, VALUE_BYTES), dtype=np.uint8)
+    return keys, payloads, values
+
+
+@pytest.fixture(scope="module")
+def engine(dataset):
+    keys, payloads, values = dataset
+    eng = MultiTableEngine(
+        [ScalarTable("s", keys, payloads)],
+        [EmbeddingTable("e", keys, values, hot_fraction=0.3)],
+        max_shard_bytes=SHARD_BYTES, version=1)
+    # warm the fused-launch pad shapes so test latencies are not dominated
+    # by cold jit compiles (which the deadline tests would misread as slow
+    # service)
+    for n in (8, 64, 256, 1024):
+        eng.query({"s": keys[:n], "e": keys[:max(n // 2, 1)]})
+    return eng
+
+
+def _mixed_request(rng, keys, n=64):
+    """Hits + guaranteed misses, with duplicates."""
+    q = rng.choice(keys, n)
+    q = np.concatenate([q, q[:8],
+                        rng.integers(2**62, 2**63, 6, dtype=np.uint64)])
+    return {"s": q, "e": q[: n // 2]}
+
+
+class TestScatterBack:
+    def test_dict_oracle_under_concurrent_clients(self, dataset, engine):
+        """Every per-request slice of every fused micro-batch must match the
+        plain-dict oracle, no matter how requests were coalesced."""
+        keys, payloads, values = dataset
+        oracle = dict(zip(keys.tolist(), payloads.tolist()))
+        errors: list = []
+
+        with QueryServer(engine, BatchPolicy(max_wait_s=0.003)) as server:
+            def client(seed):
+                rng = np.random.default_rng(seed)
+                try:
+                    for _ in range(6):
+                        req = _mixed_request(rng, keys)
+                        res = server.query(req)
+                        sq = req["s"].tolist()
+                        for k, f, p in zip(sq, res["s"].found,
+                                           res["s"].payloads):
+                            assert (k in oracle) == bool(f)
+                            if f:
+                                assert oracle[k] == int(p)
+                        for k, f, v in zip(req["e"].tolist(), res["e"].found,
+                                           res["e"].values):
+                            assert (k in oracle) == bool(f)
+                            if f:
+                                assert (values[k - 1] == v).all()
+                except Exception as e:  # noqa: BLE001 — surfaced below
+                    errors.append(e)
+
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errors, errors[:3]
+            snap = server.stats_snapshot()
+        assert snap.completed == 8 * 6
+        assert snap.failed == 0 and snap.shed_rate == 0.0
+        # concurrent submissions actually coalesced
+        assert snap.batches < snap.completed
+
+    def test_coalescing_deterministic_when_prequeued(self, dataset, engine):
+        """Requests queued before the scheduler starts must fuse into few
+        micro-batches (occupancy > 1) and still scatter back correctly."""
+        keys, payloads, _ = dataset
+        server = QueryServer(engine, BatchPolicy(max_wait_s=0.01),
+                             start=False)
+        tickets = [server.submit({"s": keys[i * 10:i * 10 + 20]})
+                   for i in range(10)]
+        server.start()
+        try:
+            for i, t in enumerate(tickets):
+                res = t.result(timeout=30)
+                assert (res["s"].payloads
+                        == payloads[i * 10:i * 10 + 20]).all()
+            batch_ids = {t.batch_id for t in tickets}
+            assert len(batch_ids) < len(tickets)
+        finally:
+            server.close()
+
+
+class TestVersionPinning:
+    def test_no_micro_batch_mixes_versions_under_publish_delta(self):
+        """Payloads encode the publishing version for EVERY key, so a
+        response whose found payloads are not all identical — or not equal
+        to its batch's pinned version — proves a mixed-version micro-batch.
+        A publisher thread ships deltas as fast as it can while 6 clients
+        query; zero mixing is required, and multiple versions must actually
+        get served (the pinning is exercised, not idle)."""
+        keys = np.arange(1, 501, dtype=np.uint64)
+        eng = MultiTableEngine(
+            [ScalarTable("s", keys, np.full(500, 1, dtype=np.uint64))],
+            max_shard_bytes=1 << 13, version=1)
+        for n in (8, 64, 256, 512):
+            eng.query({"s": keys[:n]})
+
+        stop = threading.Event()
+        publish_err: list = []
+
+        def publisher():
+            v = 2
+            try:
+                while not stop.is_set() and v < 200:
+                    eng.publish_delta(v, upserts={
+                        "s": (keys, np.full(500, v, dtype=np.uint64))})
+                    v += 1
+            except Exception as e:  # noqa: BLE001
+                publish_err.append(e)
+
+        observed: list[tuple] = []
+        errors: list = []
+        with QueryServer(eng, BatchPolicy(max_wait_s=0.002)) as server:
+            pub = threading.Thread(target=publisher)
+            pub.start()
+
+            def client(seed):
+                rng = np.random.default_rng(seed)
+                try:
+                    for _ in range(25):
+                        q = rng.choice(keys, 40)
+                        t = server.submit({"s": q})
+                        res = t.result(timeout=60)
+                        vals = set(res["s"].payloads[res["s"].found]
+                                   .tolist())
+                        assert len(vals) == 1, f"mixed batch: {vals}"
+                        assert vals == {res.version}
+                        observed.append((t.batch_id, res.version))
+                except Exception as e:  # noqa: BLE001
+                    errors.append(e)
+
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(6)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            stop.set()
+            pub.join()
+        assert not errors, errors[:3]
+        assert not publish_err, publish_err[:1]
+        # every micro-batch served exactly one version
+        by_batch: dict = {}
+        for bid, v in observed:
+            by_batch.setdefault(bid, set()).add(v)
+        assert all(len(vs) == 1 for vs in by_batch.values())
+        # and the run really spanned versions
+        assert len({v for _, v in observed}) >= 2
+
+    def test_strict_pin_to_evicted_version_fails_typed(self, dataset,
+                                                       engine):
+        keys, _, _ = dataset
+        eng = MultiTableEngine(
+            [ScalarTable("s", keys, np.ones(len(keys), dtype=np.uint64))],
+            max_shard_bytes=SHARD_BYTES, retain=2, version=1)
+        eng.publish_delta(2, upserts={})
+        eng.publish_delta(3, upserts={})        # v1 evicted
+        with QueryServer(eng) as server:
+            with pytest.raises(VersionEvictedError):
+                server.query({"s": keys[:8]}, version=1, strict=True)
+            # non-strict re-pins instead
+            res = server.query({"s": keys[:8]}, version=1)
+            assert res.version == 3
+
+
+class TestSheddingAndDeadlines:
+    def test_queue_full_is_typed_backpressure(self, dataset, engine):
+        keys, _, _ = dataset
+        server = QueryServer(engine,
+                             BatchPolicy(max_queue_requests=4), start=False)
+        try:
+            for _ in range(4):
+                server.submit({"s": keys[:8]})
+            with pytest.raises(QueueFullError):
+                server.submit({"s": keys[:8]})
+            assert server.stats_snapshot().shed_queue_full == 1
+        finally:
+            server.close()
+
+    def test_budget_below_service_estimate_shed_at_admission(self, dataset,
+                                                             engine):
+        keys, _, _ = dataset
+        server = QueryServer(
+            engine, BatchPolicy(service_time_init_s=0.05), start=False)
+        try:
+            with pytest.raises(DeadlineError):
+                server.submit({"s": keys[:8]}, budget_s=0.001)
+            assert server.stats_snapshot().shed_deadline == 1
+        finally:
+            server.close()
+
+    def test_expired_in_queue_fails_ticket(self, dataset, engine):
+        keys, _, _ = dataset
+        server = QueryServer(engine, BatchPolicy(service_time_init_s=1e-4),
+                             start=False)
+        try:
+            ticket = server.submit({"s": keys[:8]}, budget_s=0.01)
+            time.sleep(0.05)                 # deadline passes while queued
+            server.start()
+            with pytest.raises(DeadlineError):
+                ticket.result(timeout=30)
+            assert server.stats_snapshot().shed_deadline == 1
+        finally:
+            server.close()
+
+    def test_keys_saturated_batch_closes_immediately(self, dataset, engine):
+        """A batch that cannot admit the next waiting request (key budget
+        full) must close at once, not wait out max_wait_s."""
+        keys, _, _ = dataset
+        server = QueryServer(engine,
+                             BatchPolicy(max_batch_keys=500, max_wait_s=3.0),
+                             start=False)
+        try:
+            tickets = [server.submit({"s": keys[i * 240:(i + 1) * 240]})
+                       for i in range(4)]
+            server.start()
+            for t in tickets:
+                t.result(timeout=30)
+            # 240+240 keys fill the 500 budget; the waiting 3rd request
+            # saturates batch 0, so its riders never pay max_wait_s
+            assert tickets[0].batch_id == tickets[1].batch_id
+            assert tickets[0].latency_s < 2.0
+            assert tickets[1].latency_s < 2.0
+        finally:
+            server.close()
+
+    def test_lone_request_closes_on_max_wait(self, dataset, engine):
+        keys, payloads, _ = dataset
+        with QueryServer(engine, BatchPolicy(max_wait_s=0.002)) as server:
+            t0 = time.perf_counter()
+            res = server.query({"s": keys[:16]}, timeout=30)
+            assert (res["s"].payloads == payloads[:16]).all()
+            assert time.perf_counter() - t0 < 10.0
+
+    def test_closed_server_rejects(self, dataset, engine):
+        keys, _, _ = dataset
+        server = QueryServer(engine)
+        server.close()
+        with pytest.raises(ShedError):
+            server.submit({"s": keys[:8]})
+
+    def test_close_without_start_fails_queued_tickets(self, dataset,
+                                                      engine):
+        """A server closed before its scheduler ever ran must fail queued
+        tickets (typed), not leave result() waiters hanging."""
+        keys, _, _ = dataset
+        server = QueryServer(engine, start=False)
+        ticket = server.submit({"s": keys[:8]})
+        server.close()
+        with pytest.raises(ShedError):
+            ticket.result(timeout=5)
+
+    def test_bad_table_does_not_fail_cobatched_requests(self, dataset,
+                                                        engine):
+        """One rider's unknown table name errors only that rider; the
+        requests it coalesced with are retried and served."""
+        keys, payloads, _ = dataset
+        server = QueryServer(engine, start=False)
+        t_bad = server.submit({"nope": keys[:4]})
+        t_good = server.submit({"s": keys[:16]})
+        server.start()
+        try:
+            with pytest.raises(KeyError):
+                t_bad.result(timeout=30)
+            res = t_good.result(timeout=30)
+            assert (res["s"].payloads == payloads[:16]).all()
+        finally:
+            server.close()
+
+
+class TestDeltaFailureRecovery:
+    def test_failed_embedding_delta_leaves_engine_retryable(self):
+        """A publish_delta that raises mid-apply (bad value dtype) must not
+        retire the base build's stores — the corrected retry succeeds."""
+        keys = np.arange(1, 101, dtype=np.uint64)
+        values = np.full((100, 8), 7, dtype=np.uint8)
+        eng = MultiTableEngine(
+            embeddings=[EmbeddingTable("e", keys, values)], version=1)
+        bad_rows = np.zeros((4, 4), dtype=np.uint8)     # wrong row width
+        with pytest.raises(ValueError):
+            eng.publish_delta(2, upserts={"e": (keys[:4], bad_rows)})
+        assert eng.latest_version == 1
+        good_rows = np.full((4, 8), 9, dtype=np.uint8)
+        eng.publish_delta(2, upserts={"e": (keys[:4], good_rows)})
+        res = eng.query({"e": keys[:8]}, version=2)
+        assert (res["e"].values[:4] == 9).all()
+        assert (res["e"].values[4:] == 7).all()
+
+
+class TestClusterSimIntegration:
+    def test_sim_data_plane_through_query_server(self):
+        """Sim replicas serve real rows through a QueryServer while a
+        rolling update publishes a new build: every sim batch stays
+        single-version ACROSS tables (attr payload and embedding byte agree
+        on the version) and both generations actually serve."""
+        from repro.core.cluster_sim import ClusterSim, SimConfig
+        n = 600
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+
+        def tables(v):
+            return ([ScalarTable("attr", keys,
+                                 np.full(n, v + 10, dtype=np.uint64))],
+                    [EmbeddingTable("emb", keys,
+                                    np.full((n, 8), (v + 1) % 251,
+                                            dtype=np.uint8))])
+
+        sim = ClusterSim(SimConfig(n_shards=4, n_replicas=2, seed=3),
+                         protocol="paper", tables_for_version=tables,
+                         use_query_server=True)
+        try:
+            assert sim.query_server is not None
+            sim.start_rolling_update(1)
+            seen = []
+
+            def q():
+                ok, _versions, _lat, data = sim.query_batch(
+                    {"attr": keys[:64], "emb": keys[:32]})
+                assert ok
+                f, p = data["attr"]
+                assert f.all()
+                assert len(set(p.tolist())) == 1     # one version per batch
+                fe, ve = data["emb"]
+                assert fe.all()
+                assert len(set(ve[:, 0].tolist())) == 1
+                # cross-table consistency: the embedding generation matches
+                # the attribute generation of the SAME pinned version
+                assert int(ve[0, 0]) == (int(p[0]) - 10 + 1) % 251
+                seen.append(int(p[0]) - 10)
+
+            for t in range(0, 10_000_000, 600_000):
+                sim.sim.at(t, q)
+            sim.sim.run_until(10_000_000)
+            assert set(seen) == {0, 1}, seen    # both generations served
+        finally:
+            sim.close()
+
+
+@pytest.mark.slow
+def test_serve_concurrent_example_stress():
+    """Multi-threaded end-to-end stress: 8 clients + a delta publisher
+    through one QueryServer; the example asserts zero future-version leaks
+    and full accounting.  A deadlocked scheduler fails by timeout here
+    rather than hanging the suite."""
+    r = subprocess.run(
+        [sys.executable, "examples/serve_concurrent.py"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+    assert "future-version leaks: 0" in r.stdout
+
+
+@pytest.mark.slow
+def test_bench_serving_acceptance():
+    """Acceptance: coalesced serving >= 2x naive qps at >= 8 clients."""
+    r = subprocess.run(
+        [sys.executable, "benchmarks/bench_serving.py"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("serving/acceptance_8clients")]
+    assert line, r.stdout[-2000:]
+    speedup = float(line[0].split("best_speedup=")[1].split("x")[0])
+    assert speedup >= 2.0, line[0]
