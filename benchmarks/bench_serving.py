@@ -1,37 +1,65 @@
-"""Concurrent serving: QueryServer coalescing vs. one-request-one-query.
+"""Concurrent serving: QueryServer coalescing vs. one-request-one-query,
+plus the QoS-mix sweep (priority lanes vs. a single-lane baseline).
 
 Workload: N client threads, each firing small zipfian feature requests
 (two scalar tables + one hybrid embedding table, ~150 keys/request) — the
 recsys serving regime where per-request key sets are tiny but concurrent
 traffic is heavy, so per-query fixed costs (host staging + one launch set
-per request) dominate the naive path.
+per request) dominate the naive path.  All traffic speaks the API-v2
+``FeatureClient``.
 
-Rows (per client count c and fused key budget b):
-  serving/naive_c{c}          each client calls engine.query directly
-  serving/coalesced_c{c}_b{b} clients submit to a QueryServer; requests
+Coalescing rows (per client count c and fused key budget b):
+  serving/naive_c{c}          each client queries the engine backend direct
+  serving/coalesced_c{c}_b{b} clients submit through a QueryServer; requests
                               coalesce into deadline-aware micro-batches
 
-``derived`` carries qps, speedup over naive at the same client count, and
-server p99/occupancy.  Acceptance target: coalesced >= 2x naive qps at
->= 8 concurrent clients.
+QoS rows (``--qos`` / ``main_qos``): a burst of mixed-class traffic
+(RANKING / RETRIEVAL / PREFETCH interleaved 1:1:2) against a server whose
+admission queue is far smaller than the burst, so backpressure MUST shed —
+the lanes decide who:
+  serving/qos_lanes_<CLASS>   per-class p99 + shed rate with weighted lanes
+  serving/qos_single_lane     same burst, every request on one class (the
+                              pre-v2 FIFO behavior)
+  serving/qos_acceptance      RANKING p99 and shed rate must be strictly
+                              better than PREFETCH's
 
-Run:  PYTHONPATH=src:. python benchmarks/bench_serving.py
+Run:  PYTHONPATH=src:. python benchmarks/bench_serving.py [--qos]
 """
 from __future__ import annotations
 
+import sys
 import threading
 import time
 
 import numpy as np
 
 from benchmarks import common
+from repro.api import FeatureClient, QoSClass
 from repro.core.engine import EmbeddingTable, MultiTableEngine, ScalarTable
 from repro.data.synthetic import zipf_ids
-from repro.serve.scheduler import BatchPolicy
+from repro.serve.scheduler import BatchPolicy, ShedError
 from repro.serve.server import QueryServer
 
 KEYS_SCALAR = 96
 KEYS_EMB = 48
+
+
+def _make_engine(n_items: int, max_shard_bytes: int = 1 << 20
+                 ) -> tuple[MultiTableEngine, np.ndarray]:
+    rng = np.random.default_rng(0)
+    keys = np.arange(1, n_items + 1, dtype=np.uint64)
+    engine = MultiTableEngine(
+        [ScalarTable("item_attr",
+                     keys, rng.integers(0, 1 << 50, n_items)
+                     .astype(np.uint64)),
+         ScalarTable("cat_attr",
+                     keys, rng.integers(0, 1 << 50, n_items)
+                     .astype(np.uint64))],
+        [EmbeddingTable("item_emb", keys,
+                        rng.integers(0, 255, (n_items, 32), dtype=np.uint8),
+                        hot_fraction=0.2)],
+        max_shard_bytes=max_shard_bytes)
+    return engine, keys
 
 
 def _requests(seed: int, n_requests: int, keys: np.ndarray):
@@ -77,34 +105,23 @@ def main(quick: bool = False) -> None:
     key_budgets = (2048, 8192) if quick else (1024, 4096, 16384)
     max_clients = max(client_counts)
 
-    rng = np.random.default_rng(0)
-    keys = np.arange(1, n_items + 1, dtype=np.uint64)
-    engine = MultiTableEngine(
-        [ScalarTable("item_attr",
-                     keys, rng.integers(0, 1 << 50, n_items)
-                     .astype(np.uint64)),
-         ScalarTable("cat_attr",
-                     keys, rng.integers(0, 1 << 50, n_items)
-                     .astype(np.uint64))],
-        [EmbeddingTable("item_emb", keys,
-                        rng.integers(0, 255, (n_items, 32), dtype=np.uint8),
-                        hot_fraction=0.2)],
-        max_shard_bytes=1 << 20)
+    engine, keys = _make_engine(n_items)
+    direct = FeatureClient(engine)
 
     # warm every pad shape both paths will see: sequential (occupancy-1
     # pads) and full fan-in (coalesced pads), twice so the zipfian unique
     # counts visit the pad boundaries
-    _drive(1, n_requests, keys, engine.query)
+    _drive(1, n_requests, keys, direct.query)
     for key_budget in key_budgets:
         with QueryServer(engine, BatchPolicy(max_batch_keys=key_budget,
                                              max_wait_s=0.003)) as warm_srv:
+            warm_client = FeatureClient(warm_srv)
             for _ in range(2):
-                _drive(max_clients, n_requests, keys,
-                       lambda r: warm_srv.query(r))
+                _drive(max_clients, n_requests, keys, warm_client.query)
 
     naive_qps = {}
     for c in client_counts:
-        wall, lats = _drive(c, n_requests, keys, engine.query)
+        wall, lats = _drive(c, n_requests, keys, direct.query)
         qps = c * n_requests / wall
         naive_qps[c] = qps
         common.row(f"serving/naive_c{c}", np.median(lats) * 1e3,
@@ -116,10 +133,10 @@ def main(quick: bool = False) -> None:
             server = QueryServer(engine,
                                  BatchPolicy(max_batch_keys=key_budget,
                                              max_wait_s=0.003))
-            _drive(c, 8, keys, lambda r: server.query(r))   # settle EWMA
+            client = FeatureClient(server)
+            _drive(c, 8, keys, client.query)                # settle EWMA
             server.reset_stats()
-            wall, lats = _drive(c, n_requests, keys,
-                                lambda r: server.query(r))
+            wall, lats = _drive(c, n_requests, keys, client.query)
             snap = server.stats_snapshot()
             server.close()
             qps = c * n_requests / wall
@@ -137,6 +154,135 @@ def main(quick: bool = False) -> None:
                0.0, f"best_speedup={best_8plus:.2f}x (target >= 2x)")
 
 
+# ---------------------------------------------------------------------------
+# QoS-mix sweep: priority lanes vs. single-lane FIFO under forced overload
+# ---------------------------------------------------------------------------
+# PREFETCH-heavy: the speculative lane outweighs the user-facing ones in
+# offered load (the realistic shape — and the regime where per-class p99
+# separates by queueing rather than by straggler noise)
+QOS_PLAN = ((QoSClass.RANKING, 2), (QoSClass.RETRIEVAL, 2),
+            (QoSClass.PREFETCH, 8))      # (class, worker threads)
+QOS_BURST = 4                            # outstanding tickets per worker
+
+
+def _qos_requests(seed: int, n_requests: int, keys: np.ndarray):
+    """Single-table zipfian requests: the QoS sweep isolates lane behavior,
+    so it keeps the fused-launch shape space tiny (one table, one pad axis)
+    — a mid-measurement jit compile of a novel multi-table pad combo would
+    stall the scheduler thread and pollute every lane's p99 identically."""
+    rng = np.random.default_rng(seed)
+    return [{"item_attr": keys[zipf_ids(rng, len(keys), 2 * KEYS_SCALAR)
+                               .astype(np.int64)]}
+            for _ in range(n_requests)]
+
+
+def _qos_load(server: QueryServer, keys: np.ndarray, n_per_worker: int,
+              plan) -> None:
+    """Closed-loop overload: each worker keeps ``QOS_BURST`` tickets
+    outstanding on its class's lane; total outstanding exceeds the
+    admission queue by construction, so backpressure sheds continuously
+    and the lanes pick the victims.  Shed tickets raise their typed
+    errors and are counted server-side per class."""
+    client = FeatureClient(server)
+
+    def worker(qos: QoSClass, seed: int):
+        reqs = _qos_requests(seed, n_per_worker, keys)
+        for i in range(0, len(reqs), QOS_BURST):
+            tickets = []
+            for req in reqs[i:i + QOS_BURST]:
+                try:
+                    tickets.append(client.submit(req, qos=qos))
+                except ShedError:
+                    pass
+            for t in tickets:
+                try:
+                    t.result(timeout=120)
+                except ShedError:
+                    pass
+
+    # seed mixes in the class so same-index workers in different lanes
+    # drive independent zipfian streams, not byte-identical replays
+    threads = [threading.Thread(
+        target=worker, args=(qos, 50 + 10 * w + 1000 * int(qos)))
+               for qos, n in plan for w in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def main_qos(quick: bool = False) -> None:
+    n_items = 20_000 if quick else 50_000
+    n_per_worker = 40 if quick else 80
+    n_workers = sum(n for _, n in QOS_PLAN)
+    # the closed loop keeps up to n_workers * QOS_BURST tickets in flight
+    # against a queue HALF that size: admission MUST shed, and the lanes
+    # stay deep enough that waiting time (not stragglers) sets each p99.
+    # Small batches keep the service quantum short (a RANKING arrival never
+    # waits out a 2048-key lower-lane batch), and the sweep pins explicit
+    # lane weights — the knob a deployment would actually turn — rather
+    # than relying on the 4/2/1 default
+    policy = BatchPolicy(max_batch_keys=1024, max_wait_s=0.001,
+                         max_queue_requests=(n_workers * QOS_BURST) // 2)
+    lane_weights = {"RANKING": 8.0, "RETRIEVAL": 4.0, "PREFETCH": 1.0}
+
+    rng = np.random.default_rng(0)
+    keys = np.arange(1, n_items + 1, dtype=np.uint64)
+    engine = MultiTableEngine(
+        [ScalarTable("item_attr",
+                     keys, rng.integers(0, 1 << 50, n_items)
+                     .astype(np.uint64))],
+        max_shard_bytes=1 << 19)
+    warm = FeatureClient(engine)
+    for n in (8, 64, 256, 1024, 2048):              # pad-shape warmup
+        warm.query({"item_attr": keys[:n]})
+
+    # settle: a full dress rehearsal of the measured load, so the
+    # measurement window sees no cold jit and the service-time EWMA starts
+    # where the measured run will live (a short warmup leaves compile
+    # stalls inside the measured p99 of every lane)
+    with QueryServer(engine, policy, lane_weights=lane_weights) as server:
+        _qos_load(server, keys, n_per_worker, QOS_PLAN)
+
+    per_class = {}
+    with QueryServer(engine, policy, lane_weights=lane_weights) as server:
+        _qos_load(server, keys, n_per_worker, QOS_PLAN)
+        snap = server.stats_snapshot()
+        for name, c in snap.per_class.items():
+            if c.submitted:
+                per_class[name] = c
+                common.row(f"serving/qos_lanes_{name}", c.p99_ms * 1e3,
+                           f"served={c.completed}/{c.submitted} "
+                           f"p50={c.p50_ms:.1f}ms p99={c.p99_ms:.1f}ms "
+                           f"shed={c.shed_rate:.1%}")
+
+    # single-lane baseline: identical load, one class — the pre-v2 FIFO
+    single = tuple((QoSClass.RETRIEVAL, n) for _, n in QOS_PLAN)
+    with QueryServer(engine, policy) as server:    # its own dress rehearsal
+        _qos_load(server, keys, n_per_worker, single)
+    with QueryServer(engine, policy) as server:
+        _qos_load(server, keys, n_per_worker, single)
+        base = server.stats_snapshot()
+    common.row("serving/qos_single_lane", base.p99_ms * 1e3,
+               f"served={base.completed}/{base.submitted} "
+               f"p50={base.p50_ms:.1f}ms p99={base.p99_ms:.1f}ms "
+               f"shed={base.shed_rate:.1%}")
+
+    rank = per_class.get("RANKING")
+    pref = per_class.get("PREFETCH")
+    ok = (rank is not None and pref is not None
+          and rank.p99_ms < pref.p99_ms and rank.shed_rate < pref.shed_rate)
+    common.row(
+        "serving/qos_acceptance", 0.0,
+        f"ranking_p99={rank.p99_ms:.1f}ms prefetch_p99={pref.p99_ms:.1f}ms "
+        f"ranking_shed={rank.shed_rate:.1%} "
+        f"prefetch_shed={pref.shed_rate:.1%} "
+        f"ranking_strictly_better={ok}")
+
+
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    main(quick=True)
+    if "--qos" in sys.argv:
+        main_qos(quick=True)
+    else:
+        main(quick=True)

@@ -11,7 +11,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv")
+                    help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv,qos")
     args = ap.parse_args()
 
     from benchmarks import (bench_scalar_tables, bench_size_sweep,
@@ -30,6 +30,7 @@ def main() -> None:
         "mt": bench_multitable.main,
         "inc": bench_incremental.main,
         "srv": bench_serving.main,
+        "qos": bench_serving.main_qos,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,us_per_call,derived")

@@ -13,6 +13,7 @@ from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import FeatureClient
 from repro.configs import registry
 from repro.core.cluster_sim import ClusterSim, SimConfig
 from repro.core.engine import EmbeddingTable, MultiTableEngine, ScalarTable
@@ -42,8 +43,11 @@ def tables(version: int):
 scalars, embeddings = tables(1)
 engine = MultiTableEngine(scalars, embeddings,
                           max_shard_bytes=fs_cfg.max_shard_bytes, version=1)
+# API v2: one FeatureClient session over the engine backend — the scoring
+# step queries and the rolling publishes both go through the protocol
+client = FeatureClient(engine)
 print(f"feature store: {fs_cfg.n_items} items x "
-      f"{len(engine.table_names)} tables behind one fused engine, v1 live")
+      f"{len(client.table_names)} tables behind one fused engine, v1 live")
 
 # --- model: smoke DeepFM scoring batches fed through the engine --------------
 mesh = mesh_mod.make_local_mesh()
@@ -51,16 +55,18 @@ mi = cm.MeshInfo.from_mesh(mesh)
 cfg = registry.get("deepfm").smoke
 params, _ = cm.unbox(rec_mod.recsys_init(jax.random.key(0), cfg))
 step = serve_step.recsys_score_fn(
-    cfg, mesh, mi, feature_engine=engine,
+    cfg, mesh, mi, feature_client=client,
     feature_fields=[("item_feats", "item_id"), ("item_pop", "item_id")])
 
 lat = []
 with compat.set_mesh(mesh):
     for req in range(60):
         if req == 10:                      # publish lands mid-traffic: the
-            engine.publish(2, *tables(2))  # v1 build stays retained for
+            s2, e2 = tables(2)             # v1 build stays retained for
+            client.update(2, scalars=s2, embeddings=e2)
         if req == 40:                      # in-flight batches; v3 evicts it
-            engine.publish(3, *tables(3))
+            s3, e3 = tables(3)
+            client.update(3, scalars=s3, embeddings=e3)
         t0 = time.perf_counter()
         batch = synthetic.recsys_batch(rng, cfg, 64)
         batch["item_id"] = (batch["sparse_ids"][:, 0].astype(np.int64)

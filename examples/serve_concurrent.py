@@ -1,12 +1,16 @@
-"""Concurrent serving demo: many clients, one QueryServer, deltas landing
-mid-traffic.
+"""Concurrent serving demo: mixed-QoS clients, one QueryServer, deltas
+landing mid-traffic — the FeatureService API v2 surface end to end.
 
-Eight client threads fire zipfian feature lookups with 100 ms budgets at a
-``QueryServer`` wrapping one ``MultiTableEngine`` while a publisher thread
-ships ``publish_delta`` generations every few batches.  The server coalesces
-the clients' key sets into deadline-aware micro-batches — cross-request
-dedup, one fused device launch set per batch, and exactly one pinned engine
-version per micro-batch, so no response ever mixes versions.
+Eight client threads speak ``FeatureClient`` (no raw-dict submit anywhere):
+four on the RANKING lane, two RETRIEVAL, two PREFETCH, all firing zipfian
+feature lookups with 100 ms budgets at a ``QueryServer`` wrapping one
+``MultiTableEngine`` while a publisher thread ships ``publish_delta``
+generations every few batches.  The server's scheduler runs one lane per
+QoS class (weighted 4/2/1, PREFETCH shed first under backpressure) and
+coalesces each lane's key sets into deadline-aware micro-batches —
+cross-request dedup, one fused device launch set per batch, and exactly
+one pinned engine version per micro-batch, so no response ever mixes
+versions, in any lane.
 
 Run:  PYTHONPATH=src python examples/serve_concurrent.py
 """
@@ -15,6 +19,7 @@ import time
 
 import numpy as np
 
+from repro.api import FeatureClient, QoSClass
 from repro.core.engine import EmbeddingTable, MultiTableEngine, ScalarTable
 from repro.data.synthetic import zipf_ids
 from repro.serve.scheduler import BatchPolicy, ShedError
@@ -25,6 +30,9 @@ N_CLIENTS = 8
 REQUESTS_PER_CLIENT = 30
 KEYS_PER_REQUEST = 96
 BUDGET_S = 0.100
+CLIENT_QOS = [QoSClass.RANKING, QoSClass.RANKING, QoSClass.RANKING,
+              QoSClass.RANKING, QoSClass.RETRIEVAL, QoSClass.RETRIEVAL,
+              QoSClass.PREFETCH, QoSClass.PREFETCH]
 
 rng = np.random.default_rng(0)
 keys = np.arange(1, N_ITEMS + 1, dtype=np.uint64)
@@ -40,6 +48,7 @@ engine = MultiTableEngine(
 
 server = QueryServer(engine, BatchPolicy(max_batch_keys=4096,
                                          max_wait_s=0.003))
+feature_client = FeatureClient(server, default_budget_s=BUDGET_S)
 
 stop = threading.Event()
 shed_count = [0]
@@ -49,12 +58,13 @@ lock = threading.Lock()
 
 
 def publisher():
-    """Ships a delta generation every 30 ms — rolling-update cadence."""
+    """Ships a delta generation every 30 ms — rolling-update cadence —
+    through the protocol's update face."""
     v = 2
     while not stop.is_set():
         time.sleep(0.030)
         sel = rng.integers(0, N_ITEMS, 500)
-        engine.publish_delta(v, upserts={
+        feature_client.update(v, upserts={
             "item_pop": (keys[sel], np.full(500, v, dtype=np.uint64)),
             "item_emb": (keys[sel[:100]],
                          rng.integers(0, 255, (100, 32), dtype=np.uint8))})
@@ -64,12 +74,14 @@ def publisher():
 def client(cid: int, requests: int = REQUESTS_PER_CLIENT,
            budget_s: float = BUDGET_S):
     crng = np.random.default_rng(1000 + cid)
+    qos = CLIENT_QOS[cid % len(CLIENT_QOS)]
     for _ in range(requests):
         q = keys[zipf_ids(crng, N_ITEMS, KEYS_PER_REQUEST)
                  .astype(np.int64)]
         try:
-            res = server.query({"item_pop": q, "item_emb": q[:48]},
-                               budget_s=budget_s)
+            res = feature_client.query(
+                {"item_pop": q, "item_emb": q[:48]},
+                qos=qos, budget_s=budget_s)
         except ShedError:
             with lock:
                 shed_count[0] += 1
@@ -123,6 +135,11 @@ print(f"{N_CLIENTS} clients x {REQUESTS_PER_CLIENT} requests in "
       f"{wall:.2f}s ({snap.completed / wall:.0f} qps), "
       f"{engine.stats.delta_publishes} delta publishes mid-traffic")
 print(f"server: {snap.summary()}")
+for name, c in snap.per_class.items():
+    if c.submitted:
+        print(f"  {name:9s} {c.completed}/{c.submitted} served "
+              f"p50={c.p50_ms:.2f}ms p99={c.p99_ms:.2f}ms "
+              f"shed={c.shed_rate:.1%}")
 print(f"versions served: {sorted(served_versions)}; "
       f"future-version leaks: {mixed[0]} (must be 0)")
 assert mixed[0] == 0, "a micro-batch read rows newer than its pin"

@@ -1,0 +1,34 @@
+"""FeatureService API v2 — the single serving surface (ISSUE 4 tentpole).
+
+One typed request/response protocol over every storage face the
+reproduction grew so far:
+
+  - ``types``    — ``QueryRequest`` / ``QueryResponse`` / ``UpdateRequest``
+                   dataclasses carrying per-request QoS class
+                   (``RANKING > RETRIEVAL > PREFETCH``) and consistency
+                   requirement (``latest`` / ``pinned`` / ``hinted`` /
+                   ``min_version``);
+  - ``backends`` — the ``BatchQueryBackend`` protocol plus its three
+                   implementations: ``EngineBackend`` (MultiTableEngine),
+                   ``StoreBackend`` (standalone HybridKVStore tables), and
+                   ``ClusterBackend`` (ClusterSim replica fleets);
+  - ``client``   — ``FeatureClient``, the session object every caller now
+                   uses instead of raw-dict ``QueryServer.submit``; it
+                   fronts either a ``QueryServer`` (QoS-laned concurrent
+                   micro-batching) or a bare backend (direct calls).
+
+``serve/server.QueryServer`` speaks this protocol natively: its scheduler
+runs one admission lane per QoS class with weighted service and
+class-aware shedding (PREFETCH shed before RANKING under backpressure).
+"""
+from repro.api.types import (Consistency, ConsistencyError, QoSClass,
+                             QueryRequest, QueryResponse, UpdateRequest)
+from repro.api.backends import (BatchQueryBackend, ClusterBackend,
+                                EngineBackend, StoreBackend, as_backend)
+from repro.api.client import FeatureClient
+
+__all__ = [
+    "BatchQueryBackend", "ClusterBackend", "Consistency", "ConsistencyError",
+    "EngineBackend", "FeatureClient", "QoSClass", "QueryRequest",
+    "QueryResponse", "StoreBackend", "UpdateRequest", "as_backend",
+]

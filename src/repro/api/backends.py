@@ -1,0 +1,342 @@
+"""``BatchQueryBackend`` — the storage protocol under the FeatureService.
+
+A backend is anything that can answer a fused ``{table: keys}`` batch in
+two phases (``begin`` pins one version and dispatches, ``finish`` blocks
+and gathers) and absorb ``UpdateRequest`` mutations.  The split-phase shape
+is what lets ``serve/server.QueryServer`` double-buffer any backend the
+same way it double-buffers the engine.
+
+Three implementations ship:
+
+  - ``EngineBackend``  — the fused ``MultiTableEngine`` (the paper's query
+                         service proper);
+  - ``StoreBackend``   — standalone ``HybridKVStore`` value tables with no
+                         engine in front (the hybrid hot/cold tier served
+                         directly, retention window of one version);
+  - ``ClusterBackend`` — a ``ClusterSim`` replica fleet: version pinning
+                         resolves against live replica metadata, data comes
+                         from the fleet's shared engine data plane.
+
+``begin`` must return an object exposing ``keys_requested`` /
+``keys_deviceside`` / ``launches`` so the server's coalesce stats stay
+backend-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.api.types import QueryResult, TableResult, UpdateRequest
+from repro.core.engine import MultiTableEngine, VersionEvictedError
+from repro.core.hybrid_store import HybridKVStore
+
+__all__ = ["BatchQueryBackend", "ClusterBackend", "EngineBackend",
+           "StoreBackend", "as_backend"]
+
+
+@runtime_checkable
+class BatchQueryBackend(Protocol):
+    """What the serving layer requires of a storage face."""
+
+    name: str
+
+    @property
+    def latest_version(self) -> int: ...
+
+    @property
+    def table_names(self) -> list[str]: ...
+
+    def begin(self, tables: dict[str, np.ndarray], *,
+              version: Optional[int] = None, strict: bool = False): ...
+
+    def finish(self, inflight) -> QueryResult: ...
+
+    def apply_update(self, update: UpdateRequest) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# MultiTableEngine
+# ---------------------------------------------------------------------------
+class EngineBackend:
+    """The fused multi-table engine behind the protocol — a thin adapter,
+    since the engine already speaks split-phase version-pinned batches."""
+
+    name = "engine"
+
+    def __init__(self, engine: MultiTableEngine):
+        self.engine = engine
+
+    @property
+    def latest_version(self) -> int:
+        return self.engine.latest_version
+
+    @property
+    def table_names(self) -> list[str]:
+        return self.engine.table_names
+
+    def begin(self, tables, *, version=None, strict=False):
+        return self.engine.begin(tables, version=version, strict=strict)
+
+    def finish(self, inflight) -> QueryResult:
+        return self.engine.finish(inflight)
+
+    def apply_update(self, update: UpdateRequest) -> None:
+        if update.is_delta:
+            self.engine.publish_delta(update.version, update.upserts,
+                                      update.deletes)
+        else:
+            self.engine.publish(update.version, update.scalars,
+                                update.embeddings)
+
+
+# ---------------------------------------------------------------------------
+# standalone HybridKVStore tables
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _StoreInflight:
+    version: int                         # resolved at begin; finish re-pins
+    strict: bool                         # a strict pin may NOT re-pin
+    staged: dict[str, tuple[np.ndarray, np.ndarray]]  # name -> (uniq, inv)
+    keys_requested: int
+    keys_deviceside: int
+    launches: int
+
+
+class StoreBackend:
+    """Hybrid hot/cold value tables served without an engine in front.
+
+    Updates are in-place (``upsert_batch``/``delete_batch``), so the
+    retention window is exactly one version: a strict pin to anything but
+    the current version NACKs with ``VersionEvictedError``, a hinted pin
+    re-pins to current — the same protocol surface as the engine, with a
+    degenerate window.  Because there is no retained build to keep an
+    in-flight batch on, ``finish`` gathers every table under the update
+    lock and re-pins to the version current at gather time: an update
+    landing between begin and finish moves the whole batch forward to the
+    new version, it can never produce rows from one version labelled with
+    another.  Dedup mirrors the engine's: each table's keys are uniqued
+    before the store probe and inverse-gathered back."""
+
+    name = "store"
+
+    def __init__(self, stores: dict[str, HybridKVStore], *, version: int = 1):
+        if not stores:
+            raise ValueError("StoreBackend needs at least one named store")
+        for name, store in stores.items():
+            if not isinstance(store, HybridKVStore):
+                raise ValueError(f"table {name!r} is not a HybridKVStore")
+        self.stores = dict(stores)
+        self._version = int(version)
+        # serializes gathers against updates: the window-of-one store has
+        # no immutable build for a batch to hold, so atomicity of (rows,
+        # version tag) comes from this lock instead
+        self._update_lock = threading.Lock()
+
+    @property
+    def latest_version(self) -> int:
+        return self._version
+
+    @property
+    def table_names(self) -> list[str]:
+        return sorted(self.stores)
+
+    def begin(self, tables, *, version=None, strict=False):
+        with self._update_lock:
+            current = self._version     # read once — an update racing this
+            # begin must either NACK here or at finish's re-check, never
+            # slip a newer version under a strict pin unnoticed
+        if version is not None and version != current:
+            if strict:
+                raise VersionEvictedError(
+                    f"version {version} not retained; store backend holds "
+                    f"only [{current}]")
+            # NACK -> re-pin to the single live version
+        staged = {}
+        requested = deviceside = 0
+        for name, keys in tables.items():
+            if name not in self.stores:
+                raise KeyError(f"unknown table {name!r}; backend serves "
+                               f"{self.table_names}")
+            keys = np.asarray(keys, dtype=np.uint64).ravel()
+            uniq, inverse = np.unique(keys, return_inverse=True)
+            requested += len(keys)
+            deviceside += len(uniq)
+            staged[name] = (uniq, inverse)
+        # a strict pin records the REQUESTED version: if an update slipped
+        # in since `current` was read, finish's version != pin re-check
+        # NACKs instead of serving newer rows under the demanded pin
+        pin = version if strict and version is not None else current
+        return _StoreInflight(version=pin, strict=strict,
+                              staged=staged, keys_requested=requested,
+                              keys_deviceside=deviceside,
+                              launches=len(staged))
+
+    def finish(self, inflight: _StoreInflight) -> QueryResult:
+        with self._update_lock:
+            version = self._version     # re-pin: rows below match THIS
+            if inflight.strict and version != inflight.version:
+                raise VersionEvictedError(
+                    f"version {inflight.version} was replaced by {version} "
+                    f"while the batch was in flight (store backend retains "
+                    f"one version)")
+            tables = {}
+            for name, (uniq, inverse) in inflight.staged.items():
+                found_u, vals_u = self.stores[name].get_batch(uniq)
+                tables[name] = TableResult(found=found_u[inverse],
+                                           values=vals_u[inverse])
+        return QueryResult(version=version, tables=tables)
+
+    def apply_update(self, update: UpdateRequest) -> None:
+        if not update.is_delta:
+            raise ValueError("StoreBackend tables mutate in place; only "
+                             "delta updates (upserts/deletes) apply")
+        # validate EVERYTHING before mutating ANYTHING: stores update in
+        # place, so a mid-apply failure (bad rows for the second table
+        # after the first already upserted) would leave new rows under the
+        # old version tag — the torn state this class exists to prevent
+        upserts, deletes = {}, {}
+        for name in set(update.upserts) | set(update.deletes):
+            if name not in self.stores:
+                raise KeyError(f"unknown table {name!r}; backend serves "
+                               f"{self.table_names}")
+        for name, (keys, rows) in update.upserts.items():
+            keys = np.asarray(keys, dtype=np.uint64).ravel()
+            rows = np.asarray(rows)
+            vb = self.stores[name].value_bytes
+            if rows.dtype != np.uint8 or rows.ndim != 2 \
+                    or rows.shape != (len(keys), vb):
+                raise ValueError(
+                    f"upsert for table {name!r} must be uint8 "
+                    f"[{len(keys)}, {vb}], got {rows.dtype} {rows.shape}")
+            upserts[name] = (keys, rows)
+        for name, keys in update.deletes.items():
+            # uint64 coercion can itself raise (negative / oversized keys)
+            # — that too must happen before any store mutates
+            deletes[name] = np.asarray(keys, dtype=np.uint64).ravel()
+        with self._update_lock:
+            # versions move forward only, like the engine's VersionWindow —
+            # a replayed/out-of-order delta must not regress latest_version
+            # (min_version read-your-writes would break for rows already
+            # live); checked under the lock, or two concurrent updates
+            # could both pass and apply in either order
+            if update.version <= self._version:
+                raise ValueError(
+                    f"update version {update.version} must exceed the live "
+                    f"version {self._version} (versions are monotonic)")
+            for name, (keys, rows) in upserts.items():
+                self.stores[name].upsert_batch(keys, rows)
+            for name, keys in deletes.items():
+                self.stores[name].delete_batch(keys)
+            self._version = update.version
+
+
+# ---------------------------------------------------------------------------
+# ClusterSim replica fleets
+# ---------------------------------------------------------------------------
+class ClusterBackend:
+    """A replica fleet as a backend: the consistency pin resolves against
+    live replica *metadata* (a strict pin needs every shard to hold a live
+    replica with that version; latest pins the fleet's newest common
+    version), then the rows come from the fleet's shared engine data plane
+    pinned strict to that choice — a replica that claimed a version must
+    really serve it."""
+
+    name = "cluster"
+
+    def __init__(self, sim):
+        if getattr(sim, "engine", None) is None:
+            raise ValueError("ClusterBackend needs a ClusterSim with a data "
+                             "plane (pass tables_for_version)")
+        self.sim = sim
+        # begin() runs on every caller's thread when the client is direct
+        # (no QueryServer in front); the sim's metric counters, shared rng
+        # (_pick_replica draws from it), and replica version windows are
+        # all unsynchronized sim state, so resolution + accounting
+        # serialize here
+        self._sim_lock = threading.Lock()
+
+    @property
+    def latest_version(self) -> int:
+        return self.sim.engine.latest_version
+
+    @property
+    def table_names(self) -> list[str]:
+        return self.sim.engine.table_names
+
+    def _resolve(self, version: Optional[int], strict: bool) -> int:
+        sim = self.sim
+        if version is not None:
+            live = all(sim._pick_replica(s, version) is not None
+                       for s in range(sim.cfg.n_shards))
+            if live:
+                return version
+            if strict:
+                raise VersionEvictedError(
+                    f"no full replica set still serves version {version}")
+        v = sim._common_version()
+        if v < 0:
+            raise RuntimeError("no common version across live replicas")
+        return v
+
+    def begin(self, tables, *, version=None, strict=False):
+        sim = self.sim
+        with self._sim_lock:
+            v = self._resolve(version, strict)
+            sim.metrics.queries += 1
+            sim.metrics.sub_queries += sim.cfg.n_shards
+            sim.metrics.consistent_batches += 1
+            # the engine pin happens under the SAME lock as resolution and
+            # as apply_update's publish: otherwise a publish burst between
+            # resolve and begin could evict v and turn a latest/hinted
+            # query — modes that may never NACK — into VersionEvictedError
+            return sim.engine.begin(tables, version=v, strict=True)
+
+    def finish(self, inflight) -> QueryResult:
+        return self.sim.engine.finish(inflight)
+
+    def apply_update(self, update: UpdateRequest) -> None:
+        """An instantaneous rolling update: the shared data plane publishes
+        the build, then every live replica's metadata window learns the
+        version (sim-time update waves belong to ``start_rolling_update``;
+        this face is for callers driving the fleet as a plain backend)."""
+        sim = self.sim
+        # the whole publish — engine build install AND replica metadata
+        # flip — happens under the lock begin() resolves and pins with: a
+        # concurrent query must never observe a half-published fleet, nor
+        # have its freshly-resolved version evicted from the engine window
+        # before its pin lands
+        with self._sim_lock:
+            if update.is_delta:
+                sim.engine.publish_delta(update.version, update.upserts,
+                                         update.deletes)
+            else:
+                sim.engine.publish(update.version, update.scalars,
+                                   update.embeddings)
+            for shard in sim.replicas:
+                for rep in shard:
+                    if rep.alive:
+                        rep.publish(update.version)
+            sim.current_version = update.version
+
+
+# ---------------------------------------------------------------------------
+def as_backend(target) -> BatchQueryBackend:
+    """Coerce a storage object to the protocol: engines and sims wrap in
+    their adapters; anything already satisfying the protocol passes
+    through.  Bare ``HybridKVStore``s need an explicit ``StoreBackend``
+    (the protocol needs a table name the store doesn't carry)."""
+    if isinstance(target, MultiTableEngine):
+        return EngineBackend(target)
+    if isinstance(target, HybridKVStore):
+        raise TypeError("wrap bare stores with a name: "
+                        "StoreBackend({'table_name': store})")
+    if hasattr(target, "replicas") and getattr(target, "engine", None) \
+            is not None:
+        return ClusterBackend(target)
+    if isinstance(target, BatchQueryBackend):
+        return target
+    raise TypeError(f"{type(target).__name__} is not a BatchQueryBackend "
+                    "(needs begin/finish/apply_update/latest_version)")

@@ -157,10 +157,12 @@ class ClusterSim:
                 "data plane needs a base build to apply deltas to")
         self.engine = None
         self.query_server = None
+        self.feature_client = None
         if use_query_server and tables_for_version is None:
             raise ValueError("use_query_server needs a data plane: pass "
                              "tables_for_version")
         if tables_for_version is not None:
+            from repro.api.client import FeatureClient
             from repro.core.engine import MultiTableEngine
             scalars, embeddings = tables_for_version(0)
             # the shared engine stands in for every replica's copy, so its
@@ -182,12 +184,23 @@ class ClusterSim:
                 self.query_server = QueryServer(
                     self.engine,
                     policy=server_policy or BatchPolicy(max_wait_s=0.0))
+            # the data plane speaks API v2: one FeatureClient session,
+            # whether queries ride the QueryServer's lanes or hit the
+            # engine backend directly
+            self.feature_client = FeatureClient(
+                self.query_server if self.query_server is not None
+                else self.engine)
 
     def close(self) -> None:
-        """Shut down the query-server pipeline (no-op without one)."""
+        """Shut down the query-server pipeline (no-op without one); the
+        feature client falls back to the direct engine backend so a
+        late query still answers instead of hitting a closed server."""
         if self.query_server is not None:
             self.query_server.close()
             self.query_server = None
+            if self.engine is not None:
+                from repro.api.client import FeatureClient
+                self.feature_client = FeatureClient(self.engine)
 
     # ------------------------------------------------------------------
     # update machinery
@@ -311,6 +324,7 @@ class ClusterSim:
         protocol all shards share one pin; under the naming baseline the
         per-shard versions can differ — and the returned batch then really
         does contain mixed-version rows (Fig 10 at the data level)."""
+        from repro.api.types import Consistency
         items = {name: np.asarray(keys, dtype=np.uint64).ravel()
                  for name, keys in request.items()}
         shard_ids = {name: self._shard_of_keys(k)
@@ -330,13 +344,11 @@ class ClusterSim:
                     masks[name] = mask
             if not sub:
                 continue
-            # strict: a replica that claims version v really holds it;
-            # silently substituting a newer build would hide the very
-            # mixing this data plane exists to expose
-            if self.query_server is not None:
-                res = self.query_server.query(sub, version=v, strict=True)
-            else:
-                res = self.engine.query(sub, version=v, strict=True)
+            # pinned consistency: a replica that claims version v really
+            # holds it; silently substituting a newer build would hide the
+            # very mixing this data plane exists to expose
+            res = self.feature_client.query(
+                sub, consistency=Consistency.pinned(v))
             for name, mask in masks.items():
                 tr = res[name]
                 found[name][mask] = tr.found

@@ -343,6 +343,17 @@ class _InflightBatch:
     device_out: dict[int, list]   # shard -> fused launch outputs (async)
     launches: int
 
+    # the backend protocol's coalesce-stats face (api/backends.py): every
+    # backend's inflight object exposes these three, so the server's stats
+    # stay storage-agnostic
+    @property
+    def keys_requested(self) -> int:
+        return self.staged.keys_requested
+
+    @property
+    def keys_deviceside(self) -> int:
+        return self.staged.keys_deviceside
+
 
 class VersionEvictedError(KeyError):
     """Strict query pinned a version no longer in the retention window."""

@@ -29,11 +29,15 @@ from repro.launch.materialize import materialize, materialize_bundle
 
 def serve_with_feature_server(args, spec):
     """Recsys serving through the QueryServer: ``--clients`` threads score
-    request batches concurrently; each batch's feature lookups carry a
-    latency budget and coalesce with the other clients' lookups into fused
-    micro-batches, while a publisher ships a delta mid-traffic."""
+    request batches concurrently; each batch's feature lookups ride the
+    RANKING lane of the API-v2 FeatureClient with a latency budget and
+    coalesce with the other clients' lookups into fused micro-batches,
+    while a publisher ships a delta mid-traffic.  ``--prefetch-clients``
+    adds background PREFETCH-lane lookup threads, exercising the QoS
+    weighted service/shed order under real scoring load."""
     import threading
 
+    from repro.api import FeatureClient
     from repro.core.engine import (EmbeddingTable, MultiTableEngine,
                                    ScalarTable)
     from repro.data import synthetic
@@ -62,12 +66,26 @@ def serve_with_feature_server(args, spec):
     params, _ = cm.unbox(rec_mod.recsys_init(jax.random.key(0), cfg))
 
     server = QueryServer(engine, BatchPolicy(max_batch_keys=4096))
+    client_session = FeatureClient(server, default_budget_s=2.0)
     step = serve_step.recsys_score_fn(
-        cfg, mesh, mi, feature_server=server, feature_budget_s=2.0,
+        cfg, mesh, mi, feature_client=client_session, feature_budget_s=2.0,
         feature_fields=[("item_feats", "item_id"), ("item_pop", "item_id")])
 
     lat, shed = [], [0]
     lat_lock = threading.Lock()
+    prefetch_stop = threading.Event()
+
+    def prefetch_client(cid: int):
+        """Speculative cache-warming traffic on the PREFETCH lane — first
+        to shed under backpressure, never allowed to crowd out scoring."""
+        prng = np.random.default_rng(900 + cid)
+        while not prefetch_stop.is_set():
+            ids = prng.integers(1, n_items + 1, 256).astype(np.uint64)
+            try:
+                client_session.query({"item_feats": ids}, qos="PREFETCH",
+                                     budget_s=0.5)
+            except ShedError:
+                pass
 
     def client(cid: int):
         crng = np.random.default_rng(100 + cid)
@@ -97,12 +115,18 @@ def serve_with_feature_server(args, spec):
         server.reset_stats()
         threads = [threading.Thread(target=client, args=(c,))
                    for c in range(args.clients)]
-        for t in threads:
+        prefetchers = [threading.Thread(target=prefetch_client, args=(p,),
+                                        daemon=True)
+                       for p in range(args.prefetch_clients)]
+        for t in threads + prefetchers:
             t.start()
         # a delta publish lands mid-traffic; micro-batches stay one-version
-        engine.publish_delta(2, upserts={
+        client_session.update(2, upserts={
             "item_pop": (keys[:64], pop[:64] + np.uint64(1))})
         for t in threads:
+            t.join()
+        prefetch_stop.set()
+        for t in prefetchers:
             t.join()
     snap = server.stats_snapshot()
     server.close()
@@ -127,6 +151,9 @@ def main():
                          "concurrent QueryServer")
     ap.add_argument("--clients", type=int, default=8,
                     help="concurrent client threads for --feature-server")
+    ap.add_argument("--prefetch-clients", type=int, default=2,
+                    help="background PREFETCH-lane lookup threads for "
+                         "--feature-server (QoS lanes under load)")
     args = ap.parse_args()
 
     spec = registry.get(args.arch)

@@ -1,28 +1,32 @@
-"""Deadline-aware micro-batching scheduler for the QueryServer (serving side
-of the paper's batch-query architecture).
+"""QoS-laned, deadline-aware micro-batching scheduler for the QueryServer.
 
-Many concurrent clients each carry a small per-request key set and a latency
-budget; serving them one engine query at a time repays none of the
-architecture's batching wins.  The scheduler turns the concurrent stream into
-fused micro-batches:
+Many concurrent clients each carry a small per-request key set, a latency
+budget, and — since API v2 — a **QoS class** (``RANKING > RETRIEVAL >
+PREFETCH``).  The scheduler turns the concurrent stream into fused
+micro-batches while keeping the classes' contracts distinct:
 
-  - **Admission** is bounded (``BatchPolicy.max_queue_requests``): when the
-    queue is full, or a request's budget is already smaller than the current
-    service-time estimate, it is shed *at submit time* with a typed error
-    (``QueueFullError`` / ``DeadlineError``) instead of queueing work that
-    can only miss — bounded-queue backpressure.
-  - **Batch close rule**: a forming batch closes on ``max_batch_keys`` /
-    ``max_batch_requests``, or when the earliest admitted deadline's slack
-    (deadline − now − service-time estimate) runs out, whichever first.
-    Requests without deadlines close after ``max_wait_s`` so a lone request
-    never waits for co-travellers that may not come.
-  - **Version grouping**: only requests pinned to the same explicit version
-    (or all unpinned) coalesce into one micro-batch, so a batch pins exactly
-    one engine build for its whole lifetime — no micro-batch ever mixes
-    versions, even while ``publish``/``publish_delta`` run concurrently.
+  - **One admission lane per class.**  Lanes are served by smooth weighted
+    round-robin (default weights 4/2/1), so RANKING drains fastest under
+    load but PREFETCH never starves outright.
+  - **Class-aware shedding.**  The admission bound
+    (``BatchPolicy.max_queue_requests``) spans all lanes; when it is hit,
+    a higher-class arrival evicts the newest request from the lowest
+    non-empty lane below it (PREFETCH shed first) instead of being turned
+    away — only a request with nothing below it sheds itself.  Budget
+    checks against the service-time EWMA shed per request, as before.
+  - **Per-class close rules.**  Each lane forms batches under its own
+    ``BatchPolicy`` override (key/request budgets, ``max_wait_s``); a
+    forming batch's wait is bounded by the earliest deadline queued in ANY
+    lane, so a PREFETCH batch never holds a deadline-carrying RANKING
+    arrival past its slack.
+  - **Version grouping** is per lane and unchanged: only requests resolved
+    to the same ``(version, strict)`` pin coalesce, so every micro-batch
+    pins exactly one engine build for its lifetime — no batch mixes
+    versions, in any lane, even while ``publish``/``publish_delta`` run
+    concurrently.
 
-The service-time estimate is an EWMA of observed batch service times,
-reported back by the server after every finish.
+``ServerStats`` reports totals plus per-class p50/p99/shed so the QoS
+contract is observable, not aspirational.
 """
 from __future__ import annotations
 
@@ -34,6 +38,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.api.types import Consistency, QoSClass
 from repro.core.engine import QueryResult, TableResult
 
 
@@ -45,7 +50,8 @@ class ShedError(RuntimeError):
 
 
 class QueueFullError(ShedError):
-    """Admission queue at capacity — back off and retry (backpressure)."""
+    """Admission at capacity — shed outright, or evicted from the queue by
+    a higher-QoS arrival (backpressure)."""
 
 
 class DeadlineError(ShedError):
@@ -58,6 +64,11 @@ class ServerClosedError(ShedError):
     """Submitted to a server that is shutting down."""
 
 
+DEFAULT_LANE_WEIGHTS = {QoSClass.RANKING: 4.0,
+                        QoSClass.RETRIEVAL: 2.0,
+                        QoSClass.PREFETCH: 1.0}
+
+
 # ---------------------------------------------------------------------------
 # policy + stats
 # ---------------------------------------------------------------------------
@@ -65,7 +76,7 @@ class ServerClosedError(ShedError):
 class BatchPolicy:
     max_batch_keys: int = 8192        # fused key budget per micro-batch
     max_batch_requests: int = 64
-    max_queue_requests: int = 256     # admission bound (backpressure)
+    max_queue_requests: int = 256     # admission bound, across all lanes
     max_wait_s: float = 2e-3          # close rule for deadline-less traffic
     service_time_init_s: float = 3e-3  # EWMA seed for the slack computation
     service_time_alpha: float = 0.2   # EWMA weight when service gets SLOWER
@@ -73,6 +84,54 @@ class BatchPolicy:
     # transient stall (cold jit compile, publish burst) must not keep
     # admission shedding long after service recovers
     latency_reservoir: int = 200_000  # completed-request latencies kept
+
+    def __post_init__(self):
+        # satellite: misconfiguration is a construction-time ValueError,
+        # never a serve-time hang/shed storm
+        for field, least in (("max_batch_keys", 1),
+                             ("max_batch_requests", 1),
+                             ("max_queue_requests", 1),
+                             ("latency_reservoir", 1)):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < least:
+                raise ValueError(f"{field} must be an int >= {least}, "
+                                 f"got {v!r}")
+        if self.max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, "
+                             f"got {self.max_wait_s}")
+        if not self.service_time_init_s > 0:
+            raise ValueError(f"service_time_init_s must be > 0, "
+                             f"got {self.service_time_init_s}")
+        for field in ("service_time_alpha", "service_time_alpha_down"):
+            a = getattr(self, field)
+            if not 0 < a <= 1:
+                raise ValueError(f"{field} must be in (0, 1], got {a}")
+
+
+def _pctiles(latencies_s: np.ndarray) -> tuple[float, float]:
+    """(p50_ms, p99_ms); nan/nan on an empty window — callers format, they
+    never branch (satellite: 0- and 1-sample snapshots must not raise)."""
+    if not len(latencies_s):
+        return float("nan"), float("nan")
+    return (float(np.percentile(latencies_s, 50) * 1e3),
+            float(np.percentile(latencies_s, 99) * 1e3))
+
+
+@dataclasses.dataclass
+class ClassSnapshot:
+    """Per-QoS-class slice of a StatsSnapshot."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    shed_queue_full: int = 0
+    shed_deadline: int = 0
+    p50_ms: float = float("nan")
+    p99_ms: float = float("nan")
+    shed_rate: float = 0.0
+
+    @property
+    def shed(self) -> int:
+        return self.shed_queue_full + self.shed_deadline
 
 
 @dataclasses.dataclass
@@ -88,42 +147,75 @@ class StatsSnapshot:
     keys_deviceside: int = 0
     deadline_hits: int = 0
     deadline_misses: int = 0
-    p50_ms: float = 0.0
-    p99_ms: float = 0.0
+    p50_ms: float = float("nan")
+    p99_ms: float = float("nan")
     mean_occupancy: float = 0.0       # requests per micro-batch
     coalesce_rate: float = 0.0        # keys eliminated before the device
     shed_rate: float = 0.0
+    per_class: dict[str, ClassSnapshot] = dataclasses.field(
+        default_factory=dict)
 
     def summary(self) -> str:
-        return (f"{self.completed}/{self.submitted} served "
+        line = (f"{self.completed}/{self.submitted} served "
                 f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
                 f"occupancy={self.mean_occupancy:.1f} req/batch "
                 f"coalesce={self.coalesce_rate:.0%} "
                 f"shed={self.shed_rate:.1%} "
                 f"({self.shed_queue_full} queue-full, "
                 f"{self.shed_deadline} deadline)")
+        for name, c in self.per_class.items():
+            if c.submitted:
+                line += (f" | {name} {c.completed}/{c.submitted} "
+                         f"p99={c.p99_ms:.2f}ms shed={c.shed_rate:.1%}")
+        return line
+
+
+class _LatencyRing:
+    """Fixed-size ring of the most recent latencies: percentiles track
+    current behavior, not the first N requests."""
+
+    def __init__(self, capacity: int):
+        self._cap = capacity
+        self._buf: list[float] = []
+        self._next = 0
+
+    def add(self, latency_s: float) -> None:
+        if len(self._buf) < self._cap:
+            self._buf.append(latency_s)
+        else:
+            self._buf[self._next] = latency_s
+            self._next = (self._next + 1) % self._cap
+
+    def array(self) -> np.ndarray:
+        return np.asarray(self._buf, dtype=np.float64)
 
 
 class ServerStats:
-    """Thread-safe counters + latency reservoir behind ``snapshot()``."""
+    """Thread-safe counters + latency reservoirs behind ``snapshot()`` —
+    totals plus one ``ClassSnapshot`` per QoS class."""
 
     def __init__(self, policy: BatchPolicy):
         self._lock = threading.Lock()
         self._policy = policy
         self._c = StatsSnapshot()
-        self._latencies_s: list[float] = []
-        self._lat_next = 0
+        self._lat = _LatencyRing(policy.latency_reservoir)
+        self._cls = {q: ClassSnapshot() for q in QoSClass}
+        self._cls_lat = {q: _LatencyRing(min(policy.latency_reservoir,
+                                             50_000)) for q in QoSClass}
 
-    def on_submit(self) -> None:
+    def on_submit(self, qos: QoSClass = QoSClass.RANKING) -> None:
         with self._lock:
             self._c.submitted += 1
+            self._cls[qos].submitted += 1
 
-    def on_shed(self, kind: str) -> None:
+    def on_shed(self, kind: str, qos: QoSClass = QoSClass.RANKING) -> None:
         with self._lock:
             if kind == "queue_full":
                 self._c.shed_queue_full += 1
+                self._cls[qos].shed_queue_full += 1
             else:
                 self._c.shed_deadline += 1
+                self._cls[qos].shed_deadline += 1
 
     def on_batch(self, n_requests: int, keys_requested: int,
                  keys_deviceside: int, launches: int) -> None:
@@ -133,35 +225,43 @@ class ServerStats:
             self._c.keys_requested += keys_requested
             self._c.keys_deviceside += keys_deviceside
 
-    def on_complete(self, latency_s: float,
-                    deadline_met: Optional[bool]) -> None:
+    def on_complete(self, latency_s: float, deadline_met: Optional[bool],
+                    qos: QoSClass = QoSClass.RANKING) -> None:
         with self._lock:
             self._c.completed += 1
+            self._cls[qos].completed += 1
             if deadline_met is not None:
                 if deadline_met:
                     self._c.deadline_hits += 1
                 else:
                     self._c.deadline_misses += 1
-            # ring buffer of the most recent latencies: percentiles must
-            # track current behavior, not freeze on the first N requests
-            if len(self._latencies_s) < self._policy.latency_reservoir:
-                self._latencies_s.append(latency_s)
-            else:
-                self._latencies_s[self._lat_next] = latency_s
-                self._lat_next = (self._lat_next + 1) \
-                    % self._policy.latency_reservoir
+            self._lat.add(latency_s)
+            self._cls_lat[qos].add(latency_s)
 
-    def on_failure(self, n: int = 1) -> None:
+    def on_failure(self, n: int = 1,
+                   qos: Optional[QoSClass] = None) -> None:
         with self._lock:
             self._c.failed += n
+            if qos is not None:
+                self._cls[qos].failed += n
 
     def snapshot(self) -> StatsSnapshot:
+        # copy under the lock, crunch percentiles outside it: a monitoring
+        # thread's numpy work must not stall every client's on_submit/
+        # on_complete (and thereby inflate the very p99 being measured)
         with self._lock:
             s = dataclasses.replace(self._c)
-            lats = np.asarray(self._latencies_s, dtype=np.float64)
-        if len(lats):
-            s.p50_ms = float(np.percentile(lats, 50) * 1e3)
-            s.p99_ms = float(np.percentile(lats, 99) * 1e3)
+            lats = self._lat.array()
+            per_class = {}
+            cls_lats = {}
+            for q in QoSClass:
+                per_class[q.name] = dataclasses.replace(self._cls[q])
+                cls_lats[q.name] = self._cls_lat[q].array()
+        for name, c in per_class.items():
+            c.p50_ms, c.p99_ms = _pctiles(cls_lats[name])
+            if c.submitted:
+                c.shed_rate = c.shed / c.submitted
+        s.p50_ms, s.p99_ms = _pctiles(lats)
         if s.batches:
             s.mean_occupancy = s.completed / s.batches
         if s.keys_requested:
@@ -169,6 +269,7 @@ class ServerStats:
         shed = s.shed_queue_full + s.shed_deadline
         if s.submitted:
             s.shed_rate = shed / s.submitted
+        s.per_class = per_class
         return s
 
 
@@ -217,8 +318,10 @@ class _Pending:
     n_keys: int
     t_submit: float
     deadline: Optional[float]         # monotonic; None = no budget
-    version: Optional[int]
+    version: Optional[int]            # resolved consistency pin
     strict: bool
+    qos: QoSClass
+    consistency: Consistency          # checked against the served build
     ticket: Ticket
 
     @property
@@ -270,17 +373,62 @@ def scatter(result: QueryResult,
 # ---------------------------------------------------------------------------
 # the micro-batcher
 # ---------------------------------------------------------------------------
+class _Lane:
+    """One QoS class's admission queue + service credit (smooth WRR)."""
+
+    def __init__(self, qos: QoSClass, policy: BatchPolicy, weight: float):
+        self.qos = qos
+        self.policy = policy          # per-class close-rule overrides
+        self.weight = weight
+        self.queue: deque[_Pending] = deque()
+        self.credit = 0.0
+
+
 class MicroBatcher:
-    """Bounded admission queue + deadline-aware batch formation.
+    """Per-class bounded admission + deadline-aware batch formation.
 
     ``admit`` is called from client threads; ``next_batch`` from the single
     scheduler thread.  Expired requests are shed (their tickets fail with
     ``DeadlineError``) during formation, never silently dropped."""
 
-    def __init__(self, policy: BatchPolicy, stats: ServerStats):
+    def __init__(self, policy: BatchPolicy, stats: ServerStats,
+                 class_policies: Optional[dict] = None,
+                 lane_weights: Optional[dict] = None):
         self.policy = policy
         self.stats = stats
-        self._queue: deque[_Pending] = deque()
+        weights = dict(DEFAULT_LANE_WEIGHTS)
+        for name, w in (lane_weights or {}).items():
+            q = QoSClass.parse(name)          # unknown names -> ValueError
+            if not w > 0:
+                raise ValueError(f"lane weight for {q.name} must be > 0, "
+                                 f"got {w}")
+            weights[q] = float(w)
+        overrides = {}
+        # only the close rules are lane-scoped; the admission bound, EWMA
+        # params, and reservoir stay global.  A value deliberately set on
+        # a non-lane field (differing from both the base policy and the
+        # dataclass default) would be silently ignored — reject it instead
+        lane_fields = ("max_batch_keys", "max_batch_requests", "max_wait_s")
+        defaults = BatchPolicy()
+        for name, pol in (class_policies or {}).items():
+            q = QoSClass.parse(name)
+            if not isinstance(pol, BatchPolicy):
+                raise ValueError(f"class policy for {q.name} must be a "
+                                 f"BatchPolicy, got {type(pol).__name__}")
+            for f in dataclasses.fields(BatchPolicy):
+                if f.name in lane_fields:
+                    continue
+                v = getattr(pol, f.name)
+                if v != getattr(defaults, f.name) \
+                        and v != getattr(policy, f.name):
+                    raise ValueError(
+                        f"class policy for {q.name} sets {f.name}={v}, but "
+                        f"only {lane_fields} are per-lane; the rest are "
+                        f"global (set them on the server's base policy)")
+            overrides[q] = pol
+        # priority order: RANKING first (smaller enum value = higher class)
+        self._lanes = {q: _Lane(q, overrides.get(q, policy), weights[q])
+                       for q in sorted(QoSClass)}
         self._cond = threading.Condition()
         self._closed = False
         self._service_time_s = policy.service_time_init_s
@@ -319,26 +467,54 @@ class MicroBatcher:
 
     def depth(self) -> int:
         with self._cond:
-            return len(self._queue)
+            return sum(len(l.queue) for l in self._lanes.values())
+
+    def lane_depths(self) -> dict[str, int]:
+        with self._cond:
+            return {q.name: len(l.queue) for q, l in self._lanes.items()}
 
     # ------------------------------------------------------------------
+    def _evict_below(self, qos: QoSClass) -> bool:
+        # must hold self._cond.  Class-aware backpressure: free one slot by
+        # shedding the newest request from the LOWEST non-empty lane
+        # strictly below ``qos`` (PREFETCH before RETRIEVAL before never-
+        # RANKING); newest-first because it has waited least — the oldest
+        # is closest to being served, evicting it wastes the most queueing
+        for lane in reversed(self._lanes.values()):
+            if lane.qos <= qos:
+                break
+            if lane.queue:
+                victim = lane.queue.pop()
+                self.stats.on_shed("queue_full", victim.qos)
+                victim.ticket._fail(QueueFullError(
+                    f"evicted from the {victim.qos.name} lane by a "
+                    f"{qos.name} arrival under backpressure"))
+                return True
+        return False
+
     def admit(self, req: _Pending) -> None:
         now = time.monotonic()
         with self._cond:
             if self._closed:
                 raise ServerClosedError("server is shutting down")
-            if len(self._queue) >= self.policy.max_queue_requests:
-                self.stats.on_shed("queue_full")
-                raise QueueFullError(
-                    f"admission queue full "
-                    f"({self.policy.max_queue_requests} requests)")
+            # the arrival's own admissibility first: a request that can
+            # only miss its budget must never evict an innocent victim for
+            # a slot it will not use
             est = self._estimate(now)
             if req.deadline is not None and req.deadline - now < est:
-                self.stats.on_shed("deadline")
+                self.stats.on_shed("deadline", req.qos)
                 raise DeadlineError(
                     f"budget {max(req.deadline - now, 0) * 1e3:.2f}ms < "
                     f"estimated service time {est * 1e3:.2f}ms")
-            self._queue.append(req)
+            depth = sum(len(l.queue) for l in self._lanes.values())
+            if depth >= self.policy.max_queue_requests \
+                    and not self._evict_below(req.qos):
+                self.stats.on_shed("queue_full", req.qos)
+                raise QueueFullError(
+                    f"admission queue full "
+                    f"({self.policy.max_queue_requests} requests) and no "
+                    f"lane below {req.qos.name} to shed from")
+            self._lanes[req.qos].queue.append(req)
             self._cond.notify()
 
     def close(self) -> None:
@@ -351,36 +527,61 @@ class MicroBatcher:
         thread exists to serve them) so the caller can fail their tickets
         instead of leaving result() waiters hanging."""
         with self._cond:
-            out = list(self._queue)
-            self._queue.clear()
+            out = []
+            for lane in self._lanes.values():
+                out.extend(lane.queue)
+                lane.queue.clear()
             return out
 
     # ------------------------------------------------------------------
     def _shed_expired(self, now: float) -> None:
         # must hold self._cond
-        live: deque[_Pending] = deque()
-        for req in self._queue:
-            if req.deadline is not None and now > req.deadline:
-                self.stats.on_shed("deadline")
-                req.ticket._fail(DeadlineError(
-                    "deadline expired while queued"))
-            else:
-                live.append(req)
-        self._queue = live
+        for lane in self._lanes.values():
+            if not lane.queue:
+                continue
+            live: deque[_Pending] = deque()
+            for req in lane.queue:
+                if req.deadline is not None and now > req.deadline:
+                    self.stats.on_shed("deadline", req.qos)
+                    req.ticket._fail(DeadlineError(
+                        "deadline expired while queued"))
+                else:
+                    live.append(req)
+            lane.queue = live
 
-    def _collect(self) -> tuple[list[_Pending], bool]:
+    def _nonempty(self) -> list[_Lane]:
+        return [l for l in self._lanes.values() if l.queue]
+
+    def _pick_lane(self) -> _Lane:
+        # must hold self._cond; smooth weighted round-robin over the
+        # non-empty lanes: every lane gains its weight, the richest serves
+        # and pays back the round's total — RANKING gets ~4/7 of contended
+        # service slots by default, yet PREFETCH still cycles in (weighted
+        # service without starvation).  Ties break toward the higher class
+        lanes = self._nonempty()
+        if len(lanes) == 1:
+            return lanes[0]
+        total = sum(l.weight for l in lanes)
+        for lane in lanes:
+            lane.credit += lane.weight
+        best = max(lanes, key=lambda l: (l.credit, -l.qos))
+        best.credit -= total
+        return best
+
+    def _collect(self, lane: _Lane) -> tuple[list[_Pending], bool]:
         # must hold self._cond; head-of-line request picks the group.
         # ``saturated`` reports that a matching request exists but could
         # not fit — the batch is as full as it can get, so the caller must
         # close it now rather than wait out max_wait_s for riders that can
         # never join
-        head = self._queue[0]
+        pol = lane.policy
+        head = lane.queue[0]
         batch, n_keys, saturated = [], 0, False
-        for req in self._queue:
+        for req in lane.queue:
             if req.group != head.group:
                 continue
-            if batch and (n_keys + req.n_keys > self.policy.max_batch_keys
-                          or len(batch) >= self.policy.max_batch_requests):
+            if batch and (n_keys + req.n_keys > pol.max_batch_keys
+                          or len(batch) >= pol.max_batch_requests):
                 saturated = True
                 break
             batch.append(req)
@@ -389,35 +590,44 @@ class MicroBatcher:
 
     def next_batch(self) -> Optional[list[_Pending]]:
         """Blocks until a micro-batch closes; ``None`` once the batcher is
-        closed and drained."""
+        closed and drained.  Every request in a returned batch shares one
+        QoS class and one (version, strict) group."""
         with self._cond:
             while True:
-                # wait for at least one live request
+                # wait for at least one live request in any lane
                 while True:
                     self._shed_expired(time.monotonic())
-                    if self._queue:
+                    if self._nonempty():
                         break
                     if self._closed:
                         return None
                     self._cond.wait(timeout=0.05)
 
+                lane = self._pick_lane()
+                pol = lane.policy
                 t_open = time.monotonic()
                 batch: list[_Pending] = []
                 while True:
-                    batch, saturated = self._collect()
+                    batch, saturated = self._collect(lane)
                     n_keys = sum(r.n_keys for r in batch)
                     if (saturated
-                            or n_keys >= self.policy.max_batch_keys
-                            or len(batch) >= self.policy.max_batch_requests
+                            or n_keys >= pol.max_batch_keys
+                            or len(batch) >= pol.max_batch_requests
                             or self._closed):
                         break
-                    # earliest deadline across the WHOLE queue, not just
-                    # this batch: a different-(version,strict)-group request
-                    # behind the head cannot be served until this batch
-                    # closes, so its slack must bound the wait too
-                    deadlines = [r.deadline for r in self._queue
+                    # earliest deadline across EVERY lane, not just this
+                    # batch: any queued request — including a higher-class
+                    # arrival — is blocked until this batch closes, so its
+                    # slack must bound the wait.  (Closing lower-class
+                    # batches the moment a higher lane goes non-empty was
+                    # tried and collapses occupancy under steady RANKING
+                    # traffic: every PREFETCH batch shrinks to one rider
+                    # and the flood of tiny launches slows ALL lanes.)
+                    deadlines = [r.deadline
+                                 for other in self._lanes.values()
+                                 for r in other.queue
                                  if r.deadline is not None]
-                    close_at = t_open + self.policy.max_wait_s
+                    close_at = t_open + pol.max_wait_s
                     if deadlines:
                         # earliest deadline's slack, net of the service cost
                         close_at = min(close_at,
@@ -427,12 +637,12 @@ class MicroBatcher:
                         break
                     self._cond.wait(timeout=min(close_at - now, 0.01))
                     self._shed_expired(time.monotonic())
-                    if not self._queue:
+                    if not lane.queue:
                         batch = []
-                        break       # everything shed mid-wait — start over
+                        break       # lane drained mid-wait — start over
                 if not batch:
                     continue
                 members = set(map(id, batch))
-                self._queue = deque(r for r in self._queue
-                                    if id(r) not in members)
+                lane.queue = deque(r for r in lane.queue
+                                   if id(r) not in members)
                 return batch

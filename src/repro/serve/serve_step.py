@@ -38,31 +38,42 @@ def recsys_score_fn(cfg, mesh, mi, lookup_impl: str = "xla",
                     feature_engine=None,
                     feature_fields: Optional[Sequence[tuple]] = None,
                     feature_server=None,
-                    feature_budget_s: Optional[float] = None):
-    """Scoring step; with ``feature_engine`` (a MultiTableEngine) the step
-    first resolves ``feature_fields`` — ``(table_name, batch_field)`` pairs —
-    in ONE fused batch query and splices the returned float32 rows into the
-    batch's dense columns before the model runs.
+                    feature_budget_s: Optional[float] = None,
+                    feature_client=None,
+                    feature_qos="RANKING"):
+    """Scoring step; with a feature source the step first resolves
+    ``feature_fields`` — ``(table_name, batch_field)`` pairs — in ONE fused
+    batch query and splices the returned float32 rows into the batch's
+    dense columns before the model runs.
 
-    ``feature_server`` (a serve/server.QueryServer) routes that same request
-    through the concurrent serving layer instead: the step's lookup then
-    coalesces with other in-flight scoring requests into one micro-batch
-    (cross-request dedup + a single pinned version per batch), carrying
-    ``feature_budget_s`` as its latency budget.  Exactly one of
-    ``feature_engine`` / ``feature_server`` may be given."""
+    The feature source is a ``feature_client`` (``api.FeatureClient``, the
+    API-v2 session — over a QueryServer its lookups coalesce with other
+    in-flight scoring requests into QoS-laned micro-batches).  The PR-3
+    shims remain for one release: ``feature_engine`` (a MultiTableEngine)
+    and ``feature_server`` (a QueryServer) each wrap themselves in a
+    client.  Exactly one of the three may be given.  Scoring lookups ride
+    the ``feature_qos`` lane (default RANKING — this is the user-facing
+    scoring path) with ``feature_budget_s`` as their latency budget."""
     def step(params, batch):
         return rec_mod.recsys_score(params, cfg, batch, mi, mesh,
                                     lookup_impl)
 
-    if feature_engine is not None and feature_server is not None:
-        raise ValueError("pass feature_engine OR feature_server, not both")
-    if feature_engine is None and feature_server is None:
+    sources = [s for s in (feature_engine, feature_server, feature_client)
+               if s is not None]
+    if len(sources) > 1:
+        raise ValueError("pass exactly one of feature_client / "
+                         "feature_engine / feature_server")
+    if not sources:
         return step
 
+    from repro.api.client import FeatureClient
+    from repro.api.types import QoSClass
+    client = (feature_client if feature_client is not None
+              else FeatureClient(sources[0]))
+    qos = QoSClass.parse(feature_qos)
+
     def resolve(request):
-        if feature_server is not None:
-            return feature_server.query(request, budget_s=feature_budget_s)
-        return feature_engine.query(request)
+        return client.query(request, qos=qos, budget_s=feature_budget_s)
 
     fields = list(feature_fields or ())
     if not fields:

@@ -1,33 +1,37 @@
-"""QueryServer — concurrent batch-query serving over a MultiTableEngine.
+"""QueryServer — concurrent batch-query serving over any BatchQueryBackend.
 
 The paper's headline is answering batch queries "within milliseconds" under
-heavy concurrent traffic; the engine (core/engine.py) supplies the fused,
-deduplicated, version-pinned query, and this module supplies the serving
-layer in front of it:
+heavy concurrent traffic; a backend (api/backends.py — the fused
+MultiTableEngine, standalone HybridKVStore tables, or a ClusterSim replica
+fleet) supplies the version-pinned split-phase query, and this module
+supplies the serving layer in front of it:
 
-  - many concurrent clients ``submit`` small per-table key sets, each with
-    an optional latency budget;
-  - the scheduler (serve/scheduler.py) coalesces them into deadline-aware
-    micro-batches — cross-REQUEST dedup rides the engine's existing
-    per-batch dedup, since the fused request is just one big engine batch;
-  - each micro-batch pins exactly one engine version for its whole lifetime
-    (``engine.begin`` resolves the build once; the build object is
-    immutable), so concurrent ``publish``/``publish_delta`` calls can never
-    produce a mixed-version batch;
+  - many concurrent clients submit typed ``QueryRequest``s (per-table key
+    sets + QoS class + consistency + optional latency budget);
+  - the scheduler (serve/scheduler.py) runs one admission lane per QoS
+    class — weighted service, class-aware shedding (PREFETCH before
+    RANKING), per-class ``BatchPolicy`` overrides — and coalesces each
+    lane's stream into deadline-aware micro-batches;
+  - each micro-batch pins exactly one backend version for its whole
+    lifetime (``backend.begin`` resolves the build once), so concurrent
+    ``publish``/``publish_delta`` calls can never produce a mixed-version
+    batch, in any lane;
   - launch/finish are double-buffered: the single scheduler thread stages +
-    launches batch i+1 while the worker pool blocks on batch i's device
-    results and scatters rows back to each request's ticket.
+    launches batch i+1 while the worker pool blocks on batch i's results
+    and scatters ``QueryResponse`` slices back to each request's ticket.
 
 Example::
 
     server = QueryServer(engine, BatchPolicy(max_batch_keys=4096))
-    ticket = server.submit({"item_attr": ids}, budget_s=0.050)
-    result = ticket.result()          # engine QueryResult, request-sliced
-    print(server.stats_snapshot().summary())
+    client = FeatureClient(server)
+    res = client.query({"item_attr": ids}, qos="RANKING", budget_s=0.050)
+    print(server.stats_snapshot().summary())     # totals + per-class
     server.close()
 
-Shedding surfaces as typed errors (``QueueFullError``, ``DeadlineError``)
-from ``submit``/``Ticket.result`` — see serve/scheduler.py.
+``submit({table: keys}, ...)`` remains as a deprecation shim over the
+typed path for one release; new callers go through ``FeatureClient`` /
+``QueryRequest``.  Shedding surfaces as typed errors (``QueueFullError``,
+``DeadlineError``) from ``submit``/``Ticket.result``.
 """
 from __future__ import annotations
 
@@ -37,31 +41,55 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
-import numpy as np
-
-from repro.core.engine import MultiTableEngine, QueryResult
+from repro.api.backends import as_backend
+from repro.api.types import (Consistency, ConsistencyError, QoSClass,
+                             QueryRequest, QueryResponse)
 from repro.serve.scheduler import (BatchPolicy, MicroBatcher, ServerStats,
                                    ServerClosedError, StatsSnapshot, Ticket,
                                    _Pending, coalesce, scatter)
 
 
-class QueryServer:
-    """Admission + micro-batching + double-buffered execution in front of a
-    ``MultiTableEngine``.  Thread-safe: ``submit``/``query`` may be called
-    from any number of client threads; ``publish``/``publish_delta`` on the
-    engine may run concurrently from an updater thread."""
+def _legacy_consistency(version: Optional[int], strict: bool,
+                        min_version: Optional[int]) -> Consistency:
+    """Map the PR-3 (version, strict) kwargs onto the typed protocol."""
+    if version is not None and min_version is not None:
+        raise ValueError("pass version= or min_version=, not both")
+    if min_version is not None:
+        return Consistency.min_version(min_version)
+    if version is not None:
+        return (Consistency.pinned(version) if strict
+                else Consistency.hinted(version))
+    return Consistency.latest()
 
-    def __init__(self, engine: MultiTableEngine,
-                 policy: Optional[BatchPolicy] = None, *,
+
+class QueryServer:
+    """Admission + QoS-laned micro-batching + double-buffered execution in
+    front of a ``BatchQueryBackend``.  Thread-safe: ``submit``/``query``
+    may be called from any number of client threads; updates
+    (``publish``/``publish_delta``/``apply_update``) may run concurrently
+    from an updater thread."""
+
+    def __init__(self, backend, policy: Optional[BatchPolicy] = None, *,
+                 class_policies: Optional[dict] = None,
+                 lane_weights: Optional[dict] = None,
                  workers: int = 2, pipeline_depth: int = 2,
                  start: bool = True):
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
-        self.engine = engine
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.backend = as_backend(backend)
+        # legacy face: engine-backed servers keep their .engine attribute
+        self.engine = getattr(self.backend, "engine", None)
         self.policy = policy or BatchPolicy()
         self.stats = ServerStats(self.policy)
-        self._batcher = MicroBatcher(self.policy, self.stats)
-        self._pool = ThreadPoolExecutor(max_workers=max(workers, 1),
+        # MicroBatcher validates class_policies / lane_weights (unknown QoS
+        # names, non-BatchPolicy overrides, non-positive weights all raise
+        # ValueError at construction)
+        self._batcher = MicroBatcher(self.policy, self.stats,
+                                     class_policies=class_policies,
+                                     lane_weights=lane_weights)
+        self._pool = ThreadPoolExecutor(max_workers=workers,
                                         thread_name_prefix="qs-finish")
         # bounds batches between launch and finish: depth 2 is the classic
         # double buffer (one in flight on device, one being finished)
@@ -93,7 +121,7 @@ class QueryServer:
             self._scheduler.join(timeout)
             self._scheduler = None
         for req in self._batcher.drain():
-            self.stats.on_failure(1)
+            self.stats.on_failure(1, req.qos)
             req.ticket._fail(ServerClosedError("server closed before the "
                                                "request was served"))
         self._pool.shutdown(wait=True)
@@ -107,45 +135,69 @@ class QueryServer:
     # ------------------------------------------------------------------
     # client faces
     # ------------------------------------------------------------------
-    def submit(self, request: dict, *, budget_s: Optional[float] = None,
-               version: Optional[int] = None,
-               strict: bool = False) -> Ticket:
-        """Enqueue one request (``{table: keys}``) and return its ticket.
+    def submit(self, request, *, qos=None,
+               budget_s: Optional[float] = None,
+               version: Optional[int] = None, strict: bool = False,
+               min_version: Optional[int] = None) -> Ticket:
+        """Enqueue one request and return its ticket.
+
+        The typed face takes a ``QueryRequest`` (alone — QoS, consistency,
+        and budget travel inside it).  Passing a ``{table: keys}`` dict
+        plus kwargs is the deprecated PR-3 shim, kept for one release.
 
         Raises ``QueueFullError`` / ``DeadlineError`` / ``ServerClosedError``
         at admission time when the request is shed by policy."""
         if self._closed:
             raise ServerClosedError("server is closed")
-        if not request:
-            raise ValueError("empty request: no tables")
-        tables = {name: np.asarray(keys, dtype=np.uint64).ravel()
-                  for name, keys in request.items()}
+        if isinstance(request, QueryRequest):
+            if qos is not None or budget_s is not None or strict \
+                    or version is not None or min_version is not None:
+                raise ValueError("a QueryRequest already carries qos/"
+                                 "consistency/budget; drop the kwargs")
+            req = request
+        else:
+            # deprecation shim: raw dict + (version, strict) kwargs
+            req = QueryRequest(
+                tables=request,
+                qos=QoSClass.RANKING if qos is None else qos,
+                consistency=_legacy_consistency(version, strict,
+                                                min_version),
+                budget_s=budget_s)
+        pin_version, pin_strict = req.consistency.pin_args()
         now = time.monotonic()
-        deadline = None if budget_s is None else now + budget_s
+        deadline = None if req.budget_s is None else now + req.budget_s
         ticket = Ticket(deadline)
-        req = _Pending(tables=tables,
-                       n_keys=sum(len(k) for k in tables.values()),
-                       t_submit=now, deadline=deadline, version=version,
-                       strict=strict, ticket=ticket)
-        self.stats.on_submit()
+        pending = _Pending(
+            tables=req.tables, n_keys=req.n_keys, t_submit=now,
+            deadline=deadline, version=pin_version, strict=pin_strict,
+            qos=req.qos, consistency=req.consistency, ticket=ticket)
+        self.stats.on_submit(req.qos)
         try:
-            self._batcher.admit(req)    # raises the typed shed errors
+            self._batcher.admit(pending)   # raises the typed shed errors
         except ServerClosedError:
             # keep the snapshot reconcilable (submitted == completed +
             # failed + shed): a close() racing this submit is a failure,
             # not a silently vanished request
-            self.stats.on_failure(1)
+            self.stats.on_failure(1, req.qos)
             raise
         return ticket
 
-    def query(self, request: dict, *, budget_s: Optional[float] = None,
+    def query(self, request, *, qos=None, budget_s: Optional[float] = None,
               version: Optional[int] = None, strict: bool = False,
-              timeout: Optional[float] = None) -> QueryResult:
+              min_version: Optional[int] = None,
+              timeout: Optional[float] = None) -> QueryResponse:
         """Synchronous convenience: submit + wait.  Exceptions that failed
-        the micro-batch (e.g. ``VersionEvictedError`` under ``strict``) or
-        shed the request re-raise here."""
-        return self.submit(request, budget_s=budget_s, version=version,
-                           strict=strict).result(timeout)
+        the micro-batch (e.g. ``VersionEvictedError`` under a pinned
+        consistency) or shed the request re-raise here."""
+        return self.submit(request, qos=qos, budget_s=budget_s,
+                           version=version, strict=strict,
+                           min_version=min_version).result(timeout)
+
+    def apply_update(self, update) -> None:
+        """Publish through the backend while serving continues (micro-
+        batches pin their build at begin time, so this never mixes
+        versions into an in-flight batch)."""
+        self.backend.apply_update(update)
 
     def stats_snapshot(self) -> StatsSnapshot:
         return self.stats.snapshot()
@@ -160,6 +212,10 @@ class QueryServer:
     def queue_depth(self) -> int:
         return self._batcher.depth()
 
+    @property
+    def lane_depths(self) -> dict[str, int]:
+        return self._batcher.lane_depths()
+
     # ------------------------------------------------------------------
     # scheduler pipeline
     # ------------------------------------------------------------------
@@ -173,15 +229,15 @@ class QueryServer:
             fused, spans = coalesce(batch)
             t_launch = time.monotonic()
             try:
-                # stage pins ONE version for the whole micro-batch; the
+                # begin pins ONE version for the whole micro-batch; the
                 # build reference keeps that version's tables alive even if
                 # a concurrent publish evicts it from the window mid-flight
-                inflight = self.engine.begin(
+                inflight = self.backend.begin(
                     fused, version=batch[0].version, strict=batch[0].strict)
             except BaseException as e:  # noqa: BLE001
                 self._inflight.release()
                 if len(batch) == 1:
-                    self.stats.on_failure(1)
+                    self.stats.on_failure(1, batch[0].qos)
                     batch[0].ticket._fail(e)
                 else:
                     # a request-specific fault (e.g. one rider's unknown
@@ -191,7 +247,7 @@ class QueryServer:
                     for req in batch:
                         self._serve_single(req)
                 continue
-            # the pool blocks on device results + scatters back while this
+            # the pool blocks on backend results + scatters back while this
             # thread loops on to stage/launch the next micro-batch
             try:
                 self._pool.submit(self._finish_batch, batch_id, batch,
@@ -202,52 +258,62 @@ class QueryServer:
                 self._finish_batch(batch_id, batch, spans, inflight,
                                    t_launch)
 
-    def _serve_single(self, req) -> None:
+    def _serve_single(self, req: _Pending) -> None:
         """Rare fallback: serve one request as its own micro-batch, inline
         on the scheduler thread (used when a fused begin() failed, to
         isolate a request-specific fault to its origin)."""
         fused, spans = coalesce([req])
         t_launch = time.monotonic()
         try:
-            inflight = self.engine.begin(fused, version=req.version,
-                                         strict=req.strict)
-            result = self.engine.finish(inflight)
+            inflight = self.backend.begin(fused, version=req.version,
+                                          strict=req.strict)
+            result = self.backend.finish(inflight)
         except BaseException as e:  # noqa: BLE001
-            self.stats.on_failure(1)
+            self.stats.on_failure(1, req.qos)
             req.ticket._fail(e)
             return
         now = time.monotonic()
         self._batcher.observe_service_time(now - t_launch)
+        self.stats.on_batch(1, inflight.keys_requested,
+                            inflight.keys_deviceside, inflight.launches)
+        self._deliver(req, result, spans[0], next(self._batch_ids), now)
+
+    def _deliver(self, req: _Pending, result, span, batch_id: int,
+                 now: float) -> None:
+        """Scatter one request's slice out of a finished batch, enforce its
+        ``min_version`` requirement, record stats, wake the ticket."""
         latency = now - req.t_submit
+        try:
+            req.consistency.check(result.version)
+        except ConsistencyError as e:
+            self.stats.on_failure(1, req.qos)
+            req.ticket._fail(e)
+            return
+        sliced = scatter(result, span)
         met = None if req.deadline is None else now <= req.deadline
-        staged = inflight.staged
-        self.stats.on_batch(1, staged.keys_requested,
-                            staged.keys_deviceside, inflight.launches)
-        self.stats.on_complete(latency, met)
-        req.ticket._complete(scatter(result, spans[0]),
-                             next(self._batch_ids), latency)
+        # stats BEFORE waking the ticket: a client observing its result
+        # (e.g. warmup join followed by reset_stats) must never find its
+        # own completion still unrecorded
+        self.stats.on_complete(latency, met, req.qos)
+        req.ticket._complete(
+            QueryResponse.from_result(sliced, qos=req.qos,
+                                      latency_s=latency, batch_id=batch_id),
+            batch_id, latency)
 
     def _finish_batch(self, batch_id: int, batch: list, spans: list,
                       inflight, t_launch: float) -> None:
         try:
-            result = self.engine.finish(inflight)
+            result = self.backend.finish(inflight)
         except BaseException as e:  # noqa: BLE001
-            self.stats.on_failure(len(batch))
             for req in batch:
+                self.stats.on_failure(1, req.qos)
                 req.ticket._fail(e)
             return
         finally:
             self._inflight.release()
         now = time.monotonic()
         self._batcher.observe_service_time(now - t_launch)
-        staged = inflight.staged
-        self.stats.on_batch(len(batch), staged.keys_requested,
-                            staged.keys_deviceside, inflight.launches)
+        self.stats.on_batch(len(batch), inflight.keys_requested,
+                            inflight.keys_deviceside, inflight.launches)
         for req, span in zip(batch, spans):
-            latency = now - req.t_submit
-            met = None if req.deadline is None else now <= req.deadline
-            # stats BEFORE waking the ticket: a client observing its result
-            # (e.g. warmup join followed by reset_stats) must never find
-            # its own completion still unrecorded
-            self.stats.on_complete(latency, met)
-            req.ticket._complete(scatter(result, span), batch_id, latency)
+            self._deliver(req, result, span, batch_id, now)

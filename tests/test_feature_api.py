@@ -1,0 +1,613 @@
+"""FeatureService API v2 (ISSUE 4 tentpole): one typed protocol over three
+backends (engine / store / cluster), QoS lanes with weighted service and
+class-aware shed order, consistency modes incl. ``min_version``
+read-your-writes, constructor validation, and stats edge cases."""
+import math
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (ClusterBackend, Consistency, ConsistencyError,
+                       EngineBackend, FeatureClient, QoSClass, QueryRequest,
+                       QueryResponse, StoreBackend, UpdateRequest)
+from repro.core.engine import (EmbeddingTable, MultiTableEngine, ScalarTable,
+                               VersionEvictedError)
+from repro.core.hybrid_store import HybridKVStore
+from repro.serve.scheduler import (BatchPolicy, QueueFullError,
+                                   ServerClosedError)
+from repro.serve.server import QueryServer
+
+N_KEYS = 1_500
+VALUE_BYTES = 16
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(7)
+    keys = np.arange(1, N_KEYS + 1, dtype=np.uint64)
+    payloads = rng.integers(0, 1 << 50, N_KEYS).astype(np.uint64)
+    values = rng.integers(0, 255, (N_KEYS, VALUE_BYTES), dtype=np.uint8)
+    return keys, payloads, values
+
+
+@pytest.fixture(scope="module")
+def engine(dataset):
+    keys, payloads, values = dataset
+    eng = MultiTableEngine(
+        [ScalarTable("s", keys, payloads)],
+        [EmbeddingTable("e", keys, values, hot_fraction=0.3)],
+        max_shard_bytes=1 << 15, version=1)
+    for n in (8, 64, 256, 1024):         # warm fused-launch pad shapes
+        eng.query({"s": keys[:n], "e": keys[:max(n // 2, 1)]})
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# typed protocol: validation satellites
+# ---------------------------------------------------------------------------
+class TestTypesValidation:
+    def test_qos_parse(self):
+        assert QoSClass.parse("prefetch") is QoSClass.PREFETCH
+        assert QoSClass.parse(QoSClass.RANKING) is QoSClass.RANKING
+        with pytest.raises(ValueError, match="unknown QoS class"):
+            QoSClass.parse("bulk")
+        with pytest.raises(ValueError):
+            QoSClass.parse(3)
+
+    def test_qos_order(self):
+        assert QoSClass.RANKING < QoSClass.RETRIEVAL < QoSClass.PREFETCH
+
+    def test_consistency_modes(self):
+        assert Consistency.latest().pin_args() == (None, False)
+        assert Consistency.pinned(3).pin_args() == (3, True)
+        assert Consistency.hinted(3).pin_args() == (3, False)
+        assert Consistency.min_version(3).pin_args() == (None, False)
+        with pytest.raises(ValueError):
+            Consistency("pinned")            # needs a version
+        with pytest.raises(ValueError):
+            Consistency("latest", 3)         # takes no version
+        with pytest.raises(ValueError):
+            Consistency("eventually")        # unknown mode
+        with pytest.raises(ConsistencyError):
+            Consistency.min_version(5).check(4)
+        Consistency.min_version(5).check(5)  # satisfied: no raise
+
+    def test_query_request_validation(self):
+        with pytest.raises(ValueError):
+            QueryRequest(tables={})
+        with pytest.raises(ValueError):
+            QueryRequest(tables={"s": [1]}, budget_s=-0.1)
+        with pytest.raises(ValueError):
+            QueryRequest(tables={"s": [1]}, qos="bulk")
+        with pytest.raises(ValueError):
+            QueryRequest(tables={"s": [1]}, consistency="latest")
+        req = QueryRequest(tables={"s": [1, 2, 3]}, qos="retrieval")
+        assert req.tables["s"].dtype == np.uint64 and req.n_keys == 3
+
+    def test_update_request_validation(self, dataset):
+        keys, payloads, _ = dataset
+        with pytest.raises(ValueError, match="full publish OR a delta"):
+            UpdateRequest(version=2, upserts={"s": (keys, payloads)},
+                          scalars=[ScalarTable("s", keys, payloads)])
+        with pytest.raises(ValueError, match="empty UpdateRequest"):
+            UpdateRequest(version=2)     # phantom version bump
+        assert UpdateRequest(version=2,
+                             upserts={"s": (keys, payloads)}).is_delta
+
+    def test_batch_policy_validation(self):
+        for bad in (dict(max_batch_keys=0), dict(max_batch_requests=0),
+                    dict(max_queue_requests=-1), dict(max_wait_s=-1e-3),
+                    dict(service_time_init_s=0.0),
+                    dict(service_time_alpha=0.0),
+                    dict(service_time_alpha_down=1.5),
+                    dict(latency_reservoir=0)):
+            with pytest.raises(ValueError):
+                BatchPolicy(**bad)
+        BatchPolicy(max_wait_s=0.0)          # zero wait is legal (sim uses it)
+
+    def test_server_constructor_validation(self, engine):
+        with pytest.raises(ValueError):
+            QueryServer(engine, pipeline_depth=0, start=False)
+        with pytest.raises(ValueError):
+            QueryServer(engine, workers=0, start=False)
+        with pytest.raises(ValueError, match="unknown QoS class"):
+            QueryServer(engine, class_policies={"bulk": BatchPolicy()},
+                        start=False)
+        with pytest.raises(ValueError, match="unknown QoS class"):
+            QueryServer(engine, lane_weights={"bulk": 1.0}, start=False)
+        with pytest.raises(ValueError, match="weight"):
+            QueryServer(engine, lane_weights={"RANKING": 0.0}, start=False)
+        with pytest.raises(ValueError, match="BatchPolicy"):
+            QueryServer(engine, class_policies={"PREFETCH": 0.5},
+                        start=False)
+        srv = QueryServer(
+            engine, class_policies={"prefetch": BatchPolicy(max_wait_s=0.01)},
+            lane_weights={QoSClass.RANKING: 8}, start=False)
+        srv.close()
+
+    def test_typed_request_rejects_kwarg_overrides(self, dataset, engine):
+        keys, _, _ = dataset
+        with QueryServer(engine, start=False) as server:
+            with pytest.raises(ValueError, match="drop the kwargs"):
+                server.submit(QueryRequest(tables={"s": keys[:4]}),
+                              budget_s=0.5)
+            with pytest.raises(ValueError, match="drop the kwargs"):
+                server.submit(QueryRequest(tables={"s": keys[:4]}),
+                              strict=True)
+
+
+# ---------------------------------------------------------------------------
+# stats edge cases (satellite)
+# ---------------------------------------------------------------------------
+class TestStatsEdgeCases:
+    def test_empty_snapshot_reports_nan_cleanly(self, engine):
+        server = QueryServer(engine, start=False)
+        try:
+            snap = server.stats_snapshot()
+            assert math.isnan(snap.p50_ms) and math.isnan(snap.p99_ms)
+            assert snap.mean_occupancy == 0.0 and snap.shed_rate == 0.0
+            for c in snap.per_class.values():
+                assert math.isnan(c.p99_ms) and c.shed_rate == 0.0
+            assert isinstance(snap.summary(), str)     # never raises
+        finally:
+            server.close()
+
+    def test_single_request_snapshot(self, dataset, engine):
+        keys, _, _ = dataset
+        with QueryServer(engine, BatchPolicy(max_wait_s=0.0)) as server:
+            server.query({"s": keys[:4]}, timeout=30)
+            snap = server.stats_snapshot()
+        assert snap.completed == 1
+        assert snap.p50_ms > 0 and snap.p99_ms > 0
+        assert not math.isnan(snap.p50_ms)
+        assert snap.per_class["RANKING"].completed == 1
+        assert math.isnan(snap.per_class["PREFETCH"].p99_ms)
+        assert isinstance(snap.summary(), str)
+
+
+# ---------------------------------------------------------------------------
+# one protocol, three backends
+# ---------------------------------------------------------------------------
+class TestBackends:
+    def _oracle_check(self, dataset, res, q):
+        keys, _, values = dataset
+        oracle = set(keys.tolist())
+        for k, f, v in zip(q.tolist(), res["e"].found, res["e"].values):
+            assert (k in oracle) == bool(f)
+            if f:
+                assert (values[k - 1] == v).all()
+
+    def test_same_request_round_trips_all_three(self, dataset):
+        """Dict-oracle-identical rows from the engine, a bare hybrid
+        store, and a ClusterSim fleet — one FeatureClient request each."""
+        keys, _, values = dataset
+        rng = np.random.default_rng(3)
+        q = np.concatenate([rng.choice(keys, 64), keys[:8],
+                            rng.integers(2**62, 2**63, 5, dtype=np.uint64)])
+
+        eng = MultiTableEngine(
+            embeddings=[EmbeddingTable("e", keys, values,
+                                       hot_fraction=0.3)],
+            max_shard_bytes=1 << 15, version=1)
+        store = StoreBackend(
+            {"e": HybridKVStore(keys, values, hot_fraction=0.3)})
+
+        from repro.core.cluster_sim import ClusterSim, SimConfig
+        sim = ClusterSim(
+            SimConfig(n_shards=2, n_replicas=2, seed=0), protocol="paper",
+            tables_for_version=lambda v: (
+                [], [EmbeddingTable("e", keys, values, hot_fraction=0.3)]))
+        try:
+            responses = {}
+            for name, target in (("engine", eng), ("store", store),
+                                 ("cluster", sim)):
+                res = FeatureClient(target).query({"e": q})
+                assert isinstance(res, QueryResponse)
+                self._oracle_check(dataset, res, q)
+                responses[name] = res
+            a, b, c = responses.values()
+            assert (a["e"].found == b["e"].found).all()
+            assert (a["e"].values == b["e"].values).all()
+            assert (a["e"].found == c["e"].found).all()
+            assert (a["e"].values == c["e"].values).all()
+        finally:
+            sim.close()
+
+    def test_store_backend_behind_query_server(self, dataset):
+        """The QueryServer serves a backend with no engine at all —
+        coalescing, ticketing, and version NACKs work unchanged."""
+        keys, _, values = dataset
+        backend = StoreBackend(
+            {"e": HybridKVStore(keys, values, hot_fraction=0.3)}, version=5)
+        with QueryServer(backend, BatchPolicy(max_wait_s=0.002)) as server:
+            client = FeatureClient(server)
+            res = client.query({"e": keys[:32]}, timeout=30)
+            assert res.version == 5
+            assert (res["e"].values == values[:32]).all()
+            with pytest.raises(VersionEvictedError):
+                client.query({"e": keys[:8]},
+                             consistency=Consistency.pinned(4), timeout=30)
+            # hinted pin re-pins to the live version instead
+            res = client.query({"e": keys[:8]},
+                               consistency=Consistency.hinted(4), timeout=30)
+            assert res.version == 5
+
+    def test_store_backend_update_and_validation(self, dataset):
+        keys, _, values = dataset
+        store = HybridKVStore(keys, values, hot_fraction=0.5)
+        backend = StoreBackend({"e": store})
+        client = FeatureClient(backend)
+        new_rows = np.full((4, VALUE_BYTES), 9, dtype=np.uint8)
+        client.update(2, upserts={"e": (keys[:4], new_rows)})
+        assert client.latest_version == 2
+        res = client.query({"e": keys[:6]})
+        assert (res["e"].values[:4] == 9).all()
+        assert (res["e"].values[4:] == values[4:6]).all()
+        with pytest.raises(KeyError):
+            client.update(3, upserts={"nope": (keys[:1], new_rows[:1])})
+        with pytest.raises(ValueError, match="monotonic"):
+            client.update(2, upserts={"e": (keys[:1], new_rows[:1])})
+        with pytest.raises(ValueError):
+            StoreBackend({})
+        with pytest.raises(TypeError, match="StoreBackend"):
+            FeatureClient(store)     # bare store needs a named wrapper
+
+    def test_store_backend_atomic_update_no_mixed_rows(self, dataset):
+        """An in-place update can land between begin and finish; the
+        response must then carry the NEW version with uniformly-new rows —
+        never old rows under a new tag or a torn mix (the store gathers
+        every table under the update lock and re-pins)."""
+        keys, _, _ = dataset
+        store = HybridKVStore(keys, np.full((N_KEYS, 8), 1, dtype=np.uint8),
+                              hot_fraction=0.5)
+        backend = StoreBackend({"e": store}, version=1)
+        client = FeatureClient(backend)
+        stop = threading.Event()
+        errors: list = []
+
+        def updater():
+            v = 2
+            while not stop.is_set() and v < 60:
+                client.update(v, upserts={
+                    "e": (keys, np.full((N_KEYS, 8), v % 251,
+                                        dtype=np.uint8))})
+                v += 1
+
+        def reader():
+            try:
+                for _ in range(40):
+                    res = client.query({"e": keys[::7]})
+                    vals = set(res["e"].values[:, 0].tolist())
+                    assert len(vals) == 1, f"torn rows: {vals}"
+                    expect = 1 if res.version == 1 else res.version % 251
+                    assert vals == {expect}, (vals, res.version)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        up = threading.Thread(target=updater)
+        readers = [threading.Thread(target=reader) for _ in range(3)]
+        up.start()
+        for t in readers:
+            t.start()
+        for t in readers:
+            t.join()
+        stop.set()
+        up.join()
+        assert not errors, errors[:3]
+
+    def test_store_backend_strict_pin_evicted_in_flight(self, dataset):
+        keys, _, _ = dataset
+        values = np.full((N_KEYS, 8), 1, dtype=np.uint8)
+        backend = StoreBackend(
+            {"e": HybridKVStore(keys, values, hot_fraction=0.5)}, version=1)
+        inflight = backend.begin({"e": keys[:4]}, version=1, strict=True)
+        backend.apply_update(UpdateRequest(version=2, upserts={
+            "e": (keys[:2], np.full((2, 8), 9, dtype=np.uint8))}))
+        with pytest.raises(VersionEvictedError):
+            backend.finish(inflight)
+
+    def test_cluster_backend_update_and_pin(self, dataset):
+        keys, payloads, _ = dataset
+        from repro.core.cluster_sim import ClusterSim, SimConfig
+
+        def tables(v):
+            return ([ScalarTable("s", keys,
+                                 np.full(N_KEYS, v + 1,
+                                         dtype=np.uint64))], [])
+
+        sim = ClusterSim(SimConfig(n_shards=2, n_replicas=2, seed=1),
+                         protocol="paper", tables_for_version=tables)
+        try:
+            client = FeatureClient(ClusterBackend(sim))
+            assert client.query({"s": keys[:16]}).version == 0
+            s1, e1 = tables(1)
+            client.update(1, scalars=s1, embeddings=e1)
+            res = client.query({"s": keys[:16]})
+            assert res.version == 1 and (res["s"].payloads == 2).all()
+            # the previous generation stays pinned-readable
+            old = client.query({"s": keys[:16]},
+                               consistency=Consistency.pinned(0))
+            assert old.version == 0 and (old["s"].payloads == 1).all()
+        finally:
+            sim.close()
+
+
+# ---------------------------------------------------------------------------
+# QoS lanes
+# ---------------------------------------------------------------------------
+class TestQoSLanes:
+    def test_dict_oracle_under_mixed_class_clients(self, dataset, engine):
+        """Scatter-back stays dict-oracle-exact no matter which lane a
+        request rode; per-class accounting reconciles."""
+        keys, payloads, values = dataset
+        oracle = dict(zip(keys.tolist(), payloads.tolist()))
+        classes = [QoSClass.RANKING, QoSClass.RETRIEVAL, QoSClass.PREFETCH]
+        errors: list = []
+
+        with QueryServer(engine, BatchPolicy(max_wait_s=0.003)) as server:
+            client = FeatureClient(server)
+
+            def run(cid):
+                rng = np.random.default_rng(cid)
+                qos = classes[cid % 3]
+                try:
+                    for _ in range(6):
+                        q = rng.choice(keys, 48)
+                        q = np.concatenate([q, q[:6], rng.integers(
+                            2**62, 2**63, 4, dtype=np.uint64)])
+                        res = client.query({"s": q, "e": q[:24]}, qos=qos)
+                        assert res.qos is qos
+                        for k, f, p in zip(q.tolist(), res["s"].found,
+                                           res["s"].payloads):
+                            assert (k in oracle) == bool(f)
+                            if f:
+                                assert oracle[k] == int(p)
+                        for k, f, v in zip(q[:24].tolist(), res["e"].found,
+                                           res["e"].values):
+                            if f:
+                                assert (values[k - 1] == v).all()
+                except Exception as e:  # noqa: BLE001 — surfaced below
+                    errors.append(e)
+
+            threads = [threading.Thread(target=run, args=(i,))
+                       for i in range(6)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errors, errors[:3]
+            snap = server.stats_snapshot()
+        assert snap.completed == 6 * 6 and snap.failed == 0
+        per = snap.per_class
+        assert {per[c.name].completed for c in classes} == {12}
+        assert sum(c.completed for c in per.values()) == snap.completed
+
+    def test_shed_order_prefetch_first(self, dataset, engine):
+        """Backpressure proof: a full queue sheds PREFETCH to admit
+        RANKING, RETRIEVAL sheds PREFETCH, PREFETCH sheds itself, and
+        RANKING is never the victim."""
+        keys, _, _ = dataset
+        server = QueryServer(engine, BatchPolicy(max_queue_requests=4),
+                             start=False)
+        try:
+            prefetch = [server.submit({"s": keys[:8]}, qos="PREFETCH")
+                        for _ in range(4)]
+            # RANKING arrival evicts the NEWEST prefetch request
+            ranking = server.submit({"s": keys[:8]}, qos="RANKING")
+            with pytest.raises(QueueFullError, match="evicted"):
+                prefetch[3].result(timeout=5)
+            # PREFETCH arrival has nothing below it: shed outright
+            with pytest.raises(QueueFullError, match="no lane below"):
+                server.submit({"s": keys[:8]}, qos="PREFETCH")
+            # RETRIEVAL arrival evicts the next-newest prefetch
+            retrieval = server.submit({"s": keys[:8]}, qos="RETRIEVAL")
+            with pytest.raises(QueueFullError):
+                prefetch[2].result(timeout=5)
+            # two more RANKING arrivals flush the remaining prefetch
+            for _ in range(2):
+                server.submit({"s": keys[:8]}, qos="RANKING")
+            assert server.lane_depths == {"RANKING": 3, "RETRIEVAL": 1,
+                                          "PREFETCH": 0}
+            # with PREFETCH empty, a RANKING arrival evicts RETRIEVAL next
+            server.submit({"s": keys[:8]}, qos="RANKING")
+            with pytest.raises(QueueFullError):
+                retrieval.result(timeout=5)
+            # and with nothing below RANKING queued, RANKING sheds itself
+            with pytest.raises(QueueFullError, match="no lane below"):
+                server.submit({"s": keys[:8]}, qos="RANKING")
+            snap = server.stats_snapshot()
+            per = snap.per_class
+            assert per["PREFETCH"].shed_queue_full == 5
+            assert per["RETRIEVAL"].shed_queue_full == 1
+            assert per["RANKING"].shed_queue_full == 1
+            assert not ranking.done()        # the admitted winner survived
+        finally:
+            server.close()
+        with pytest.raises(ServerClosedError):
+            ranking.result(timeout=5)
+
+    def test_doomed_arrival_does_not_evict(self, dataset, engine):
+        """A request that would be deadline-shed anyway must not evict a
+        lower-lane victim for a slot it will never use."""
+        keys, _, _ = dataset
+        from repro.serve.scheduler import DeadlineError
+        server = QueryServer(
+            engine, BatchPolicy(max_queue_requests=2,
+                                service_time_init_s=0.05), start=False)
+        try:
+            prefetch = [server.submit({"s": keys[:8]}, qos="PREFETCH")
+                        for _ in range(2)]
+            with pytest.raises(DeadlineError):
+                server.submit({"s": keys[:8]}, qos="RANKING",
+                              budget_s=0.001)
+            assert not any(t.done() for t in prefetch)   # no victim
+            assert server.stats_snapshot().per_class[
+                "PREFETCH"].shed_queue_full == 0
+        finally:
+            server.close()
+
+    def test_weighted_service_order(self, dataset, engine):
+        """Prequeued lanes drain by smooth WRR: RANKING takes ~4 of every
+        5 contended slots, yet PREFETCH is served before RANKING empties
+        (weighted service, not strict priority starvation)."""
+        keys, _, _ = dataset
+        server = QueryServer(
+            engine, BatchPolicy(max_batch_requests=1, max_wait_s=0.0),
+            start=False)
+        r = [server.submit({"s": keys[i * 8:(i + 1) * 8]}, qos="RANKING")
+             for i in range(6)]
+        p = [server.submit({"s": keys[i * 8:(i + 1) * 8]}, qos="PREFETCH")
+             for i in range(6)]
+        server.start()
+        try:
+            for t in r + p:
+                t.result(timeout=60)
+            r_ids = [t.batch_id for t in r]
+            p_ids = [t.batch_id for t in p]
+            assert sorted(r_ids + p_ids) == list(range(12))
+            assert np.mean(r_ids) < np.mean(p_ids)
+            assert min(p_ids) < max(r_ids)       # no starvation
+        finally:
+            server.close()
+
+    def test_per_class_policy_override(self, dataset, engine):
+        """A PREFETCH-lane BatchPolicy override caps that lane's batches
+        without touching RANKING's."""
+        keys, _, _ = dataset
+        server = QueryServer(
+            engine, BatchPolicy(max_batch_requests=8, max_wait_s=0.0),
+            class_policies={"PREFETCH": BatchPolicy(max_batch_requests=1,
+                                                    max_wait_s=0.0)},
+            start=False)
+        r = [server.submit({"s": keys[:8]}, qos="RANKING")
+             for _ in range(4)]
+        p = [server.submit({"s": keys[:8]}, qos="PREFETCH")
+             for _ in range(4)]
+        server.start()
+        try:
+            for t in r + p:
+                t.result(timeout=60)
+            assert len({t.batch_id for t in r}) == 1     # fused together
+            assert len({t.batch_id for t in p}) == 4     # one per batch
+        finally:
+            server.close()
+
+    def test_no_mixed_version_across_lanes_under_publish_delta(self):
+        """The per-batch single-version invariant holds in EVERY lane while
+        a publisher ships deltas as fast as it can."""
+        keys = np.arange(1, 401, dtype=np.uint64)
+        eng = MultiTableEngine(
+            [ScalarTable("s", keys, np.full(400, 1, dtype=np.uint64))],
+            max_shard_bytes=1 << 13, version=1)
+        for n in (8, 64, 256, 512):
+            eng.query({"s": keys[:n]})
+
+        stop = threading.Event()
+        publish_err: list = []
+        errors: list = []
+        observed: list[tuple] = []
+        classes = [QoSClass.RANKING, QoSClass.RETRIEVAL, QoSClass.PREFETCH]
+
+        with QueryServer(eng, BatchPolicy(max_wait_s=0.002)) as server:
+            client = FeatureClient(server)
+
+            def publisher():
+                v = 2
+                try:
+                    while not stop.is_set() and v < 150:
+                        client.update(v, upserts={
+                            "s": (keys, np.full(400, v, dtype=np.uint64))})
+                        v += 1
+                except Exception as e:  # noqa: BLE001
+                    publish_err.append(e)
+
+            pub = threading.Thread(target=publisher)
+            pub.start()
+
+            def run(cid):
+                rng = np.random.default_rng(cid)
+                try:
+                    for _ in range(20):
+                        t = client.submit({"s": rng.choice(keys, 32)},
+                                          qos=classes[cid % 3])
+                        res = t.result(timeout=60)
+                        vals = set(res["s"].payloads[res["s"].found]
+                                   .tolist())
+                        assert len(vals) == 1, f"mixed batch: {vals}"
+                        assert vals == {res.version}
+                        observed.append((res.batch_id, res.version))
+                except Exception as e:  # noqa: BLE001
+                    errors.append(e)
+
+            threads = [threading.Thread(target=run, args=(i,))
+                       for i in range(6)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            stop.set()
+            pub.join()
+        assert not errors, errors[:3]
+        assert not publish_err, publish_err[:1]
+        by_batch: dict = {}
+        for bid, v in observed:
+            by_batch.setdefault(bid, set()).add(v)
+        assert all(len(vs) == 1 for vs in by_batch.values())
+        assert len({v for _, v in observed}) >= 2
+
+
+# ---------------------------------------------------------------------------
+# consistency modes through the server
+# ---------------------------------------------------------------------------
+class TestConsistency:
+    def test_min_version_read_your_writes(self, dataset):
+        keys, payloads, _ = dataset
+        eng = MultiTableEngine([ScalarTable("s", keys, payloads)],
+                               max_shard_bytes=1 << 15, version=1)
+        with QueryServer(eng, BatchPolicy(max_wait_s=0.0)) as server:
+            client = FeatureClient(server)
+            new_pay = payloads[:16] + np.uint64(1)
+            client.update(2, upserts={"s": (keys[:16], new_pay)})
+            res = client.query({"s": keys[:16]},
+                               consistency=Consistency.min_version(2),
+                               timeout=30)
+            assert res.version >= 2
+            assert (res["s"].payloads == new_pay).all()
+            with pytest.raises(ConsistencyError):
+                client.query({"s": keys[:8]},
+                             consistency=Consistency.min_version(99),
+                             timeout=30)
+
+    def test_min_version_direct_backend(self, dataset, engine):
+        client = FeatureClient(EngineBackend(engine))
+        keys, _, _ = dataset
+        v = engine.latest_version
+        assert client.query({"s": keys[:8]},
+                            consistency=Consistency.min_version(v)
+                            ).version >= v
+        with pytest.raises(ConsistencyError):
+            client.query({"s": keys[:8]},
+                         consistency=Consistency.min_version(v + 50))
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: QoS benchmark acceptance (slow lane)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_bench_qos_acceptance():
+    """Under synthetic overload, RANKING p99 and shed rate must be strictly
+    better than PREFETCH's (and the sweep itself must run green)."""
+    r = subprocess.run(
+        [sys.executable, "benchmarks/bench_serving.py", "--qos"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("serving/qos_acceptance")]
+    assert line, r.stdout[-2000:]
+    assert "ranking_strictly_better=True" in line[0], line[0]

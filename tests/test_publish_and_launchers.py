@@ -83,6 +83,17 @@ def test_serve_launcher_smoke():
     assert "p99" in r.stdout
 
 
+@pytest.mark.slow
+def test_serve_launcher_feature_server_smoke():
+    """Scoring batches through the QoS-laned FeatureClient (RANKING lane)
+    with background PREFETCH traffic riding the same server."""
+    r = _run("repro.launch.serve", "--arch", "deepfm", "--smoke",
+             "--feature-server", "--clients", "2", "--requests", "2",
+             "--prefetch-clients", "1")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "feature-server" in r.stdout and "p99" in r.stdout
+
+
 def test_dryrun_cli_help():
     r = _run("repro.launch.dryrun", "--help")
     assert r.returncode == 0 and "--multi-pod" in r.stdout
