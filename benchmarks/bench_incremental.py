@@ -12,6 +12,13 @@ Rows:
   incremental/full_publish      rebuild-everything baseline
   incremental/delta_<frac>      publish_delta at that fraction of rows
                                 (derived: speedup vs full + shard sharing)
+  incremental/cold_store        embedding cold-file growth left behind by
+                                the copy-on-write delta generations
+  incremental/compaction        one engine.compact() pass: reclaimed bytes
+                                + garbage fraction after
+
+(The store-level cold-file-bytes-over-time sweep — bounded with threshold
+compaction, monotonic without — lives in bench_resource.py --compaction.)
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_incremental.py
 """
@@ -83,6 +90,21 @@ def main(quick: bool = False) -> None:
         common.row(f"incremental/delta_{frac:g}", us_delta,
                    f"speedup={us_full / us_delta:.1f}x "
                    f"shards_shared={shared}/{shared + copied}")
+
+    # the copy-on-write generations above appended superseded rows to the
+    # embedding table's shared cold file; report the debt and pay it off
+    # with one engine-level compaction pass (the rolling-update tick)
+    store = engine.window.get(None)[2].stores["item_emb"]
+    common.row("incremental/cold_store", 0.0,
+               f"file_mb={store.stats.cold_file_bytes / 1e6:.2f};"
+               f"live_mb={store.n * emb_bytes / 1e6:.2f};"
+               f"garbage_fraction={store.garbage_fraction:.3f}")
+    us_compact = common.timeit(
+        lambda: engine.compact(min_garbage_fraction=0.0), warmup=0, iters=1)
+    common.row("incremental/compaction", us_compact,
+               f"reclaimed_mb="
+               f"{store.stats.compaction_bytes_reclaimed / 1e6:.2f};"
+               f"gf_after={store.garbage_fraction:.3f}")
 
 
 if __name__ == "__main__":

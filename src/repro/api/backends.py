@@ -122,14 +122,23 @@ class StoreBackend:
 
     name = "store"
 
-    def __init__(self, stores: dict[str, HybridKVStore], *, version: int = 1):
+    def __init__(self, stores: dict[str, HybridKVStore], *, version: int = 1,
+                 compact_threshold: float = 0.3):
         if not stores:
             raise ValueError("StoreBackend needs at least one named store")
         for name, store in stores.items():
             if not isinstance(store, HybridKVStore):
                 raise ValueError(f"table {name!r} is not a HybridKVStore")
+        if not 0.0 < compact_threshold <= 1.0:
+            raise ValueError(f"compact_threshold must be in (0, 1], got "
+                             f"{compact_threshold}")
         self.stores = dict(stores)
         self._version = int(version)
+        # deletes orphan cold rows in place; once a store's garbage
+        # fraction crosses this, apply_update triggers a compaction pass
+        # after the delta lands (outside the update lock — in-flight
+        # gathers are protected by the store's own seqlock)
+        self.compact_threshold = compact_threshold
         # serializes gathers against updates: the window-of-one store has
         # no immutable build for a batch to hold, so atomicity of (rows,
         # version tag) comes from this lock instead
@@ -231,6 +240,15 @@ class StoreBackend:
             for name, keys in deletes.items():
                 self.stores[name].delete_batch(keys)
             self._version = update.version
+        # threshold-driven compaction AFTER the delta (and after releasing
+        # the update lock so finish() gathers aren't stalled behind the
+        # rewrite): a no-op below the threshold, a full live-row rewrite +
+        # atomic swap above it.  Concurrent apply_updates may both get
+        # here; the second pass sees a freshly-reset garbage fraction and
+        # skips.
+        for name in set(update.upserts) | set(update.deletes):
+            self.stores[name].compact(
+                min_garbage_fraction=self.compact_threshold)
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,7 @@ class SimConfig:
     update_interval_us: int = 60_000_000               # publish cadence
     fail_prob_per_update: float = 0.0                  # replica crash chance
     repair_us: int = 30_000_000                        # node replacement time
+    compact_garbage_threshold: float = 0.3             # cold-store reclaim
     seed: int = 0
 
 
@@ -108,6 +109,8 @@ class ClusterMetrics:
     hedges: int = 0
     p_latencies_us: list = dataclasses.field(default_factory=list)
     update_wall_us: int = 0
+    compactions: int = 0
+    compaction_bytes_reclaimed: int = 0
 
     @property
     def mixed_rate(self) -> float:
@@ -237,6 +240,16 @@ class ClusterSim:
                     if delta is not None:
                         upserts, deletes = delta
                         self.engine.publish_delta(version, upserts, deletes)
+                        # replicas reclaim cold-store garbage as part of
+                        # the rollout: copy-on-write delta generations
+                        # append superseded rows to the shared cold files,
+                        # and the reload window is exactly when background
+                        # IO is cheapest (the replica is out of rotation)
+                        r = self.engine.compact(
+                            cfg.compact_garbage_threshold)
+                        self.metrics.compactions += r["stores_compacted"]
+                        self.metrics.compaction_bytes_reclaimed += \
+                            r["reclaimed_bytes"]
                     else:
                         scalars, embeddings = self.tables_for_version(version)
                         self.engine.publish(version, scalars, embeddings)

@@ -646,3 +646,21 @@ class MultiTableEngine:
         if ok:
             for store in build.stores.values():
                 store.maintain()
+
+    def compact(self, min_garbage_fraction: float = 0.3) -> dict:
+        """Cold-store compaction tick for every embedding table of the
+        latest version: copy-on-write delta publishes append superseded
+        rows to the shared cold files, and this rewrites the live rows
+        once a store's garbage fraction crosses the threshold.  Retained
+        older versions keep serving bitwise from the retired generation
+        (refcounted cold-file handles) until the window drops them.
+        Returns ``{"stores_compacted": n, "reclaimed_bytes": total}``."""
+        ok, _, build = self.window.get(None)
+        compacted = reclaimed = 0
+        if ok:
+            for store in build.stores.values():
+                r = store.compact(min_garbage_fraction=min_garbage_fraction)
+                if not r.get("skipped"):
+                    compacted += 1
+                    reclaimed += r["reclaimed_bytes"]
+        return {"stores_compacted": compacted, "reclaimed_bytes": reclaimed}

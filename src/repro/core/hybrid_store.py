@@ -21,9 +21,11 @@ translates observed IO counts into modeled NVMe/DDR time for benchmarks.
 """
 from __future__ import annotations
 
+import itertools
 import os
 import tempfile
 import threading
+import weakref
 from typing import Optional, Sequence
 
 import numpy as np
@@ -35,6 +37,53 @@ from repro.core.tiering import TierStats
 TIER_BIT = 51
 TIER_MASK = 1 << TIER_BIT
 SLOT_MASK = TIER_MASK - 1
+
+# compaction generation filenames must be unique across EVERY store that
+# shares a cold_dir — a clone chain shares its parent's dir, and a per-store
+# counter would let a (retired) parent and its clone both mint
+# "cold.gen1.bin" and truncate each other's live file.  A process-wide
+# counter makes collisions impossible (itertools.count.__next__ is atomic
+# under the GIL).
+_cold_gen_counter = itertools.count(1)
+
+
+class _ColdFile:
+    """Refcounted handle on one generation of the cold value file.
+
+    A store and every live ``clone()`` descended from it share the same
+    file; compaction retires the writer's generation by swapping in a fresh
+    file and dropping its ref.  The file is unlinked only when the LAST
+    holder releases it — a retained old version (engine retention window)
+    keeps serving its rows bitwise from the old generation until it is
+    dropped, exactly the clone-chain lifecycle of delta publishing.  Each
+    ``HybridKVStore`` holds exactly one ref, released by ``close()`` or by
+    a GC finalizer when the store object dies."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._refs = 1
+        self._lock = threading.Lock()
+
+    def incref(self) -> None:
+        with self._lock:
+            if self._refs <= 0:                       # pragma: no cover
+                raise RuntimeError("cold file already released")
+            self._refs += 1
+
+    def decref(self) -> None:
+        with self._lock:
+            self._refs -= 1
+            last = self._refs == 0
+        if last:
+            try:
+                os.unlink(self.path)
+            except OSError:                           # pragma: no cover
+                pass   # caller-managed dir may already be gone
+
+    @property
+    def refs(self) -> int:
+        with self._lock:
+            return self._refs
 
 
 class HybridKVStore:
@@ -94,6 +143,10 @@ class HybridKVStore:
         # cold copy is current)
         self._cold[:] = values
         self._cold.flush()
+        self._cold_handle = _ColdFile(self._cold_path)
+        self._cold_finalizer = weakref.finalize(self,
+                                                self._cold_handle.decref)
+        self.stats.cold_file_bytes = cold_rows * self.value_bytes
 
         # --- index: payload = tier bit + slot ---
         payloads = np.empty(self.n, dtype=np.uint64)
@@ -129,6 +182,8 @@ class HybridKVStore:
         self._retired = False           # True once a clone() owns the writes
         self._evict_thread: Optional[threading.Thread] = None
         self._evict_stop = threading.Event()
+        self._compact_thread: Optional[threading.Thread] = None
+        self._compact_stop = threading.Event()
 
     # ------------------------------------------------------------------
     # read path
@@ -188,8 +243,16 @@ class HybridKVStore:
         admission, no LRU writes) — the seqlock-retryable section of
         get_batch.  Returns (found, rows, cold mask, hot slots); the
         caller applies the LRU touch only once the read proves stable."""
+        # snapshot the swappable references ONCE: a concurrent compact()
+        # replaces index + cold file together under the seqlock, so each
+        # attempt must probe one index object and gather from one file
+        # object — re-reading the attributes mid-attempt could clip slots
+        # against the new (smaller) file after probing the old index and
+        # step out of range before the seqlock check ever runs
+        index = self.index
+        cold_file = self._cold
         out = np.zeros((len(keys), self.value_bytes), dtype=np.uint8)
-        found, payloads = self.index.lookup_host_batch(keys)
+        found, payloads = index.lookup_host_batch(keys)
         cold = found & ((payloads & np.uint64(TIER_MASK)) != 0)
         hot = found & ~cold
         # slots are clipped (mirroring the device lookup's mode="clip"
@@ -204,8 +267,8 @@ class HybridKVStore:
         if cold.any():
             slots = np.clip(
                 (payloads[cold] & np.uint64(SLOT_MASK)).astype(np.int64),
-                0, self._cold.shape[0] - 1)
-            out[cold] = self._cold[slots]           # the one NVMe IO per row
+                0, cold_file.shape[0] - 1)
+            out[cold] = cold_file[slots]            # the one NVMe IO per row
         return found, out, cold, hot_slots
 
     # ------------------------------------------------------------------
@@ -283,6 +346,137 @@ class HybridKVStore:
             self._evict_thread.join()
             self._evict_thread = None
             self._evict_stop.clear()
+
+    # ------------------------------------------------------------------
+    # cold-store compaction (background garbage reclamation)
+    # ------------------------------------------------------------------
+    @property
+    def garbage_fraction(self) -> float:
+        """Fraction of the cold file holding superseded/orphaned rows."""
+        return self.stats.garbage_fraction
+
+    def compact(self, *, min_garbage_fraction: float = 0.0) -> dict:
+        """One compaction pass: rewrite every LIVE cold row into a fresh
+        file, remap the cold home slots, and atomically swap file + index
+        under the seqlock, so concurrent ``get_batch`` readers see either
+        the old generation or the new one — never a torn mix.
+
+        Skips (returns ``{"skipped": True, ...}``) while the garbage
+        fraction is below ``min_garbage_fraction`` — the threshold form the
+        async thread and ``StoreBackend.apply_update`` call on every tick.
+        The retired generation's file is unlinked only once no live
+        ``clone()`` still serves from it (refcounted ``_ColdFile``), so a
+        retained old version keeps reading its rows bitwise.
+
+        Reads never block: the rewrite happens into a file invisible to
+        readers, and only the final pointer swap sits inside the seqlock's
+        odd window.  Writers (``upsert_batch``/``delete_batch``/``_admit``/
+        ``maintain``) serialize with the pass on the update lock."""
+        with self._lock:
+            before_bytes = self._cold.shape[0] * self.value_bytes
+            garbage = self.stats.garbage_bytes
+            frac = garbage / before_bytes if before_bytes else 0.0
+            if frac < min_garbage_fraction:
+                return {"skipped": True, "garbage_fraction": frac,
+                        "cold_file_bytes": before_bytes}
+            # live rows, in old-slot order: the gather reads the old file
+            # roughly sequentially and the new file is written as a stream
+            live = sorted(self._cold_slot_of_key_order.items(),
+                          key=lambda kv: kv[1])
+            n_live = len(live)
+            keys_arr = np.fromiter((k for k, _ in live), dtype=np.uint64,
+                                   count=n_live)
+            old_slots = np.fromiter((s for _, s in live), dtype=np.int64,
+                                    count=n_live)
+            new_path = os.path.join(
+                self._cold_dir, f"cold.gen{next(_cold_gen_counter)}.bin")
+            new_rows = max(n_live, 1)
+            new_cold = np.memmap(new_path, dtype=np.uint8, mode="w+",
+                                 shape=(new_rows, self.value_bytes))
+            if n_live:
+                new_cold[:n_live] = self._cold[old_slots]   # the rewrite IO
+            new_cold.flush()
+            # remap the index on a PRIVATE copy: cold-tier keys move to
+            # their new slot (one vectorized update_batch pass); hot-tier
+            # keys keep their hot slot and only the home-slot map changes.
+            # Readers keep probing the old index object until the swap.
+            new_index = self.index.copy()
+            if n_live:
+                found, payloads = new_index.lookup_host_batch(keys_arr)
+                if not found.all():               # pragma: no cover
+                    raise RuntimeError(
+                        "cold home-slot map names a key the index lost — "
+                        "store corrupted")
+                cold_mask = (payloads & np.uint64(TIER_MASK)) != 0
+                new_slots = np.arange(n_live, dtype=np.uint64)
+                if cold_mask.any():
+                    new_index.update_batch(
+                        keys_arr[cold_mask],
+                        np.uint64(TIER_MASK) | new_slots[cold_mask])
+            new_map = {int(k): i for i, k in enumerate(keys_arr)}
+            new_handle = _ColdFile(new_path)
+            old_handle = self._cold_handle
+            old_finalizer = self._cold_finalizer
+            # the atomic swap: everything a reader dereferences flips
+            # inside one seqlock odd window, and an attempt that straddled
+            # it retries against the consistent new state
+            self._write_seq += 1
+            try:
+                self.index = new_index
+                self._cold = new_cold
+                self._cold_path = new_path
+                self._cold_handle = new_handle
+                self._cold_slot_of_key_order = new_map
+            finally:
+                self._write_seq += 1
+            self._cold_finalizer = weakref.finalize(self, new_handle.decref)
+            # release OUR ref on the retired generation; clones still
+            # serving from it keep the file alive
+            old_finalizer.detach()
+            old_handle.decref()
+            reclaimed = before_bytes - new_rows * self.value_bytes
+            with self._stats_lock:
+                self.stats.garbage_bytes = 0
+                self.stats.cold_file_bytes = new_rows * self.value_bytes
+                self.stats.compactions += 1
+                self.stats.compaction_rows_rewritten += n_live
+                self.stats.compaction_bytes_reclaimed += max(reclaimed, 0)
+            return {"skipped": False, "live_rows": n_live,
+                    "reclaimed_bytes": max(reclaimed, 0),
+                    "cold_file_bytes": new_rows * self.value_bytes,
+                    "garbage_fraction_before": frac}
+
+    def start_async_compaction(self, threshold: float = 0.3,
+                               period_s: float = 0.01):
+        """Background reclamation, modeled on the async-eviction thread:
+        every ``period_s`` the garbage fraction is checked and a compaction
+        pass runs once it reaches ``threshold``.  Queries keep flowing
+        throughout (lock-free seqlock reads)."""
+        if not 0.0 < threshold <= 1.0:
+            raise ValueError(f"threshold must be in (0, 1], got {threshold}")
+
+        def loop():
+            while not self._compact_stop.wait(period_s):
+                if self.garbage_fraction >= threshold:
+                    self.compact(min_garbage_fraction=threshold)
+        self._compact_thread = threading.Thread(target=loop, daemon=True)
+        self._compact_thread.start()
+
+    def stop_async_compaction(self):
+        if self._compact_thread is not None:
+            self._compact_stop.set()
+            self._compact_thread.join()
+            self._compact_thread = None
+            self._compact_stop.clear()
+
+    def close(self) -> None:
+        """Stop background threads and release this store's ref on its
+        cold-file generation (idempotent; GC does the same eventually via
+        the finalizer).  The file disappears once the last holder in the
+        clone chain lets go; reads after close() are undefined."""
+        self.stop_async_eviction()
+        self.stop_async_compaction()
+        self._cold_finalizer()
 
     # ------------------------------------------------------------------
     def _set_payload(self, key: int, payload: np.uint64):
@@ -377,6 +571,11 @@ class HybridKVStore:
                 self.n += 1
                 inserted += 1
             elif copy_on_write:
+                # the superseded cold row is unreachable from THIS store's
+                # view from here on (a retained clone may still serve it
+                # from the shared file) — account it as garbage awaiting
+                # the next compaction pass
+                self.stats.garbage_bytes += self.value_bytes
                 self._cold[next_slot] = v
                 self._cold_slot_of_key_order[k] = next_slot
                 if payload & TIER_MASK:
@@ -396,11 +595,13 @@ class HybridKVStore:
                 updated += 1
         if new_entries:
             # one apply_delta call: in-place while there is headroom,
-            # at most ONE growth rebuild per batch (not per key)
+            # at most ONE growth rebuild per batch (not per key);
+            # assume_new — the probe above already proved these absent
             ks = np.array([k for k, _ in new_entries], dtype=np.uint64)
             ps = np.array([p for _, p in new_entries], dtype=np.uint64)
             self.index = nh.apply_delta(self.index, ks, ps,
-                                        load_factor=self._load_factor)
+                                        load_factor=self._load_factor,
+                                        assume_new=True)
         return {"inserted": inserted, "updated": updated,
                 "cold_rows_appended": rows_needed}
 
@@ -429,7 +630,10 @@ class HybridKVStore:
                             self.index, (), (),
                             np.array([k], dtype=np.uint64),
                             load_factor=self._load_factor)
-                    self._cold_slot_of_key_order.pop(k, None)
+                    # the key's cold home slot is orphaned in place —
+                    # garbage until compaction rewrites the file
+                    if self._cold_slot_of_key_order.pop(k, None) is not None:
+                        self.stats.garbage_bytes += self.value_bytes
                     self.n -= 1
                     removed += 1
             finally:
@@ -467,7 +671,13 @@ class HybridKVStore:
             new.n = self.n
             new.value_bytes = self.value_bytes
             new._load_factor = self._load_factor
-            new.stats = TierStats()
+            # counters start fresh, but the garbage view carries over: the
+            # superseded rows in the shared file are garbage from the
+            # clone's perspective too, and the clone is the writer that
+            # will eventually compact them away
+            new.stats = TierStats(
+                garbage_bytes=self.stats.garbage_bytes,
+                cold_file_bytes=self.stats.cold_file_bytes)
             new.hot_capacity = self.hot_capacity
             new._hot_values = self._hot_values.copy()
             new._hot_last_access = self._hot_last_access.copy()
@@ -479,14 +689,21 @@ class HybridKVStore:
             new._cold = np.memmap(self._cold_path, dtype=np.uint8, mode="r+",
                                   shape=self._cold.shape)
             new._cold_slot_of_key_order = dict(self._cold_slot_of_key_order)
+            # the clone's ref on the shared generation: the file outlives
+            # whichever of parent/clone compacts or dies first
+            new._cold_handle = self._cold_handle
+            new._cold_handle.incref()
             new.index = self.index.copy()
             self._retired = retire        # single writer: the clone
+        new._cold_finalizer = weakref.finalize(new, new._cold_handle.decref)
         new._lock = threading.Lock()
         new._stats_lock = threading.Lock()
         new._write_seq = 0
         new._retired = False
         new._evict_thread = None
         new._evict_stop = threading.Event()
+        new._compact_thread = None
+        new._compact_stop = threading.Event()
         return new
 
     def retire(self) -> None:
@@ -507,6 +724,8 @@ class HybridKVStore:
             self._cold = np.memmap(
                 self._cold_path, dtype=np.uint8, mode="r+",
                 shape=(old_rows + extra_rows, self.value_bytes))
+            self.stats.cold_file_bytes = \
+                (old_rows + extra_rows) * self.value_bytes
         return old_rows
 
     def memory_bytes(self) -> dict:
@@ -520,4 +739,5 @@ class HybridKVStore:
             "resident_total": idx_bytes + self._hot_values.nbytes
             + self._hot_last_access.nbytes + self._hot_key.nbytes,
             "cold_file": self._cold.shape[0] * self.value_bytes,
+            "cold_garbage": self.stats.garbage_bytes,
         }

@@ -173,13 +173,33 @@ class HashTable:
         host probing costs O(max chain length) numpy passes instead of one
         Python probe loop per key.  Bit-identical to per-key
         ``probe_trace`` / ``lookup_host`` for every variant.
-        """
+
+        One probe implementation serves both faces: this is
+        ``locate_batch`` (the walk) plus a payload gather over the hit
+        buckets."""
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        found, where = self.locate_batch(keys)
+        payloads = np.zeros(len(keys), dtype=np.uint64)
+        if found.any():
+            idx = where[found]
+            payloads[found] = hc.payload_np(self.val_hi[idx],
+                                            self.val_lo[idx])
+        return found, payloads
+
+    def locate_batch(self, keys: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """THE vectorized masked-advance probe: ``(found bool[n], bucket
+        int64[n])`` (bucket undefined where not found) — one numpy pass
+        per probe step over the still-active lanes.  ``lookup_host_batch``
+        is this walk plus a payload gather; ``update_batch`` and the
+        hybrid store's compaction remap consume the bucket indices
+        directly."""
         keys = np.asarray(keys, dtype=np.uint64).ravel()
         n = len(keys)
         found = np.zeros(n, dtype=bool)
-        payloads = np.zeros(n, dtype=np.uint64)
+        where = np.zeros(n, dtype=np.int64)
         if n == 0:
-            return found, payloads
+            return found, where
         q_hi, q_lo = hc.key_split_np(keys)
         idx = hc.bucket_of_np(q_hi, q_lo, self.home_capacity)
         khi, klo = self.key_hi[idx], self.key_lo[idx]
@@ -189,8 +209,7 @@ class HashTable:
         if self.variant == "linear":
             hit = ~empty & (khi == q_hi) & (klo == q_lo)
             found[hit] = True
-            payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
-                                          self.val_lo[idx[hit]])
+            where[hit] = idx[hit]
             active = ~empty & ~hit
             for _ in range(self.capacity):
                 if not active.any():
@@ -201,21 +220,17 @@ class HashTable:
                     & (klo == np.uint32(hc.EMPTY_LO))
                 hit = active & ~empty & (khi == q_hi) & (klo == q_lo)
                 found[hit] = True
-                payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
-                                              self.val_lo[idx[hit]])
+                where[hit] = idx[hit]
                 active = active & ~hit & ~empty
-            return found, payloads
+            return found, where
 
-        # chained variants: walk the home-rooted chain under the mask
         active = ~empty
         if self.variant in _RELOCATING:
-            # home-pure chains: a lodger resident means no chain roots here
             rooted = hc.bucket_of_np(khi, klo, self.home_capacity) == idx
             active &= rooted
         hit = active & (khi == q_hi) & (klo == q_lo)
         found[hit] = True
-        payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
-                                      self.val_lo[idx[hit]])
+        where[hit] = idx[hit]
         active = active & ~hit
         for _ in range(self.capacity + 1):
             if not active.any():
@@ -235,10 +250,42 @@ class HashTable:
             khi, klo = self.key_hi[idx], self.key_lo[idx]
             hit = active & (khi == q_hi) & (klo == q_lo)
             found[hit] = True
-            payloads[hit] = hc.payload_np(self.val_hi[idx[hit]],
-                                          self.val_lo[idx[hit]])
+            where[hit] = idx[hit]
             active = active & ~hit
-        return found, payloads
+        return found, where
+
+    def update_batch(self, keys: np.ndarray, payloads: np.ndarray
+                     ) -> np.ndarray:
+        """Vectorized in-place payload update of every present key (absent
+        keys are left alone; the returned bool mask says which landed).
+        Semantically ``update`` per present key with last-write-wins on
+        duplicates, but the probe is one ``locate_batch`` masked-advance
+        pass and the writes are two fancy-index stores — no per-key Python
+        loop.  Like ``update``, never relocates: safe on a table shared
+        read-only with device lookups of the same version (inline chain
+        offsets are preserved bit-exactly)."""
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        payloads = np.asarray(payloads, dtype=np.uint64).ravel()
+        if keys.shape != payloads.shape:
+            raise ValueError("keys/payloads must be equal-length")
+        if np.any(payloads > np.uint64(hc.PAYLOAD_MASK)):
+            raise ValueError("payload exceeds 52 bits")
+        found, where = self.locate_batch(keys)
+        if not found.any():
+            return found
+        idx = where[found]
+        pay = payloads[found]
+        # preserve the top 12 offset bits of val_hi (the inline chain link;
+        # always zero for side-array variants) — only payload bits change.
+        # Duplicate keys hit the same bucket: numpy fancy assignment keeps
+        # the LAST occurrence, i.e. last-write-wins, same as the loop.
+        keep = self.val_hi[idx] & np.uint32(0xFFF << hc.PAYLOAD_HI_BITS)
+        self.val_hi[idx] = keep | (
+            (pay >> np.uint64(32)).astype(np.uint32)
+            & np.uint32(hc.PAYLOAD_HI_MASK))
+        self.val_lo[idx] = (pay & np.uint64(hc.MASK32)).astype(np.uint32)
+        self.stats.updates += int(found.sum())
+        return found
 
     def apcl(self, keys: np.ndarray, buckets_per_line: Optional[int] = None,
              separate_offset_array: bool = False) -> float:
@@ -873,18 +920,31 @@ def apply_delta(
     *,
     copy: bool = False,
     load_factor: float = 0.8,
+    assume_new: bool = False,
 ) -> HashTable:
     """Apply an incremental delta (upserts then deletes) to a table.
 
-    The fast path mutates in place — O(delta), not O(rows).  When a
-    placement fails (table full, 12-bit inline offset exhausted, or a
-    coalesced-variant delete) the BuildError contract kicks in: the current
-    residents plus the full delta are rebuilt through ``build_grow``.
-    Either way the returned table holds exactly ``old ∪ upserts − deletes``.
+    The fast path mutates in place — O(delta), not O(rows) — and is
+    numpy-vectorized for the dominant delta shape: upserts of keys the
+    table already holds go through one ``update_batch`` masked-advance
+    probe plus two fancy-index stores instead of a per-key Python loop
+    (ROADMAP "GIL-free delta application": batch updates release the GIL
+    inside numpy, so thread-pooled per-shard delta builds really overlap).
+    Only brand-new keys (placement) and deletes (chain surgery) remain
+    per-key.  When a placement fails (table full, 12-bit inline offset
+    exhausted, or a coalesced-variant delete) the BuildError contract kicks
+    in: the current residents plus the full delta are rebuilt through
+    ``build_grow``.  Either way the returned table holds exactly
+    ``old ∪ upserts − deletes``.
 
     ``copy=True`` leaves ``table`` untouched (copy-on-write for retention
     windows); with ``copy=False`` the caller must adopt the return value —
     after a fallback it is a brand-new, larger table.
+
+    ``assume_new=True`` skips the ``update_batch`` probe: for callers that
+    already classified the delta (the hybrid store upserts only keys its
+    own probe proved absent), re-probing would be pure waste.  Safe even
+    when the assumption is wrong — per-key ``insert`` is itself an upsert.
     """
     upsert_keys = np.asarray(upsert_keys, dtype=np.uint64).ravel()
     upsert_payloads = np.asarray(upsert_payloads, dtype=np.uint64).ravel()
@@ -893,8 +953,21 @@ def apply_delta(
         raise ValueError("upsert keys/payloads must be equal-length")
     t = table.copy() if copy else table
     try:
-        for k, p in zip(upsert_keys, upsert_payloads):
-            t.insert(int(k), int(p))
+        if len(upsert_keys):
+            if assume_new:
+                updated = np.zeros(len(upsert_keys), dtype=bool)
+            else:
+                updated = t.update_batch(upsert_keys, upsert_payloads)
+            if not updated.all():
+                # brand-new keys need placement — per-key, last-write-wins
+                # on duplicates (dict preserves first-seen insert order so
+                # the layout matches the sequential loop's)
+                fresh: dict[int, int] = {}
+                for k, p in zip(upsert_keys[~updated],
+                                upsert_payloads[~updated]):
+                    fresh[int(k)] = int(p)
+                for k, p in fresh.items():
+                    t.insert(k, p)
         for k in delete_keys:
             t.delete(int(k))
         return t

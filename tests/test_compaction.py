@@ -1,0 +1,436 @@
+"""Cold-store compaction: online garbage accounting, bitwise get_batch
+parity across the atomic file+index swap, concurrent-reader stress under
+async compaction (the seqlock must never yield a torn row), clone-chain
+cold-file retention (refcounted generations), and the vectorized
+``update_batch`` fast path that compaction's index remap rides on."""
+import gc
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import hashcore as hc
+from repro.core import neighborhash as nh
+from repro.core.engine import EmbeddingTable, MultiTableEngine
+from repro.core.hybrid_store import HybridKVStore, TIER_MASK
+
+
+def _store(n=200, vb=16, hot_fraction=0.2, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    keys = np.arange(1, n + 1, dtype=np.uint64)
+    vals = rng.integers(0, 255, size=(n, vb), dtype=np.uint8)
+    return keys, vals, HybridKVStore(keys, vals.copy(),
+                                     hot_fraction=hot_fraction, **kw)
+
+
+class TestGarbageAccounting:
+    def test_cow_supersede_and_delete_accrue(self):
+        keys, vals, st = _store(n=100, vb=8)
+        assert st.stats.garbage_bytes == 0
+        assert st.stats.cold_file_bytes == 100 * 8
+        st.upsert_batch(keys[:10], np.full((10, 8), 1, np.uint8),
+                        copy_on_write=True)
+        assert st.stats.garbage_bytes == 10 * 8          # 10 superseded rows
+        assert st.stats.cold_file_bytes == 110 * 8       # file grew by 10
+        st.delete_batch(keys[50:55])
+        assert st.stats.garbage_bytes == 15 * 8          # + 5 orphaned rows
+        assert abs(st.garbage_fraction - 15 / 110) < 1e-12
+
+    def test_in_place_upsert_accrues_nothing(self):
+        keys, vals, st = _store(n=50, vb=8)
+        st.upsert_batch(keys[:10], np.full((10, 8), 2, np.uint8))
+        assert st.stats.garbage_bytes == 0
+        assert st.stats.cold_file_bytes == 50 * 8        # no growth either
+
+    def test_new_key_insert_accrues_nothing(self):
+        keys, vals, st = _store(n=50, vb=8)
+        st.upsert_batch(np.array([9001, 9002], dtype=np.uint64),
+                        np.full((2, 8), 3, np.uint8), copy_on_write=True)
+        assert st.stats.garbage_bytes == 0               # nothing superseded
+        assert st.stats.cold_file_bytes == 52 * 8
+
+
+class TestCompactPass:
+    def test_bitwise_parity_before_after_compact(self):
+        keys, vals, st = _store(n=300, vb=16, seed=1)
+        rng = np.random.default_rng(1)
+        vals = vals.copy()
+        # realistic churn: COW supersedes, deletes, admissions + evictions
+        for _ in range(4):
+            sel = rng.choice(300, 60, replace=False)
+            nv = rng.integers(0, 255, (60, 16), dtype=np.uint8)
+            st.upsert_batch(keys[sel], nv, copy_on_write=True)
+            vals[sel] = nv
+            st.get_batch(rng.choice(keys, 64))           # admission traffic
+            st.maintain(target_free_fraction=0.3)
+        st.delete_batch(keys[:20])
+        live = keys[20:]
+        f_before, rows_before = st.get_batch(live, admit=False)
+        assert f_before.all()
+        old_path = st._cold_path
+        old_rows = st._cold.shape[0]
+        r = st.compact()
+        assert not r["skipped"] and r["live_rows"] == len(live)
+        # bitwise parity, tier flags included
+        f_after, rows_after = st.get_batch(live, admit=False)
+        assert f_after.all()
+        assert (rows_after == rows_before).all()
+        assert (rows_after == vals[20:]).all()
+        f, _ = st.get_batch(keys[:20])
+        assert not f.any()
+        # garbage fully reclaimed, file shrank, old generation unlinked
+        assert st.stats.garbage_bytes == 0
+        assert st.garbage_fraction == 0.0
+        assert st._cold.shape[0] == len(live) < old_rows
+        assert not os.path.exists(old_path)
+        assert os.path.exists(st._cold_path)
+
+    def test_threshold_skip(self):
+        keys, vals, st = _store(n=100, vb=8)
+        st.upsert_batch(keys[:5], np.full((5, 8), 1, np.uint8),
+                        copy_on_write=True)              # gf ~ 5/105
+        r = st.compact(min_garbage_fraction=0.3)
+        assert r["skipped"]
+        assert st.stats.compactions == 0
+        r = st.compact(min_garbage_fraction=0.01)
+        assert not r["skipped"]
+        assert st.stats.compactions == 1
+
+    def test_hot_tier_survives_compact(self):
+        """Hot payloads don't move during the swap; a later eviction flips
+        the key to its REMAPPED cold home slot and the value round-trips."""
+        keys, vals, st = _store(n=120, vb=8, hot_fraction=0.25)
+        hot_key = int(keys[0])                           # built hot
+        ok, payload, _, _ = st.index.probe_trace(hot_key)
+        assert ok and not (payload & TIER_MASK)
+        st.delete_batch(keys[60:80])                     # make garbage
+        st.compact()
+        ok, payload2, _, _ = st.index.probe_trace(hot_key)
+        assert ok and not (payload2 & TIER_MASK)
+        assert int(payload2) == int(payload)             # hot slot untouched
+        st.maintain(target_free_fraction=1.0)            # evict everything
+        f, out = st.get_batch([hot_key], admit=False)
+        assert f.all() and (out[0] == vals[0]).all()
+
+    def test_mutations_after_compact(self):
+        keys, vals, st = _store(n=80, vb=8)
+        st.delete_batch(keys[:30])
+        st.compact()
+        st.upsert_batch(np.array([7777], dtype=np.uint64),
+                        np.full((1, 8), 42, np.uint8), copy_on_write=True)
+        st.upsert_batch(keys[40:45], np.full((5, 8), 43, np.uint8),
+                        copy_on_write=True)
+        f, out = st.get_batch([7777], admit=False)
+        assert f.all() and (out == 42).all()
+        f, out = st.get_batch(keys[40:45], admit=False)
+        assert f.all() and (out == 43).all()
+        st.compact()                                      # and again
+        f, out = st.get_batch(keys[40:45], admit=False)
+        assert f.all() and (out == 43).all()
+
+    def test_compact_empty_store(self):
+        keys, vals, st = _store(n=10, vb=8, hot_fraction=0.0)
+        st.delete_batch(keys)
+        r = st.compact()
+        assert not r["skipped"] and r["live_rows"] == 0
+        f, _ = st.get_batch(keys)
+        assert not f.any()
+
+    def test_async_compaction_thread_start_stop(self):
+        keys, vals, st = _store(n=100, vb=8)
+        with pytest.raises(ValueError):
+            st.start_async_compaction(threshold=0.0)
+        st.start_async_compaction(threshold=0.1, period_s=0.001)
+        st.upsert_batch(keys, np.zeros((100, 8), np.uint8),
+                        copy_on_write=True)              # gf 0.5
+        deadline = 200
+        while st.stats.compactions == 0 and deadline:
+            deadline -= 1
+            threading.Event().wait(0.01)
+        st.stop_async_compaction()
+        assert st.stats.compactions >= 1
+        assert st.garbage_fraction < 0.1
+        f, out = st.get_batch(keys, admit=False)
+        assert f.all() and (out == 0).all()
+
+
+class TestConcurrentReaders:
+    def test_readers_never_see_torn_rows_during_async_compaction(self):
+        """Reader threads hammer get_batch while a writer streams
+        idempotent COW deltas and the async thread compacts: every row
+        returned must be bitwise the (constant) expected value — a torn
+        old/new mix of index and file would fail the compare."""
+        n, vb = 400, 16
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+        vals = np.repeat((keys % 251).astype(np.uint8)[:, None], vb, axis=1)
+        st = HybridKVStore(keys, vals.copy(), hot_fraction=0.1)
+        st.start_async_compaction(threshold=0.15, period_s=0.0005)
+        stop = threading.Event()
+        failures: list[str] = []
+
+        def reader(seed):
+            rng = np.random.default_rng(seed)
+            while not stop.is_set():
+                q = rng.choice(keys, 48)
+                f, out = st.get_batch(q)
+                if not f.all():
+                    failures.append("missing key")
+                    return
+                want = np.repeat((q % np.uint64(251)).astype(np.uint8)[:, None],
+                                 vb, axis=1)
+                if not (out == want).all():
+                    failures.append("torn row")
+                    return
+
+        threads = [threading.Thread(target=reader, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        rng = np.random.default_rng(99)
+        for _ in range(40):
+            sel = rng.choice(n, n // 20, replace=False)
+            st.upsert_batch(keys[sel], vals[sel], copy_on_write=True)
+        stop.set()
+        for t in threads:
+            t.join()
+        st.stop_async_compaction()
+        assert not failures, failures
+        assert st.stats.compactions >= 1, \
+            "stress never actually compacted — threshold/period too lax"
+        st.close()
+
+
+class TestCloneChainRetention:
+    def test_retired_generation_survives_until_last_clone_releases(self):
+        keys, vals, st = _store(n=100, vb=8, seed=3)
+        cl = st.clone()
+        assert st._cold_handle.refs == 2
+        cl.upsert_batch(keys[:30], np.full((30, 8), 9, np.uint8),
+                        copy_on_write=True)
+        gen0 = cl._cold_path
+        cl.compact()
+        # the writer moved to a fresh generation; the parent still serves
+        # from gen0, so gen0 must still exist
+        assert cl._cold_path != gen0
+        assert os.path.exists(gen0)
+        assert os.path.exists(cl._cold_path)
+        f, out = st.get_batch(keys, admit=False)
+        assert f.all() and (out == vals).all()           # parent bitwise
+        f, out = cl.get_batch(keys[:30], admit=False)
+        assert f.all() and (out == 9).all()
+        st.close()                                       # last gen0 holder
+        assert not os.path.exists(gen0)
+        assert os.path.exists(cl._cold_path)
+        cl.close()
+        assert not os.path.exists(cl._cold_path)
+
+    def test_gc_releases_generation_without_explicit_close(self):
+        keys, vals, st = _store(n=50, vb=8)
+        cl = st.clone()
+        cl.delete_batch(keys[:10])
+        old = cl._cold_path
+        cl.compact()
+        assert os.path.exists(old)
+        path_new = cl._cold_path
+        del st
+        gc.collect()                                     # finalizer decrefs
+        assert not os.path.exists(old)
+        del cl
+        gc.collect()
+        assert not os.path.exists(path_new)
+
+    def test_three_generation_chain(self):
+        """base -> clone1 -> clone2, compactions at each step: every live
+        store keeps serving its own version bitwise, and files disappear
+        strictly in release order."""
+        keys, vals, st = _store(n=60, vb=8, seed=4)
+        c1 = st.clone()
+        c1.upsert_batch(keys[:20], np.full((20, 8), 1, np.uint8),
+                        copy_on_write=True)
+        c1.compact()
+        c2 = c1.clone()
+        c2.upsert_batch(keys[20:40], np.full((20, 8), 2, np.uint8),
+                        copy_on_write=True)
+        p1 = c2._cold_path
+        c2.compact()
+        # three distinct generations on disk
+        paths = {st._cold_path, c1._cold_path, c2._cold_path}
+        assert len(paths) == 3
+        assert all(os.path.exists(p) for p in paths)
+        assert p1 == c1._cold_path                       # c2 left c1's gen
+        f, out = st.get_batch(keys, admit=False)
+        assert f.all() and (out == vals).all()
+        f, out = c1.get_batch(keys[:20], admit=False)
+        assert f.all() and (out == 1).all()
+        f, out = c2.get_batch(keys[20:40], admit=False)
+        assert f.all() and (out == 2).all()
+        base_path = st._cold_path
+        st.close()
+        assert not os.path.exists(base_path)
+        assert os.path.exists(c1._cold_path)
+        c1.close()
+        c2.close()
+        assert not any(os.path.exists(p) for p in paths)
+
+    def test_parent_and_clone_compactions_never_collide(self):
+        """Regression: generation filenames must be unique across a clone
+        chain sharing one cold_dir.  A per-store generation counter let a
+        retired parent (e.g. its still-running async-compaction thread)
+        and its clone both mint cold.gen1.bin — the second memmap("w+")
+        zero-truncated the first store's LIVE file, and the duplicate
+        handles unlinked each other's generation on release."""
+        keys, vals, st = _store(n=80, vb=8, seed=6)
+        st.upsert_batch(keys[:30], np.full((30, 8), 5, np.uint8),
+                        copy_on_write=True)              # parent garbage
+        cl = st.clone()                                  # parent retired
+        st.compact()                                     # retired parent
+        cl.upsert_batch(keys[30:50], np.full((20, 8), 6, np.uint8),
+                        copy_on_write=True)
+        cl.compact()
+        assert st._cold_path != cl._cold_path
+        f, out = st.get_batch(keys[:30], admit=False)
+        assert f.all() and (out == 5).all()              # parent intact
+        f, out = cl.get_batch(keys[30:50], admit=False)
+        assert f.all() and (out == 6).all()
+        cl.close()                                       # must not kill
+        f, out = st.get_batch(keys[:30], admit=False)    # the parent's gen
+        assert f.all() and (out == 5).all()
+        assert os.path.exists(st._cold_path)
+        st.close()
+
+    def test_engine_retained_version_bitwise_after_compaction(self):
+        """The serving-stack version: publish_delta generations accumulate
+        garbage in the shared cold file; engine.compact() rewrites the
+        latest store while the retention window's PREVIOUS version keeps
+        answering pinned queries bitwise from the retired generation."""
+        rng = np.random.default_rng(5)
+        n, vb = 300, 16
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+        vals = rng.integers(0, 255, (n, vb), dtype=np.uint8)
+        eng = MultiTableEngine(
+            embeddings=[EmbeddingTable("emb", keys, vals, hot_fraction=0.1)],
+            retain=2, version=1)
+        v2 = rng.integers(0, 255, (n // 2, vb), dtype=np.uint8)
+        eng.publish_delta(2, {"emb": (keys[: n // 2], v2)})
+        r = eng.compact(min_garbage_fraction=0.0)
+        assert r["stores_compacted"] == 1
+        assert r["reclaimed_bytes"] > 0
+        # latest version serves the delta rows from the fresh generation
+        res = eng.query({"emb": keys}, version=2, strict=True)
+        assert res["emb"].found.all()
+        assert (res["emb"].values[: n // 2] == v2).all()
+        assert (res["emb"].values[n // 2:] == vals[n // 2:]).all()
+        # retained v1 still bitwise-original, served from the retired file
+        res1 = eng.query({"emb": keys}, version=1, strict=True)
+        assert res1["emb"].found.all()
+        assert (res1["emb"].values == vals).all()
+
+
+class TestStoreBackendCompaction:
+    def test_apply_update_triggers_threshold_compaction(self):
+        from repro.api import StoreBackend, UpdateRequest
+        keys, vals, st = _store(n=100, vb=8)
+        backend = StoreBackend({"t": st}, version=1, compact_threshold=0.3)
+        # deletes orphan rows in place; stream them until the threshold
+        # trips and apply_update's trailing pass reclaims the file
+        backend.apply_update(UpdateRequest(
+            version=2, deletes={"t": keys[:20]}))        # gf 0.2: no pass
+        assert st.stats.compactions == 0
+        backend.apply_update(UpdateRequest(
+            version=3, deletes={"t": keys[20:40]}))      # gf 0.4: compacts
+        assert st.stats.compactions == 1
+        assert st.garbage_fraction < 0.3
+        assert st._cold.shape[0] == 60
+        f, out = st.get_batch(keys[40:], admit=False)
+        assert f.all() and (out == vals[40:]).all()
+
+    def test_invalid_threshold_rejected(self):
+        from repro.api import StoreBackend
+        _, _, st = _store(n=10, vb=8)
+        with pytest.raises(ValueError, match="compact_threshold"):
+            StoreBackend({"t": st}, compact_threshold=0.0)
+
+
+# ---------------------------------------------------------------------------
+# vectorized update_batch / locate_batch (the apply_delta fast path and
+# compaction's index remap) — differential vs the per-key loop
+# ---------------------------------------------------------------------------
+class TestUpdateBatchParity:
+    @pytest.mark.parametrize("variant", nh.VARIANTS)
+    def test_update_batch_matches_per_key_update(self, variant):
+        keys, payloads = nh.random_kv(500, seed=21)
+        t_vec = nh.build_grow(keys, payloads, variant=variant,
+                              load_factor=0.7)
+        t_ref = t_vec.copy()
+        rng = np.random.default_rng(21)
+        sel = rng.choice(len(keys), 200, replace=False)
+        new_p = rng.integers(0, hc.PAYLOAD_MASK, 200).astype(np.uint64)
+        missing = np.arange(10**9, 10**9 + 50, dtype=np.uint64)
+        mixed = np.concatenate([keys[sel], missing])
+        mixed_p = np.concatenate(
+            [new_p, rng.integers(0, hc.PAYLOAD_MASK, 50).astype(np.uint64)])
+        found = t_vec.update_batch(mixed, mixed_p)
+        assert found[:200].all() and not found[200:].any()
+        for k, p in zip(keys[sel], new_p):
+            t_ref.update(int(k), int(p))
+        for arr in ("key_hi", "key_lo", "val_hi", "val_lo"):
+            assert (getattr(t_vec, arr) == getattr(t_ref, arr)).all(), arr
+        if t_vec.next_idx is not None:
+            assert (t_vec.next_idx == t_ref.next_idx).all()
+
+    @pytest.mark.parametrize("variant", nh.VARIANTS)
+    def test_duplicate_keys_last_write_wins(self, variant):
+        keys, payloads = nh.random_kv(100, seed=3)
+        t = nh.build_grow(keys, payloads, variant=variant)
+        dup = np.array([keys[0], keys[1], keys[0]], dtype=np.uint64)
+        pay = np.array([11, 22, 33], dtype=np.uint64)
+        t.update_batch(dup, pay)
+        f, p = t.lookup_host(np.array([keys[0], keys[1]], dtype=np.uint64))
+        assert f.all() and p[0] == 33 and p[1] == 22
+
+    def test_update_batch_validates_payload_width(self):
+        keys, payloads = nh.random_kv(50, seed=4)
+        t = nh.build_grow(keys, payloads)
+        with pytest.raises(ValueError):
+            t.update_batch(keys[:1],
+                           np.array([1 << 60], dtype=np.uint64))
+
+    @pytest.mark.parametrize("variant", nh.VARIANTS)
+    def test_locate_batch_matches_probe_trace(self, variant):
+        keys, payloads = nh.random_kv(300, seed=5)
+        t = nh.build_grow(keys, payloads, variant=variant, load_factor=0.7)
+        q = np.concatenate([keys[::3],
+                            np.arange(10**8, 10**8 + 40, dtype=np.uint64)])
+        found, where = t.locate_batch(q)
+        for i, k in enumerate(q):
+            ok, _, visited, _ = t.probe_trace(int(k))
+            assert found[i] == ok
+            if ok:
+                assert where[i] == visited[-1]
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: bench acceptance (slow lane) — cold-file bytes bounded under a
+# sustained 1% COW delta stream with compaction on, monotonic without
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_bench_resource_compaction_acceptance():
+    r = subprocess.run(
+        [sys.executable, "benchmarks/bench_resource.py", "--compaction",
+         "--quick"],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert r.returncode == 0, r.stderr[-3000:]
+    rows = {ln.split(",")[0]: ln for ln in r.stdout.splitlines()}
+    on = rows.get("t5_compaction_on", "")
+    off = rows.get("t5_compaction_off", "")
+    assert on and off, r.stdout[-2000:]
+    assert "bounded=1" in on, on
+    assert "monotonic=1" in off, off
+    max_gf = float(on.split("max_gf_after=")[1].split(";")[0])
+    assert max_gf < 0.3, on                # below threshold after each pass
+    assert int(on.split("compactions=")[1].split(";")[0]) >= 1, on

@@ -1,0 +1,60 @@
+"""Docs stay honest: the reader-facing markdown set exists, relative links
+resolve (tools/check_docs.py, the same gate CI's docs job runs), and the
+README quickstart snippet executes (slow lane)."""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(REPO, "tools", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_doc_set_exists():
+    for rel in ("README.md", "docs/architecture.md", "docs/serving.md",
+                "benchmarks/README.md"):
+        assert os.path.exists(os.path.join(REPO, rel)), f"missing {rel}"
+
+
+def test_relative_links_resolve():
+    cd = _checker()
+    assert cd.doc_files(), "doc scan found nothing"
+    errors = cd.check_links()
+    assert not errors, "\n".join(errors)
+
+
+def test_roadmap_serving_links_to_docs():
+    """ROADMAP's Serving section defers to docs/serving.md instead of
+    duplicating the guide (ISSUE 5 satellite)."""
+    with open(os.path.join(REPO, "ROADMAP.md"), encoding="utf-8") as f:
+        text = f.read()
+    assert "docs/serving.md" in text
+
+
+def test_slug_rules():
+    cd = _checker()
+    assert cd.github_slug("Architecture map") == "architecture-map"
+    assert cd.github_slug("## `core/` — storage".lstrip("# ")) \
+        == "core--storage"
+    assert cd.github_slug("Tests") == "tests"
+
+
+@pytest.mark.slow
+def test_readme_quickstart_snippet_runs():
+    r = subprocess.run(
+        [sys.executable, os.path.join("tools", "check_docs.py"),
+         "--snippet"],
+        capture_output=True, text=True, timeout=600, cwd=REPO,
+        env={"PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "snippet OK" in r.stdout

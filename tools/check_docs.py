@@ -1,0 +1,123 @@
+"""Docs gate: broken-relative-link check + README quickstart smoke.
+
+Scans README.md, benchmarks/README.md, and docs/**.md for markdown links;
+every relative link must resolve to an existing file (and, for ``.md``
+targets with ``#anchors``, to a real heading).  ``--snippet`` additionally
+extracts the first fenced ```python block from README.md and runs it as a
+subprocess — the copy-pasteable quickstart must actually work.
+
+Run:  python tools/check_docs.py [--snippet]
+Exit: nonzero on any broken link or a failing snippet.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def doc_files() -> list[str]:
+    files = []
+    for name in ("README.md", os.path.join("benchmarks", "README.md")):
+        path = os.path.join(REPO, name)
+        if os.path.exists(path):
+            files.append(path)
+    docs = os.path.join(REPO, "docs")
+    for dirpath, _, names in os.walk(docs):
+        files.extend(os.path.join(dirpath, n) for n in sorted(names)
+                     if n.endswith(".md"))
+    return files
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code, lowercase, drop
+    punctuation, spaces -> hyphens."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # linked headings
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_path: str) -> set[str]:
+    with open(md_path, encoding="utf-8") as f:
+        return {github_slug(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check_links() -> list[str]:
+    errors = []
+    for path in doc_files():
+        rel = os.path.relpath(path, REPO)
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks may contain dict[str, ...] etc. that look
+        # like links to the regex — strip them before scanning
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        for target in LINK_RE.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            target, _, anchor = target.partition("#")
+            if not target:                                  # same-file #x
+                dest = path
+            else:
+                dest = os.path.normpath(os.path.join(base, target))
+                if not os.path.exists(dest):
+                    errors.append(f"{rel}: broken link -> {target}")
+                    continue
+            if anchor and dest.endswith(".md"):
+                if anchor not in anchors_of(dest):
+                    errors.append(
+                        f"{rel}: broken anchor -> {target}#{anchor}")
+    return errors
+
+
+def run_snippet() -> int:
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
+        m = FENCE_RE.search(f.read())
+    if not m:
+        print("check_docs: no ```python block in README.md", file=sys.stderr)
+        return 1
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run([sys.executable, "-c", m.group(1)], env=env,
+                       cwd=REPO, capture_output=True, text=True)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr)
+    if r.returncode:
+        print(f"check_docs: README quickstart snippet failed "
+              f"(exit {r.returncode})", file=sys.stderr)
+    return r.returncode
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snippet", action="store_true",
+                    help="also run the README quickstart snippet")
+    args = ap.parse_args()
+    errors = check_links()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    n_files = len(doc_files())
+    if not errors:
+        print(f"check_docs: links OK across {n_files} markdown files")
+    rc = 1 if errors else 0
+    if args.snippet and rc == 0:
+        rc = run_snippet()
+        if rc == 0:
+            print("check_docs: README quickstart snippet OK")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
