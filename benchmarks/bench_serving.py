@@ -100,7 +100,7 @@ def _drive(n_clients: int, n_requests: int, keys: np.ndarray, fn):
 
 def main(quick: bool = False) -> None:
     n_items = 20_000 if quick else 100_000
-    n_requests = 30 if quick else 60
+    n_requests = 60
     client_counts = (1, 8) if quick else (1, 4, 8, 16)
     key_budgets = (2048, 8192) if quick else (1024, 4096, 16384)
     max_clients = max(client_counts)
@@ -119,17 +119,23 @@ def main(quick: bool = False) -> None:
             for _ in range(2):
                 _drive(max_clients, n_requests, keys, warm_client.query)
 
-    naive_qps = {}
-    for c in client_counts:
-        wall, lats = _drive(c, n_requests, keys, direct.query)
-        qps = c * n_requests / wall
-        naive_qps[c] = qps
-        common.row(f"serving/naive_c{c}", np.median(lats) * 1e3,
-                   f"qps={qps:.0f} p99={np.percentile(lats, 99):.1f}ms")
-
+    # paired design: each client count measures its naive baseline
+    # (median of three trials) immediately before its coalesced configs,
+    # so the speedup ratio compares adjacent-in-time runs — a baseline
+    # taken minutes earlier on a shared/1-core box drifts enough to
+    # dominate the ratio
     best_8plus = 0.0
-    for key_budget in key_budgets:
-        for c in client_counts:
+    for c in client_counts:
+        trials = []
+        for _ in range(3):
+            wall, lats = _drive(c, n_requests, keys, direct.query)
+            trials.append((c * n_requests / wall, lats))
+        trials.sort(key=lambda t: t[0])
+        naive_qps, lats = trials[1]
+        common.row(f"serving/naive_c{c}", np.median(lats) * 1e3,
+                   f"qps={naive_qps:.0f} "
+                   f"p99={np.percentile(lats, 99):.1f}ms")
+        for key_budget in key_budgets:
             server = QueryServer(engine,
                                  BatchPolicy(max_batch_keys=key_budget,
                                              max_wait_s=0.003))
@@ -140,7 +146,7 @@ def main(quick: bool = False) -> None:
             snap = server.stats_snapshot()
             server.close()
             qps = c * n_requests / wall
-            speedup = qps / naive_qps[c]
+            speedup = qps / naive_qps
             if c >= 8:
                 best_8plus = max(best_8plus, speedup)
             common.row(
@@ -150,8 +156,10 @@ def main(quick: bool = False) -> None:
                 f"p99={np.percentile(lats, 99):.1f}ms "
                 f"occupancy={snap.mean_occupancy:.1f} "
                 f"coalesce={snap.coalesce_rate:.0%}")
+    import os
     common.row("serving/acceptance_8clients",
-               0.0, f"best_speedup={best_8plus:.2f}x (target >= 2x)")
+               0.0, f"best_speedup={best_8plus:.2f}x (target >= 2x) "
+                    f"cores={os.cpu_count()}")
 
 
 # ---------------------------------------------------------------------------
@@ -280,9 +288,98 @@ def main_qos(quick: bool = False) -> None:
         f"ranking_strictly_better={ok}")
 
 
+# ---------------------------------------------------------------------------
+# fabric sweep: multi-process shard scaling (serve/fabric.Router)
+# ---------------------------------------------------------------------------
+def main_fabric(quick: bool = False) -> None:
+    """qps vs shard-process count through the multi-process fabric.
+
+    Same client shape as the coalescing sweep, but the backend is a
+    ``Router`` over real shard-server processes (1 replica each — this
+    measures shard parallelism, not replica failover).  Scaling needs
+    actual cores: on a starved box the rows still print (the fabric must
+    WORK anywhere) but the acceptance row notes the core count, and the
+    hard >=2.5x gate lives in tests/test_fabric.py behind a cpu-count
+    skip."""
+    import os
+    import shutil
+    import tempfile
+
+    from repro.api import as_backend
+    from repro.core.query_types import EmbeddingTable
+    from repro.serve.fabric import Router, FabricConfig
+
+    n_items = 20_000 if quick else 100_000
+    n_requests = 15 if quick else 40
+    n_clients = 4 if quick else 8
+    keys_per_request = 512
+
+    rng = np.random.default_rng(0)
+    keys = np.arange(1, n_items + 1, dtype=np.uint64)
+    values = rng.integers(0, 255, (n_items, 32), dtype=np.uint8)
+    table = EmbeddingTable("item_emb", keys, values, hot_fraction=0.2,
+                           variant="neighborhash")
+
+    def make_requests(seed: int, n: int):
+        prng = np.random.default_rng(seed)
+        return [{"item_emb": keys[zipf_ids(prng, len(keys),
+                                           keys_per_request)
+                                  .astype(np.int64)]}
+                for _ in range(n)]
+
+    qps_by_shards = {}
+    for n_shards in (1, 2, 4):
+        root = tempfile.mkdtemp(prefix=f"bench-fabric-s{n_shards}-")
+        cfg = FabricConfig(n_shards=n_shards, n_replicas=1,
+                           snapshot_root=root, respawn=False)
+        router = Router.build([table], cfg)
+        try:
+            client = FeatureClient(as_backend(router))
+            reqs = [make_requests(1000 + c, n_requests)
+                    for c in range(n_clients)]
+            for req in reqs[0][:4]:                    # warmup
+                client.query(req)
+            lats: list[float] = []
+            lock = threading.Lock()
+
+            def worker(c: int):
+                mine = []
+                for req in reqs[c]:
+                    t0 = time.perf_counter()
+                    client.query(req)
+                    mine.append((time.perf_counter() - t0) * 1e3)
+                with lock:
+                    lats.extend(mine)
+
+            threads = [threading.Thread(target=worker, args=(c,))
+                       for c in range(n_clients)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            qps = n_clients * n_requests / wall
+            qps_by_shards[n_shards] = qps
+            common.row(f"serving/fabric_s{n_shards}",
+                       np.median(lats) * 1e3,
+                       f"qps={qps:.0f} "
+                       f"p99={np.percentile(lats, 99):.1f}ms "
+                       f"replicas=1 clients={n_clients}")
+        finally:
+            router.close()
+            shutil.rmtree(root, ignore_errors=True)
+    scaling = qps_by_shards[4] / qps_by_shards[1]
+    common.row("serving/fabric_acceptance", 0.0,
+               f"scaling_1to4={scaling:.2f}x (target >= 2.5x with >= 4 "
+               f"cores; this box has {os.cpu_count()})")
+
+
 if __name__ == "__main__":
     print("name,us_per_call,derived")
     if "--qos" in sys.argv:
         main_qos(quick=True)
+    elif "--fabric" in sys.argv:
+        main_fabric(quick=True)
     else:
         main(quick=True)

@@ -24,7 +24,20 @@ def block(x):
     return jax.block_until_ready(x)
 
 
+# rows since the last drain — run.py drains per suite into BENCH_<alias>.json
+_captured: list[dict] = []
+
+
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.2f},{derived}"
+    _captured.append({"name": name, "us_per_call": round(us_per_call, 2),
+                      "derived": derived})
     print(line, flush=True)
     return line
+
+
+def drain_rows() -> list[dict]:
+    """Return and clear the rows captured since the last drain."""
+    out = list(_captured)
+    _captured.clear()
+    return out

@@ -1,8 +1,14 @@
 """Benchmark harness — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks datasets."""
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks datasets.
+``--records-dir DIR`` additionally writes one ``BENCH_<alias>.json`` per
+suite run (rows + timing + outcome) — the machine-readable record CI
+uploads as an artifact, so a perf regression is diffable across commits
+without scraping logs."""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -11,10 +17,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv,qos")
+                    help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv,"
+                         "qos,fab")
+    ap.add_argument("--records-dir", default=None,
+                    help="write BENCH_<alias>.json per suite here")
     args = ap.parse_args()
 
-    from benchmarks import (bench_scalar_tables, bench_size_sweep,
+    from benchmarks import (common, bench_scalar_tables, bench_size_sweep,
                             bench_ablation, bench_batch_latency,
                             bench_vectorization, bench_consistency,
                             bench_resource, bench_multitable,
@@ -31,21 +40,37 @@ def main() -> None:
         "inc": bench_incremental.main,
         "srv": bench_serving.main,
         "qos": bench_serving.main_qos,
+        "fab": bench_serving.main_fabric,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
+    if args.records_dir:
+        os.makedirs(args.records_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
     for key, fn in suites.items():
         if key not in only:
             continue
         t0 = time.time()
+        common.drain_rows()                        # suite-local capture
+        ok, error = True, None
         try:
             fn(quick=args.quick)
         except Exception as e:     # noqa: BLE001
             failures += 1
+            ok, error = False, f"{type(e).__name__}: {e}"
             print(f"{key}_SUITE_FAILED,0,{type(e).__name__}:{e}",
                   flush=True)
-        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        duration = time.time() - t0
+        if args.records_dir:
+            record = {"alias": key, "quick": bool(args.quick),
+                      "unix_time": int(t0), "duration_s": round(duration, 3),
+                      "ok": ok, "rows": common.drain_rows()}
+            if error:
+                record["error"] = error
+            path = os.path.join(args.records_dir, f"BENCH_{key}.json")
+            with open(path, "w") as f:
+                json.dump(record, f, indent=1)
+        print(f"# {key} done in {duration:.1f}s", file=sys.stderr)
     if failures:
         sys.exit(1)
 

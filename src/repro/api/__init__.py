@@ -8,10 +8,14 @@ reproduction grew so far:
                    (``RANKING > RETRIEVAL > PREFETCH``) and consistency
                    requirement (``latest`` / ``pinned`` / ``hinted`` /
                    ``min_version``);
-  - ``backends`` — the ``BatchQueryBackend`` protocol plus its three
+  - ``backends`` — the ``BatchQueryBackend`` protocol plus its four
                    implementations: ``EngineBackend`` (MultiTableEngine),
-                   ``StoreBackend`` (standalone HybridKVStore tables), and
-                   ``ClusterBackend`` (ClusterSim replica fleets);
+                   ``StoreBackend`` (standalone HybridKVStore tables),
+                   ``ClusterBackend`` (ClusterSim replica fleets), and
+                   ``FabricBackend`` (the multi-process serving fabric's
+                   ``serve/fabric.Router``);
+  - ``wire``     — the pickle-free framed byte encoding these types use to
+                   cross the fabric's process boundaries;
   - ``client``   — ``FeatureClient``, the session object every caller now
                    uses instead of raw-dict ``QueryServer.submit``; it
                    fronts either a ``QueryServer`` (QoS-laned concurrent
@@ -24,11 +28,13 @@ class-aware shedding (PREFETCH shed before RANKING under backpressure).
 from repro.api.types import (Consistency, ConsistencyError, QoSClass,
                              QueryRequest, QueryResponse, UpdateRequest)
 from repro.api.backends import (BatchQueryBackend, ClusterBackend,
-                                EngineBackend, StoreBackend, as_backend)
+                                EngineBackend, FabricBackend, StoreBackend,
+                                as_backend)
 from repro.api.client import FeatureClient
 
 __all__ = [
     "BatchQueryBackend", "ClusterBackend", "Consistency", "ConsistencyError",
-    "EngineBackend", "FeatureClient", "QoSClass", "QueryRequest",
-    "QueryResponse", "StoreBackend", "UpdateRequest", "as_backend",
+    "EngineBackend", "FabricBackend", "FeatureClient", "QoSClass",
+    "QueryRequest", "QueryResponse", "StoreBackend", "UpdateRequest",
+    "as_backend",
 ]

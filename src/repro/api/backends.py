@@ -24,17 +24,26 @@ backend-agnostic.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import shutil
+import sys
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.api.types import QueryResult, TableResult, UpdateRequest
-from repro.core.engine import MultiTableEngine, VersionEvictedError
+from repro.api.types import (Consistency, QueryRequest, QueryResult,
+                             TableResult, UpdateRequest)
+# NOT repro.core.engine: backends must import jax-free so a shard-server
+# process (serve/fabric.py) can serve a StoreBackend without the engine's
+# jax import; EngineBackend imports the engine lazily
+from repro.core.query_types import VersionEvictedError
 from repro.core.hybrid_store import HybridKVStore
 
 __all__ = ["BatchQueryBackend", "ClusterBackend", "EngineBackend",
-           "StoreBackend", "as_backend"]
+           "FabricBackend", "StoreBackend", "as_backend"]
 
 
 @runtime_checkable
@@ -66,7 +75,7 @@ class EngineBackend:
 
     name = "engine"
 
-    def __init__(self, engine: MultiTableEngine):
+    def __init__(self, engine):
         self.engine = engine
 
     @property
@@ -250,6 +259,70 @@ class StoreBackend:
             self.stores[name].compact(
                 min_garbage_fraction=self.compact_threshold)
 
+    def bump_version(self, version: int) -> None:
+        """Adopt a newer version with no local data change.  A sharded
+        fleet needs this: a fleet-wide delta may route zero rows to some
+        shard, yet every shard must still serve the new fleet version or
+        pinned sub-queries to it would NACK forever.  Plain ``UpdateRequest``
+        deliberately rejects the empty delta — the phantom-generation
+        guard — so the epoch adoption is its own explicit face."""
+        version = int(version)
+        with self._update_lock:
+            if version <= self._version:
+                raise ValueError(
+                    f"bump to {version} must exceed the live version "
+                    f"{self._version} (versions are monotonic)")
+            self._version = version
+
+    # -- snapshot/restore (the fabric's respawn substrate) ---------------
+    SNAPSHOT_FORMAT = 1
+
+    def snapshot_to(self, path: str) -> int:
+        """Write an atomic on-disk snapshot: one ``table_<name>`` store
+        snapshot per table plus ``meta.json`` carrying the version the
+        rows belong to.  Taken under the update lock, so the (rows,
+        version) pair is exactly what a query at that instant would have
+        been served.  Returns the snapshotted version.
+
+        The write lands in ``<path>.tmp`` and renames into place, so a
+        crash mid-snapshot can never leave a half-written directory where
+        a respawning replica would look."""
+        path = os.fspath(path)
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        with self._update_lock:
+            version = self._version
+            for name, store in self.stores.items():
+                store.save(os.path.join(tmp, f"table_{name}"))
+            meta = {"format": self.SNAPSHOT_FORMAT, "version": version,
+                    "tables": sorted(self.stores)}
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+        return version
+
+    @classmethod
+    def load_snapshot(cls, path: str, *,
+                      compact_threshold: float = 0.3) -> "StoreBackend":
+        """Reconstruct a backend from ``snapshot_to`` output: every table
+        round-trips bitwise (see ``HybridKVStore.load``) and the backend
+        resumes at the snapshotted version."""
+        path = os.fspath(path)
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        if meta.get("format") != cls.SNAPSHOT_FORMAT:
+            raise ValueError(f"unsupported snapshot format "
+                             f"{meta.get('format')!r} at {path}")
+        stores = {name: HybridKVStore.load(os.path.join(path,
+                                                        f"table_{name}"))
+                  for name in meta["tables"]}
+        return cls(stores, version=meta["version"],
+                   compact_threshold=compact_threshold)
+
 
 # ---------------------------------------------------------------------------
 # ClusterSim replica fleets
@@ -341,12 +414,88 @@ class ClusterBackend:
 
 
 # ---------------------------------------------------------------------------
+# multi-process fabric (serve/fabric.Router)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _FabricInflight:
+    future: object                       # Future[(QueryResponse, fan info)]
+    keys_requested: int
+    # filled by finish() from the router's fan-out accounting; the server
+    # reads them only after finish returns
+    keys_deviceside: int = 0
+    launches: int = 0
+
+
+class FabricBackend:
+    """A ``serve/fabric.Router`` behind the protocol, so a ``QueryServer``
+    (or a direct ``FeatureClient``) can front a whole multi-process shard
+    fleet exactly like it fronts one engine.  ``begin`` dispatches the
+    router fan-out on a pool thread (the router blocks on shard-process
+    round trips — that wait must not serialize the caller's pipeline);
+    ``finish`` blocks on the merged response.
+
+    Duck-typed against the router (``query_ex``/``apply_update``/
+    ``fleet_version``/``table_names``) rather than importing it: ``api``
+    must not depend on ``serve``."""
+
+    name = "fabric"
+
+    def __init__(self, router, *, workers: int = 4):
+        for attr in ("query_ex", "apply_update", "fleet_version",
+                     "table_names"):
+            if not hasattr(router, attr):
+                raise TypeError(f"router lacks .{attr}; expected a "
+                                f"serve.fabric.Router")
+        self.router = router
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="fabric-begin")
+
+    @property
+    def latest_version(self) -> int:
+        return self.router.fleet_version
+
+    @property
+    def table_names(self) -> list[str]:
+        return self.router.table_names
+
+    def begin(self, tables, *, version=None, strict=False):
+        if version is None:
+            consistency = Consistency.latest()
+        elif strict:
+            consistency = Consistency.pinned(version)
+        else:
+            consistency = Consistency.hinted(version)
+        req = QueryRequest(tables=tables, consistency=consistency)
+        return _FabricInflight(
+            future=self._pool.submit(self.router.query_ex, req),
+            keys_requested=req.n_keys)
+
+    def finish(self, inflight: _FabricInflight) -> QueryResult:
+        response, info = inflight.future.result()
+        inflight.keys_deviceside = info.get("keys_deviceside",
+                                            inflight.keys_requested)
+        inflight.launches = info.get("launches", 1)
+        return QueryResult(version=response.version,
+                           tables=response.tables)
+
+    def apply_update(self, update: UpdateRequest) -> None:
+        self.router.apply_update(update)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+
+
+# ---------------------------------------------------------------------------
 def as_backend(target) -> BatchQueryBackend:
     """Coerce a storage object to the protocol: engines and sims wrap in
     their adapters; anything already satisfying the protocol passes
     through.  Bare ``HybridKVStore``s need an explicit ``StoreBackend``
     (the protocol needs a table name the store doesn't carry)."""
-    if isinstance(target, MultiTableEngine):
+    # engine check via sys.modules, not an import: if repro.core.engine was
+    # never imported in this process, target cannot be an engine — and
+    # importing it here would drag jax into jax-free shard-server processes
+    eng_mod = sys.modules.get("repro.core.engine")
+    if eng_mod is not None and isinstance(target, eng_mod.MultiTableEngine):
         return EngineBackend(target)
     if isinstance(target, HybridKVStore):
         raise TypeError("wrap bare stores with a name: "
@@ -354,6 +503,8 @@ def as_backend(target) -> BatchQueryBackend:
     if hasattr(target, "replicas") and getattr(target, "engine", None) \
             is not None:
         return ClusterBackend(target)
+    if hasattr(target, "fleet_version") and hasattr(target, "query"):
+        return FabricBackend(target)          # serve/fabric.Router
     if isinstance(target, BatchQueryBackend):
         return target
     raise TypeError(f"{type(target).__name__} is not a BatchQueryBackend "

@@ -22,8 +22,10 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.engine import (EmbeddingTable, QueryResult, ScalarTable,
-                               TableResult)
+# jax-free on purpose: the wire codec and shard-server processes import the
+# protocol types without dragging in the engine (core/query_types.py)
+from repro.core.query_types import (EmbeddingTable, QueryResult, ScalarTable,
+                                    TableResult)
 
 __all__ = [
     "Consistency", "ConsistencyError", "QoSClass", "QueryRequest",

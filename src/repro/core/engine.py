@@ -41,33 +41,14 @@ from repro.core import hashcore as hc
 from repro.core import lookup as lk
 from repro.core import neighborhash as nh
 from repro.core.hybrid_store import HybridKVStore
+# re-exported for compatibility: these lived here before the fabric moved
+# them to the jax-free core/query_types.py (shard-server processes import
+# the serving path without paying the jax import)
+from repro.core.query_types import (EmbeddingTable,  # noqa: F401
+                                    QueryResult, ScalarTable, TableResult,
+                                    VersionEvictedError)
 from repro.core.sharding import ShardPlan, TableSpec, plan_shards
 from repro.core.versioning import VersionWindow
-
-
-# ---------------------------------------------------------------------------
-# table specs
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class ScalarTable:
-    """Attribute table: uint64 key -> <=52-bit payload."""
-    name: str
-    keys: np.ndarray
-    payloads: np.ndarray
-    variant: str = "neighborhash"
-    load_factor: float = 0.8
-
-
-@dataclasses.dataclass(frozen=True)
-class EmbeddingTable:
-    """Value table: uint64 key -> uint8[value_bytes] row.  ``hot_fraction``
-    1.0 keeps every row in memory; below 1.0 the tail lives in the simulated
-    NVMe tier (core/hybrid_store.py)."""
-    name: str
-    keys: np.ndarray
-    values: np.ndarray            # uint8 [n, value_bytes]
-    hot_fraction: float = 1.0
-    variant: str = "neighborhash"
 
 
 @dataclasses.dataclass
@@ -89,22 +70,6 @@ class EngineStats:
         if not self.keys_requested:
             return 0.0
         return 1.0 - self.keys_deviceside / self.keys_requested
-
-
-@dataclasses.dataclass
-class TableResult:
-    found: np.ndarray             # bool [n_request_keys]
-    payloads: Optional[np.ndarray] = None   # uint64, scalar tables
-    values: Optional[np.ndarray] = None     # uint8 [n, vb], embedding tables
-
-
-@dataclasses.dataclass
-class QueryResult:
-    version: int
-    tables: dict[str, TableResult]
-
-    def __getitem__(self, name: str) -> TableResult:
-        return self.tables[name]
 
 
 # ---------------------------------------------------------------------------
@@ -353,10 +318,6 @@ class _InflightBatch:
     @property
     def keys_deviceside(self) -> int:
         return self.staged.keys_deviceside
-
-
-class VersionEvictedError(KeyError):
-    """Strict query pinned a version no longer in the retention window."""
 
 
 # shared executor for per-shard delta builds: publish_delta runs at rolling-

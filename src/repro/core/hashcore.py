@@ -28,7 +28,23 @@ from __future__ import annotations
 
 import numpy as np
 
-import jax.numpy as jnp
+
+class _LazyJnp:
+    """Defers ``import jax.numpy`` to first use of a jnp-flavour function.
+
+    The int/numpy flavours above carry the serving fabric's shard-server
+    processes, which must boot without paying (or having) the jax import;
+    engine/kernel code touches the jnp flavours only after importing jax
+    itself, so nothing observes the indirection.
+    """
+
+    def __getattr__(self, name):
+        import jax.numpy as jnp_mod
+        globals()["jnp"] = jnp_mod     # swap the real module in
+        return getattr(jnp_mod, name)
+
+
+jnp = _LazyJnp()
 
 # ---------------------------------------------------------------------------
 # constants

@@ -22,7 +22,9 @@ translates observed IO counts into modeled NVMe/DDR time for benchmarks.
 from __future__ import annotations
 
 import itertools
+import json
 import os
+import shutil
 import tempfile
 import threading
 import weakref
@@ -180,6 +182,10 @@ class HybridKVStore:
         # or get lost against — the long-held update-path _lock
         self._stats_lock = threading.Lock()
         self._retired = False           # True once a clone() owns the writes
+        # guards background-thread start/stop: start_async_* must be
+        # idempotent under concurrent callers, and it must not ride the
+        # update-path _lock (stop joins a loop that takes _lock)
+        self._threads_lock = threading.Lock()
         self._evict_thread: Optional[threading.Thread] = None
         self._evict_stop = threading.Event()
         self._compact_thread: Optional[threading.Thread] = None
@@ -334,26 +340,49 @@ class HybridKVStore:
             return evicted
 
     def start_async_eviction(self, period_s: float = 0.01):
+        """Start the background eviction thread.  Idempotent: a second
+        call while the thread is running is a no-op (the running thread
+        keeps its period) — starting twice used to orphan the first
+        daemon loop, and the two then raced on the shared ``_evict_stop``
+        event (one ``stop`` would half-kill the pair)."""
         def loop():
             while not self._evict_stop.wait(period_s):
                 self.maintain()
-        self._evict_thread = threading.Thread(target=loop, daemon=True)
-        self._evict_thread.start()
+        with self._threads_lock:
+            if self._evict_thread is not None:
+                return
+            self._evict_stop.clear()
+            self._evict_thread = threading.Thread(
+                target=loop, name="kv-evict", daemon=True)
+            self._evict_thread.start()
 
     def stop_async_eviction(self):
-        if self._evict_thread is not None:
+        with self._threads_lock:
+            thread = self._evict_thread
+            if thread is None:
+                return
             self._evict_stop.set()
-            self._evict_thread.join()
+            thread.join()
             self._evict_thread = None
             self._evict_stop.clear()
 
     # ------------------------------------------------------------------
     # cold-store compaction (background garbage reclamation)
     # ------------------------------------------------------------------
+    def _garbage_state(self) -> tuple[int, int]:
+        """``(garbage_bytes, cold_file_bytes)`` as one atomic pair.  Both
+        counters move together under ``_stats_lock`` (a COW supersede
+        adds garbage, a grow or compact resizes the file); readers that
+        divide one by the other must snapshot them together or a torn
+        pair yields a fraction that never existed."""
+        with self._stats_lock:
+            return self.stats.garbage_bytes, self.stats.cold_file_bytes
+
     @property
     def garbage_fraction(self) -> float:
         """Fraction of the cold file holding superseded/orphaned rows."""
-        return self.stats.garbage_fraction
+        garbage, total = self._garbage_state()
+        return garbage / total if total else 0.0
 
     def compact(self, *, min_garbage_fraction: float = 0.0) -> dict:
         """One compaction pass: rewrite every LIVE cold row into a fresh
@@ -373,8 +402,11 @@ class HybridKVStore:
         odd window.  Writers (``upsert_batch``/``delete_batch``/``_admit``/
         ``maintain``) serialize with the pass on the update lock."""
         with self._lock:
-            before_bytes = self._cold.shape[0] * self.value_bytes
-            garbage = self.stats.garbage_bytes
+            # (garbage, size) snapshotted as one pair under the stats
+            # lock: the threshold decision must come from a consistent
+            # fraction, not a garbage count paired with a file size from
+            # a different instant (see _garbage_state)
+            garbage, before_bytes = self._garbage_state()
             frac = garbage / before_bytes if before_bytes else 0.0
             if frac < min_garbage_fraction:
                 return {"skipped": True, "garbage_fraction": frac,
@@ -457,15 +489,28 @@ class HybridKVStore:
 
         def loop():
             while not self._compact_stop.wait(period_s):
-                if self.garbage_fraction >= threshold:
+                # one atomic (garbage, size) snapshot: reading the two
+                # counters independently could pair a fresh garbage_bytes
+                # with a stale cold_file_bytes mid-supersede and trigger
+                # (or skip) a pass on a fraction that never existed
+                garbage, total = self._garbage_state()
+                if total and garbage / total >= threshold:
                     self.compact(min_garbage_fraction=threshold)
-        self._compact_thread = threading.Thread(target=loop, daemon=True)
-        self._compact_thread.start()
+        with self._threads_lock:
+            if self._compact_thread is not None:
+                return
+            self._compact_stop.clear()
+            self._compact_thread = threading.Thread(
+                target=loop, name="kv-compact", daemon=True)
+            self._compact_thread.start()
 
     def stop_async_compaction(self):
-        if self._compact_thread is not None:
+        with self._threads_lock:
+            thread = self._compact_thread
+            if thread is None:
+                return
             self._compact_stop.set()
-            self._compact_thread.join()
+            thread.join()
             self._compact_thread = None
             self._compact_stop.clear()
 
@@ -477,6 +522,116 @@ class HybridKVStore:
         self.stop_async_eviction()
         self.stop_async_compaction()
         self._cold_finalizer()
+
+    # ------------------------------------------------------------------
+    # snapshot/restore (the fabric's spin-up-from-disk path)
+    # ------------------------------------------------------------------
+    SNAPSHOT_FORMAT = 1
+
+    def save(self, path_prefix: str) -> None:
+        """Serialize the whole store to three files —
+
+          - ``<prefix>.npz``        hot tier + cold slot map + metadata
+          - ``<prefix>.index.npz``  the NeighborHash index (HashTable.save)
+          - ``<prefix>.cold.bin``   the cold value file, current generation,
+                                    byte-for-byte
+
+        — such that ``load`` serves every key bitwise identically,
+        including tier placement (a key hot here is hot in the restored
+        store) and the garbage accounting compaction runs on.  Taken
+        under the update lock, so no upsert/delete/admission/compaction
+        can tear the (index, hot arrays, cold file) triple mid-save."""
+        prefix = os.fspath(path_prefix)
+        with self._lock:
+            self._cold.flush()
+            self.index.save(prefix + ".index.npz")
+            cold_tmp = prefix + ".cold.bin.tmp"
+            shutil.copyfile(self._cold_path, cold_tmp)
+            os.replace(cold_tmp, prefix + ".cold.bin")
+            n_cold = len(self._cold_slot_of_key_order)
+            cold_keys = np.fromiter(self._cold_slot_of_key_order.keys(),
+                                    dtype=np.uint64, count=n_cold)
+            cold_slots = np.fromiter(self._cold_slot_of_key_order.values(),
+                                     dtype=np.int64, count=n_cold)
+            with self._stats_lock:
+                garbage_bytes = self.stats.garbage_bytes
+                cold_file_bytes = self.stats.cold_file_bytes
+            meta = {
+                "format": self.SNAPSHOT_FORMAT,
+                "n": self.n,
+                "value_bytes": self.value_bytes,
+                "load_factor": self._load_factor,
+                "hot_capacity": self.hot_capacity,
+                "clock": self._clock,
+                "cold_rows": int(self._cold.shape[0]),
+                # garbage carries across the snapshot: the cold file is
+                # copied as-is, superseded rows included, and the restored
+                # store is the writer that will eventually compact them
+                "garbage_bytes": garbage_bytes,
+                "cold_file_bytes": cold_file_bytes,
+            }
+            tmp = prefix + ".npz.tmp"
+            with open(tmp, "wb") as f:
+                np.savez(
+                    f,
+                    meta_json=np.frombuffer(
+                        json.dumps(meta).encode("utf-8"), dtype=np.uint8),
+                    hot_values=self._hot_values,
+                    hot_last_access=self._hot_last_access,
+                    hot_key=self._hot_key,
+                    hot_free=np.asarray(self._hot_free, dtype=np.int64),
+                    cold_keys=cold_keys,
+                    cold_slots=cold_slots)
+            os.replace(tmp, prefix + ".npz")
+
+    @classmethod
+    def load(cls, path_prefix: str, *,
+             cold_dir: Optional[str] = None) -> "HybridKVStore":
+        """Restore a store saved by ``save``.  The cold file is COPIED
+        into a fresh working dir (or ``cold_dir``): the snapshot on disk
+        stays immutable — many replicas may restore from it concurrently,
+        and the restored store's writes/compactions must never touch it."""
+        prefix = os.fspath(path_prefix)
+        with np.load(prefix + ".npz", allow_pickle=False) as z:
+            meta = json.loads(bytes(z["meta_json"]).decode("utf-8"))
+            if meta.get("format") != cls.SNAPSHOT_FORMAT:
+                raise ValueError(f"unsupported store snapshot format "
+                                 f"{meta.get('format')!r} at {prefix}")
+            new = object.__new__(cls)
+            new.n = int(meta["n"])
+            new.value_bytes = int(meta["value_bytes"])
+            new._load_factor = float(meta["load_factor"])
+            new.stats = TierStats(
+                garbage_bytes=int(meta["garbage_bytes"]),
+                cold_file_bytes=int(meta["cold_file_bytes"]))
+            new.hot_capacity = int(meta["hot_capacity"])
+            new._hot_values = z["hot_values"].copy()
+            new._hot_last_access = z["hot_last_access"].copy()
+            new._hot_key = z["hot_key"].copy()
+            new._hot_free = [int(s) for s in z["hot_free"]]
+            new._clock = int(meta["clock"])
+            new._cold_slot_of_key_order = {
+                int(k): int(s)
+                for k, s in zip(z["cold_keys"], z["cold_slots"])}
+        new.index = nh.HashTable.load(prefix + ".index.npz")
+        new._cold_dir = cold_dir or tempfile.mkdtemp(prefix="neighborkv_")
+        new._cold_path = os.path.join(new._cold_dir, "cold.bin")
+        shutil.copyfile(prefix + ".cold.bin", new._cold_path)
+        new._cold = np.memmap(new._cold_path, dtype=np.uint8, mode="r+",
+                              shape=(int(meta["cold_rows"]),
+                                     new.value_bytes))
+        new._cold_handle = _ColdFile(new._cold_path)
+        new._cold_finalizer = weakref.finalize(new, new._cold_handle.decref)
+        new._lock = threading.Lock()
+        new._stats_lock = threading.Lock()
+        new._write_seq = 0
+        new._retired = False
+        new._threads_lock = threading.Lock()
+        new._evict_thread = None
+        new._evict_stop = threading.Event()
+        new._compact_thread = None
+        new._compact_stop = threading.Event()
+        return new
 
     # ------------------------------------------------------------------
     def _set_payload(self, key: int, payload: np.uint64):
@@ -575,7 +730,8 @@ class HybridKVStore:
                 # view from here on (a retained clone may still serve it
                 # from the shared file) — account it as garbage awaiting
                 # the next compaction pass
-                self.stats.garbage_bytes += self.value_bytes
+                with self._stats_lock:
+                    self.stats.garbage_bytes += self.value_bytes
                 self._cold[next_slot] = v
                 self._cold_slot_of_key_order[k] = next_slot
                 if payload & TIER_MASK:
@@ -633,7 +789,8 @@ class HybridKVStore:
                     # the key's cold home slot is orphaned in place —
                     # garbage until compaction rewrites the file
                     if self._cold_slot_of_key_order.pop(k, None) is not None:
-                        self.stats.garbage_bytes += self.value_bytes
+                        with self._stats_lock:
+                            self.stats.garbage_bytes += self.value_bytes
                     self.n -= 1
                     removed += 1
             finally:
@@ -700,6 +857,7 @@ class HybridKVStore:
         new._stats_lock = threading.Lock()
         new._write_seq = 0
         new._retired = False
+        new._threads_lock = threading.Lock()
         new._evict_thread = None
         new._evict_stop = threading.Event()
         new._compact_thread = None
@@ -724,8 +882,9 @@ class HybridKVStore:
             self._cold = np.memmap(
                 self._cold_path, dtype=np.uint8, mode="r+",
                 shape=(old_rows + extra_rows, self.value_bytes))
-            self.stats.cold_file_bytes = \
-                (old_rows + extra_rows) * self.value_bytes
+            with self._stats_lock:
+                self.stats.cold_file_bytes = \
+                    (old_rows + extra_rows) * self.value_bytes
         return old_rows
 
     def memory_bytes(self) -> dict:

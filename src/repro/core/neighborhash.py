@@ -25,6 +25,8 @@ invariant (chains coalesce), which is exactly why its APCL is worst.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Optional
 
@@ -325,6 +327,72 @@ class HashTable:
             home_capacity=self.home_capacity,
             stats=dataclasses.replace(self.stats),
         )
+
+    # ------------------------------------------------------------------
+    # snapshot/restore (the fabric's spin-up-from-disk path)
+    # ------------------------------------------------------------------
+    SNAPSHOT_FORMAT = 1
+
+    def save(self, path: str) -> str:
+        """Serialize the table to one ``.npz``: the SoA arrays verbatim
+        plus a JSON metadata record (variant, capacities, build stats —
+        ``max_chain_len`` matters because the device lookup bakes
+        ``max_probe_len()`` into its compiled program).  ``load`` restores
+        a bitwise-identical table: every bucket, chain offset, and stats
+        field round-trips exactly, so a replica restored from disk probes
+        the same buckets in the same order as the builder that saved it.
+
+        Writes ``<path>.tmp`` then renames: a crash mid-save never leaves
+        a truncated file where a restoring replica would look.  Returns
+        the final path (``.npz`` appended if missing)."""
+        path = os.fspath(path)
+        if not path.endswith(".npz"):
+            path += ".npz"
+        meta = {
+            "format": self.SNAPSHOT_FORMAT,
+            "variant": self.variant,
+            "capacity": self.capacity,
+            "buckets_per_line": self.buckets_per_line,
+            "home_capacity": self.home_capacity,
+            "stats": dataclasses.asdict(self.stats),
+        }
+        arrays = {"key_hi": self.key_hi, "key_lo": self.key_lo,
+                  "val_hi": self.val_hi, "val_lo": self.val_lo}
+        if self.next_idx is not None:
+            arrays["next_idx"] = self.next_idx
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, meta_json=np.frombuffer(
+                json.dumps(meta).encode("utf-8"), dtype=np.uint8), **arrays)
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "HashTable":
+        """Restore a table saved by ``save`` — bitwise identical arrays,
+        stats, and variant config.  ``allow_pickle`` stays off: the file
+        is arrays + JSON, never executable."""
+        path = os.fspath(path)
+        if not path.endswith(".npz"):
+            path += ".npz"
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(bytes(z["meta_json"]).decode("utf-8"))
+            if meta.get("format") != cls.SNAPSHOT_FORMAT:
+                raise ValueError(f"unsupported table snapshot format "
+                                 f"{meta.get('format')!r} in {path}")
+            if meta["variant"] not in VARIANTS:
+                raise ValueError(f"unknown variant {meta['variant']!r} "
+                                 f"in {path}")
+            return cls(
+                variant=meta["variant"],
+                capacity=int(meta["capacity"]),
+                buckets_per_line=int(meta["buckets_per_line"]),
+                key_hi=z["key_hi"].copy(), key_lo=z["key_lo"].copy(),
+                val_hi=z["val_hi"].copy(), val_lo=z["val_lo"].copy(),
+                next_idx=(z["next_idx"].copy() if "next_idx" in z.files
+                          else None),
+                home_capacity=int(meta["home_capacity"]),
+                stats=BuildStats(**meta["stats"]))
 
     def items_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         """Every resident (keys uint64, payloads uint64) — rebuild fodder."""

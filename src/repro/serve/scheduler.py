@@ -39,7 +39,7 @@ from typing import Optional
 import numpy as np
 
 from repro.api.types import Consistency, QoSClass
-from repro.core.engine import QueryResult, TableResult
+from repro.core.query_types import QueryResult, TableResult
 
 
 # ---------------------------------------------------------------------------
@@ -282,6 +282,11 @@ class Ticket:
 
     def __init__(self, deadline: Optional[float]):
         self._event = threading.Event()
+        # settlement is first-write-wins: close() failing an in-flight
+        # request can race the finish worker completing it, and whichever
+        # settles first must stick — the loser's write would otherwise
+        # mutate a result the client may already be reading
+        self._settle_lock = threading.Lock()
         self._result: Optional[QueryResult] = None
         self._error: Optional[BaseException] = None
         self.deadline = deadline
@@ -301,15 +306,25 @@ class Ticket:
 
     # server-side faces -------------------------------------------------
     def _complete(self, result: QueryResult, batch_id: int,
-                  latency_s: float) -> None:
-        self._result = result
-        self.batch_id = batch_id
-        self.latency_s = latency_s
-        self._event.set()
+                  latency_s: float) -> bool:
+        """Settle with a result; returns False if already settled."""
+        with self._settle_lock:
+            if self._event.is_set():
+                return False
+            self._result = result
+            self.batch_id = batch_id
+            self.latency_s = latency_s
+            self._event.set()
+            return True
 
-    def _fail(self, error: BaseException) -> None:
-        self._error = error
-        self._event.set()
+    def _fail(self, error: BaseException) -> bool:
+        """Settle with an error; returns False if already settled."""
+        with self._settle_lock:
+            if self._event.is_set():
+                return False
+            self._error = error
+            self._event.set()
+            return True
 
 
 @dataclasses.dataclass

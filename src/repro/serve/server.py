@@ -94,6 +94,16 @@ class QueryServer:
         # bounds batches between launch and finish: depth 2 is the classic
         # double buffer (one in flight on device, one being finished)
         self._inflight = threading.BoundedSemaphore(pipeline_depth)
+        # batches between launch and ticket settlement, keyed by batch id
+        # (one dict op per batch — this sits on the serial launch path):
+        # close() waits these out under its timeout, then fails whatever
+        # remains — a caller blocked in result() must never hang on a
+        # server that shut down
+        # plain dict, no lock: batch-id keyed stores/pops are atomic
+        # under the GIL, and close()'s sweep tolerates racing pops (ticket
+        # settlement is first-write-wins) — the launch path stays free of
+        # lock traffic
+        self._inflight_reqs: dict[int, list] = {}
         self._batch_ids = itertools.count()
         self._scheduler: Optional[threading.Thread] = None
         self._closed = False
@@ -111,20 +121,48 @@ class QueryServer:
         self._scheduler.start()
 
     def close(self, timeout: float = 10.0) -> None:
-        """Stop admitting, drain queued batches, join the pipeline.  Any
-        request no scheduler will ever serve (server never started, or the
-        join timed out mid-drain) has its ticket failed with
-        ``ServerClosedError`` rather than left hanging."""
+        """Stop admitting, drain every lane, join the pipeline — all under
+        one ``timeout`` budget.  Three places a request can be stranded,
+        all handled:
+
+          - queued but never batched (any lane): drained here and failed
+            with ``ServerClosedError``;
+          - launched but not finished: waited out under the remaining
+            budget, then failed with ``ServerClosedError`` if the pool is
+            wedged (settlement is first-write-wins, so a late finish that
+            does land is simply ignored);
+          - scheduler never started / join timed out: same drain + fail.
+
+        No caller blocked in ``Ticket.result()`` is ever left hanging."""
+        deadline = time.monotonic() + timeout
         self._closed = True
         self._batcher.close()
         if self._scheduler is not None:
-            self._scheduler.join(timeout)
+            self._scheduler.join(max(deadline - time.monotonic(), 0.0))
             self._scheduler = None
         for req in self._batcher.drain():
             self.stats.on_failure(1, req.qos)
             req.ticket._fail(ServerClosedError("server closed before the "
                                                "request was served"))
-        self._pool.shutdown(wait=True)
+        # the former shutdown(wait=True) ignored the timeout outright: a
+        # backend wedged in finish() hung close() — and the caller —
+        # forever.  Wait without blocking, bounded by what is left of the
+        # budget, then fail the stragglers.
+        self._pool.shutdown(wait=False)
+        while self._inflight_reqs and time.monotonic() < deadline:
+            time.sleep(0.002)
+        leftovers = []
+        while True:
+            try:
+                leftovers.extend(self._inflight_reqs.popitem()[1])
+            except KeyError:
+                break
+        for req in leftovers:
+            # first-write-wins: only count the failure if close actually
+            # settled the ticket (a finish worker may have just beaten us)
+            if req.ticket._fail(ServerClosedError(
+                    "server close timed out with the request in flight")):
+                self.stats.on_failure(1, req.qos)
 
     def __enter__(self) -> "QueryServer":
         return self
@@ -228,6 +266,11 @@ class QueryServer:
             batch_id = next(self._batch_ids)
             fused, spans = coalesce(batch)
             t_launch = time.monotonic()
+            # in-flight BEFORE begin: a request stalled inside a slow
+            # backend.begin() must be visible to close()'s drain, or a
+            # bounded close times out believing nothing is outstanding and
+            # strands the ticket
+            self._inflight_reqs[batch_id] = batch
             try:
                 # begin pins ONE version for the whole micro-batch; the
                 # build reference keeps that version's tables alive even if
@@ -236,6 +279,7 @@ class QueryServer:
                     fused, version=batch[0].version, strict=batch[0].strict)
             except BaseException as e:  # noqa: BLE001
                 self._inflight.release()
+                self._inflight_reqs.pop(batch_id, None)
                 if len(batch) == 1:
                     self.stats.on_failure(1, batch[0].qos)
                     batch[0].ticket._fail(e)
@@ -303,17 +347,22 @@ class QueryServer:
     def _finish_batch(self, batch_id: int, batch: list, spans: list,
                       inflight, t_launch: float) -> None:
         try:
-            result = self.backend.finish(inflight)
-        except BaseException as e:  # noqa: BLE001
-            for req in batch:
-                self.stats.on_failure(1, req.qos)
-                req.ticket._fail(e)
-            return
+            try:
+                result = self.backend.finish(inflight)
+            except BaseException as e:  # noqa: BLE001
+                for req in batch:
+                    self.stats.on_failure(1, req.qos)
+                    req.ticket._fail(e)
+                return
+            finally:
+                self._inflight.release()
+            now = time.monotonic()
+            self._batcher.observe_service_time(now - t_launch)
+            self.stats.on_batch(len(batch), inflight.keys_requested,
+                                inflight.keys_deviceside, inflight.launches)
+            for req, span in zip(batch, spans):
+                self._deliver(req, result, span, batch_id, now)
         finally:
-            self._inflight.release()
-        now = time.monotonic()
-        self._batcher.observe_service_time(now - t_launch)
-        self.stats.on_batch(len(batch), inflight.keys_requested,
-                            inflight.keys_deviceside, inflight.launches)
-        for req, span in zip(batch, spans):
-            self._deliver(req, result, span, batch_id, now)
+            # whatever path settled (or raised), this batch is no longer
+            # in flight — close() must not wait on or re-fail it
+            self._inflight_reqs.pop(batch_id, None)

@@ -412,6 +412,88 @@ class TestUpdateBatchParity:
                 assert where[i] == visited[-1]
 
 
+class TestLifecycleRaces:
+    """Background-thread lifecycle (ISSUE 6 satellites): double-start must
+    not leak a second daemon loop, close() must win cleanly against an
+    in-flight async compaction, and clone() must stay bitwise-correct when
+    it races the compaction generation swap."""
+
+    @staticmethod
+    def _named_threads(name):
+        return [t for t in threading.enumerate() if t.name == name]
+
+    def test_double_start_async_compaction_is_single_thread(self):
+        keys, vals, st = _store(n=100, vb=8)
+        st.start_async_compaction(threshold=0.5, period_s=0.5)
+        st.start_async_compaction(threshold=0.5, period_s=0.5)
+        assert len(self._named_threads("kv-compact")) == 1
+        st.stop_async_compaction()
+        assert len(self._named_threads("kv-compact")) == 0
+        # and restartable after a stop (the stop event must be reset)
+        st.start_async_compaction(threshold=0.5, period_s=0.5)
+        assert len(self._named_threads("kv-compact")) == 1
+        st.close()
+        assert len(self._named_threads("kv-compact")) == 0
+
+    def test_double_start_async_eviction_is_single_thread(self):
+        keys, vals, st = _store(n=100, vb=8)
+        st.start_async_eviction(period_s=0.5)
+        st.start_async_eviction(period_s=0.5)
+        assert len(self._named_threads("kv-evict")) == 1
+        st.close()
+        assert len(self._named_threads("kv-evict")) == 0
+
+    def test_close_races_inflight_async_compaction(self):
+        """close() while the async loop is mid-compact: the join must wait
+        out the pass (no torn file handoff, no exception), repeatedly."""
+        for trial in range(5):
+            keys, vals, st = _store(n=300, vb=16, hot_fraction=0.0,
+                                    seed=trial)
+            st.start_async_compaction(threshold=0.05, period_s=0.0)
+            # feed it garbage so a pass is always running or imminent
+            for _ in range(3):
+                st.upsert_batch(keys, np.roll(vals, 1, axis=0),
+                                copy_on_write=True)
+            st.close()                    # must not raise or deadlock
+            assert len(self._named_threads("kv-compact")) == 0
+
+    def test_clone_races_compaction_generation_swap(self):
+        """Clones taken while compaction swaps index+file generations must
+        serve every row bitwise and keep their cold-file ref alive even
+        after the source moves on."""
+        n, vb = 300, 16
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+        expect = np.repeat((keys % 199).astype(np.uint8)[:, None], vb,
+                           axis=1)
+        st = HybridKVStore(keys, expect.copy(), hot_fraction=0.1)
+        stop = threading.Event()
+        failures: list[str] = []
+
+        def churn():
+            # idempotent COW rewrites -> garbage -> compaction passes
+            while not stop.is_set():
+                st.upsert_batch(keys[::2], expect[::2],
+                                copy_on_write=True)
+                st.compact(min_garbage_fraction=0.0)
+
+        t = threading.Thread(target=churn)
+        t.start()
+        try:
+            for _ in range(25):
+                c = st.clone(retire=False)
+                f, out = c.get_batch(keys, admit=False)
+                if not f.all():
+                    failures.append("clone missing keys")
+                elif not (out == expect).all():
+                    failures.append("clone served torn rows")
+                c.close()
+        finally:
+            stop.set()
+            t.join()
+            st.close()
+        assert failures == []
+
+
 # ---------------------------------------------------------------------------
 # CI smoke: bench acceptance (slow lane) — cold-file bytes bounded under a
 # sustained 1% COW delta stream with compaction on, monotonic without

@@ -1,0 +1,388 @@
+"""Multi-process serving fabric (ISSUE 6 tentpole): wire codec round trips
+(pickle-free, typed errors preserved), hash-partition parity with
+hashcore, router fan-out/merge against the dict oracle, update fan-out
+with empty-partition version adoption, and the failure-injection
+acceptance — kill one replica of a 2-way group mid-load and require zero
+mixed-version batches, zero lost in-flight requests (typed errors only),
+and the respawned replica rejoining at the current fleet version."""
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import wire
+from repro.api.types import (Consistency, QoSClass, QueryRequest,
+                             QueryResponse, UpdateRequest)
+from repro.core.query_types import (EmbeddingTable, TableResult,
+                                    VersionEvictedError)
+from repro.serve import fabric
+from repro.serve.fabric import (FabricConfig, FabricError, NoReplicaError,
+                                Router, shard_of_keys)
+from repro.serve.scheduler import QueueFullError
+
+
+def _keys(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(1, 1 << 62, n * 2, dtype=np.uint64))[:n]
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+class TestWire:
+    def test_tree_round_trip_nested_arrays(self):
+        rng = np.random.default_rng(0)
+        tree = {"a": rng.integers(0, 255, (7, 3), dtype=np.uint8),
+                "b": [1, 2.5, None, True, "x",
+                      rng.integers(0, 1 << 60, 11, dtype=np.uint64)],
+                "c": {"d": np.zeros(0, dtype=np.float32), "e": {}}}
+        out = wire.decode_tree(wire.encode_tree(tree))
+        assert (out["a"] == tree["a"]).all() and out["a"].dtype == np.uint8
+        assert out["b"][:5] == [1, 2.5, None, True, "x"]
+        assert (out["b"][5] == tree["b"][5]).all()
+        assert out["c"]["d"].shape == (0,) and out["c"]["e"] == {}
+
+    def test_request_response_round_trip(self):
+        keys = _keys(40)
+        req = QueryRequest(tables={"emb": keys},
+                           qos=QoSClass.RETRIEVAL,
+                           consistency=Consistency.pinned(7),
+                           budget_s=1.5)
+        back = wire.decode_request(wire.encode_request(req))
+        assert (back.tables["emb"] == keys).all()
+        assert back.qos is QoSClass.RETRIEVAL
+        assert (back.consistency.mode, back.consistency.version) \
+            == ("pinned", 7)
+        assert back.budget_s == 1.5
+
+        res = QueryResponse(
+            version=7,
+            tables={"emb": TableResult(
+                found=np.array([True, False]),
+                values=np.arange(16, dtype=np.uint8).reshape(2, 8))},
+            qos=QoSClass.RETRIEVAL, latency_s=0.25, batch_id=3)
+        rb = wire.decode_response(wire.encode_response(res))
+        assert rb.version == 7 and rb.batch_id == 3
+        assert (rb.tables["emb"].found == res.tables["emb"].found).all()
+        assert (rb.tables["emb"].values == res.tables["emb"].values).all()
+
+    def test_update_round_trip_empty_partition(self):
+        v, up, de = wire.decode_update(wire.encode_update(9, {}, {}))
+        assert (v, up, de) == (9, {}, {})
+        keys = _keys(10)
+        rows = np.ones((10, 4), dtype=np.uint8)
+        v, up, de = wire.decode_update(
+            wire.encode_update(9, {"emb": (keys, rows)}, {"emb": keys[:2]}))
+        assert (up["emb"][0] == keys).all() and (up["emb"][1] == rows).all()
+        assert (de["emb"] == keys[:2]).all()
+
+    def test_errors_cross_typed(self):
+        for err in (VersionEvictedError("gone"), QueueFullError("full"),
+                    fabric.ReplicaDeadError("dead"), KeyError("nope"),
+                    ValueError("bad")):
+            back = wire.decode_error(wire.encode_error(err))
+            assert type(back) is type(err)
+            assert "NeverHeardOfIt" not in str(back)
+        unknown = wire.decode_error(wire.encode_tree(
+            {"type": "NeverHeardOfIt", "message": "m"}))
+        assert type(unknown) is RuntimeError
+
+    def test_frame_round_trip(self):
+        kind, rid, payload = wire.unpack_frame(
+            wire.pack_frame(wire.KIND_QUERY, 123456789, b"abc"))
+        assert (kind, rid, bytes(payload)) == (wire.KIND_QUERY, 123456789,
+                                               b"abc")
+        with pytest.raises(wire.WireError):
+            wire.decode_tree(b"nope")
+
+    def test_no_pickle_in_codec(self):
+        """The transport must stay pickle-free — a compromised shard can
+        corrupt data, never execute code in the router."""
+        import inspect
+        src = inspect.getsource(wire)
+        assert "pickle" not in src.replace("no pickle", "").replace(
+            "pickle-free", "").replace("NO pickle", "")
+
+
+def test_shard_hash_matches_hashcore():
+    """fabric restates the mix hash in pure numpy (hashcore imports jax on
+    first jnp use); the two must stay bit-identical or a respawned fleet
+    would route keys differently than the one that built the snapshots."""
+    from repro.core import hashcore as hc
+    keys = _keys(5000)
+    hi, lo = hc.key_split_np(keys)
+    expect = (hc.hash64_np(hi, lo) % np.uint32(8)).astype(np.int32)
+    assert (shard_of_keys(keys, 8) == expect).all()
+
+
+def test_fabric_imports_without_jax():
+    """A shard-server process boots on the jax-free import chain; guard
+    it with a subprocess so a future import regression fails loudly."""
+    import subprocess
+    code = ("import sys; import repro.serve.fabric; "
+            "sys.exit(2 if any(m == 'jax' or m.startswith('jax.') "
+            "for m in sys.modules) else 0)")
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, "repro.serve.fabric pulled in jax"
+
+
+# ---------------------------------------------------------------------------
+# router end-to-end (real processes; kept small — CI boxes are thin)
+# ---------------------------------------------------------------------------
+N = 2000
+VB = 8
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    keys = _keys(N)
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 255, (N, VB), dtype=np.uint8)
+    return keys, vals
+
+
+def _build(tmp_path, keys, vals, *, n_shards=2, n_replicas=1, **kw):
+    cfg = FabricConfig(n_shards=n_shards, n_replicas=n_replicas,
+                       snapshot_root=str(tmp_path / "snaps"),
+                       health_period_s=0.1, **kw)
+    table = EmbeddingTable("emb", keys, vals, hot_fraction=0.5,
+                           variant="neighborhash")
+    return Router.build([table], cfg)
+
+
+class TestRouter:
+    def test_oracle_merge_and_misses(self, tmp_path, dataset):
+        keys, vals = dataset
+        router = _build(tmp_path, keys, vals, respawn=False)
+        try:
+            rng = np.random.default_rng(2)
+            ref = {int(k): v for k, v in zip(keys, vals)}
+            for _ in range(5):
+                q = keys[rng.integers(0, N, 300)]
+                q = np.concatenate([q, q[:20],           # dupes
+                                    np.arange(1, 7, dtype=np.uint64) << 62])
+                resp, info = router.query_ex(QueryRequest(
+                    tables={"emb": q}))
+                tr = resp.tables["emb"]
+                assert resp.version == 1
+                assert not tr.found[-6:].any()           # guaranteed misses
+                for k, f, row in zip(q[:-6], tr.found[:-6], tr.values[:-6]):
+                    assert f and (ref[int(k)] == row).all()
+                assert info["launches"] <= 2
+                assert info["keys_deviceside"] < len(q)  # dedup happened
+            assert router.metrics.mixed_version_averted == 0
+        finally:
+            router.close()
+
+    def test_update_fanout_and_empty_partition_bump(self, tmp_path,
+                                                    dataset):
+        """A delta whose keys all land on one shard must still advance the
+        OTHER shard's version (bare bump), or pinned fan-outs would NACK
+        on it forever."""
+        keys, vals = dataset
+        router = _build(tmp_path, keys, vals, respawn=False)
+        try:
+            owners = shard_of_keys(keys, 2)
+            shard0 = keys[owners == 0][:40]
+            rows = np.full((len(shard0), VB), 77, np.uint8)
+            router.apply_update(UpdateRequest(version=2,
+                                              upserts={"emb": (shard0,
+                                                               rows)}))
+            assert router.fleet_version == 2
+            # a query spanning BOTH shards answers entirely from v2
+            q = np.concatenate([shard0, keys[owners == 1][:40]])
+            resp = router.query(QueryRequest(tables={"emb": q}))
+            assert resp.version == 2
+            assert (resp.tables["emb"].values[:len(shard0)] == 77).all()
+            # stale strict pin NACKs typed
+            with pytest.raises(VersionEvictedError):
+                router.query(QueryRequest(
+                    tables={"emb": q[:8]},
+                    consistency=Consistency.pinned(1)))
+            # non-monotonic update rejected
+            with pytest.raises(ValueError):
+                router.apply_update(UpdateRequest(
+                    version=2, upserts={"emb": (shard0, rows)}))
+        finally:
+            router.close()
+
+    def test_unknown_table_raises_keyerror(self, tmp_path, dataset):
+        keys, vals = dataset
+        router = _build(tmp_path, keys, vals, n_shards=1, respawn=False)
+        try:
+            with pytest.raises(KeyError):
+                router.apply_update(UpdateRequest(
+                    version=2, upserts={"nope": (keys[:4],
+                                                 vals[:4])}))
+        finally:
+            router.close()
+
+    def test_feature_client_through_fabric_backend(self, tmp_path, dataset):
+        """as_backend(Router) -> FabricBackend -> FeatureClient: the same
+        session API the in-process servers speak."""
+        from repro.api import FeatureClient, as_backend
+        keys, vals = dataset
+        router = _build(tmp_path, keys, vals, n_shards=1, respawn=False)
+        try:
+            client = FeatureClient(as_backend(router))
+            res = client.query({"emb": keys[:100]})
+            assert res.version == 1
+            assert (res["emb"].values == vals[:100]).all()
+        finally:
+            router.close()
+
+
+class TestFailureInjection:
+    def test_kill_one_replica_of_two_mid_load(self, tmp_path, dataset):
+        """The acceptance drill: 2 shards x 2 replicas, constant query
+        load, updates publishing every ~80ms, one replica killed
+        mid-stream.
+
+        - zero mixed-version batches: every update rewrites EVERY key's
+          row to the version number, so one response containing two
+          different constants would betray a mixed merge observationally
+          (not just via the router's own metric);
+        - zero lost in-flight requests: every query returns or raises a
+          typed error — nothing hangs, nothing vanishes;
+        - the killed replica respawns from snapshot + update-log replay
+          and reports the current fleet version."""
+        keys, _ = dataset
+        v1 = np.full((N, VB), 1, np.uint8)
+        router = _build(tmp_path, keys, v1, n_replicas=2,
+                        snapshot_every=3)
+        mixed, lost, completed, typed_errors = [], [], [0], [0]
+        stop = threading.Event()
+        lock = threading.Lock()
+
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            while not stop.is_set():
+                q = keys[rng.integers(0, N, 128)]
+                try:
+                    resp = router.query(QueryRequest(tables={"emb": q}))
+                except (FabricError, VersionEvictedError):
+                    with lock:
+                        typed_errors[0] += 1
+                    continue
+                except BaseException as e:  # noqa: BLE001
+                    with lock:
+                        lost.append(repr(e))
+                    continue
+                tr = resp.tables["emb"]
+                consts = np.unique(tr.values[tr.found])
+                if len(consts) > 1 or (len(consts) == 1 and
+                                       consts[0] != resp.version % 256):
+                    with lock:
+                        mixed.append((resp.version, consts.tolist()))
+                with lock:
+                    completed[0] += 1
+
+        workers = [threading.Thread(target=worker, args=(10 + i,))
+                   for i in range(3)]
+        try:
+            for t in workers:
+                t.start()
+            version = 1
+            kill_at = 4
+            for step in range(12):
+                version += 1
+                rows = np.full((N, VB), version % 256, np.uint8)
+                router.apply_update(UpdateRequest(
+                    version=version, upserts={"emb": (keys, rows)}))
+                if step == kill_at:
+                    router.replicas[0][0].kill()
+                time.sleep(0.08)
+        finally:
+            stop.set()
+            for t in workers:
+                t.join(timeout=30)
+
+        try:
+            assert completed[0] > 20, (completed, typed_errors, lost)
+            assert mixed == [], mixed
+            assert lost == [], lost
+            assert router.metrics.mixed_version_averted == 0
+            # the victim rejoined at the current fleet version
+            deadline = time.time() + 30
+            while time.time() < deadline:
+                h = router.replicas[0][0]
+                if h is not None and h.alive:
+                    _, data = h.call(wire.KIND_HEALTH,
+                                     wire.encode_tree({}), timeout=5)
+                    if wire.decode_tree(data)["version"] \
+                            == router.fleet_version:
+                        break
+                time.sleep(0.1)
+            else:
+                pytest.fail("killed replica never rejoined at fleet "
+                            "version")
+            assert router.metrics.respawns >= 1
+            # and serves queries again end to end
+            resp = router.query(QueryRequest(tables={"emb": keys[:64]}))
+            assert resp.version == router.fleet_version
+        finally:
+            router.close()
+
+    def test_whole_group_down_is_typed_not_hang(self, tmp_path, dataset):
+        keys, vals = dataset
+        router = _build(tmp_path, keys, vals, n_shards=1, n_replicas=1,
+                        respawn=False)
+        try:
+            router.replicas[0][0].kill()
+            time.sleep(0.3)
+            with pytest.raises((NoReplicaError, FabricError)):
+                router.query(QueryRequest(tables={"emb": keys[:16]}))
+        finally:
+            router.close()
+
+
+@pytest.mark.slow
+@pytest.mark.skipif((os.cpu_count() or 1) < 4,
+                    reason=f"shard scaling needs >= 4 cores "
+                           f"(have {os.cpu_count()})")
+def test_fabric_qps_scaling_acceptance(tmp_path):
+    """1 -> 4 shard processes must scale qps >= 2.5x (the tentpole's
+    reason to exist: real parallelism beyond one GIL)."""
+    n = 50_000
+    keys = _keys(n)
+    rng = np.random.default_rng(3)
+    vals = rng.integers(0, 255, (n, 32), dtype=np.uint8)
+    table = EmbeddingTable("emb", keys, vals, hot_fraction=0.2,
+                           variant="neighborhash")
+    qps = {}
+    for n_shards in (1, 4):
+        cfg = FabricConfig(n_shards=n_shards, n_replicas=1,
+                           snapshot_root=str(tmp_path / f"s{n_shards}"),
+                           respawn=False)
+        router = Router.build([table], cfg)
+        try:
+            reqs = [{"emb": keys[np.random.default_rng(100 + c).integers(
+                0, n, 1024)]} for c in range(8)]
+            for r in reqs[:2]:                               # warmup
+                router.query(QueryRequest(tables=r))
+            done = [0]
+            lock = threading.Lock()
+
+            def worker(req):
+                for _ in range(25):
+                    router.query(QueryRequest(tables=req))
+                    with lock:
+                        done[0] += 1
+
+            threads = [threading.Thread(target=worker, args=(r,))
+                       for r in reqs]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            qps[n_shards] = done[0] / (time.perf_counter() - t0)
+        finally:
+            router.close()
+    assert qps[4] / qps[1] >= 2.5, qps

@@ -1,0 +1,197 @@
+"""Snapshot/restore (ISSUE 6 tentpole, layer 1): every storage layer
+round-trips through disk bitwise — the property the fabric's respawn path
+stands on.  HashTable snapshots per variant, HybridKVStore snapshots
+(index + cold file + hot tier + garbage accounting), StoreBackend
+directory snapshots, and snapshot immutability under post-load mutation."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api.backends import StoreBackend
+from repro.api.types import UpdateRequest
+from repro.core import neighborhash as nh
+from repro.core.hybrid_store import HybridKVStore
+
+
+def _dataset(n=500, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(1, 1 << 62, n * 2, dtype=np.uint64))[:n]
+    vals = rng.integers(0, 1 << 50, len(keys)).astype(np.uint64)
+    return keys, vals
+
+
+class TestHashTableSnapshot:
+    @pytest.mark.parametrize("variant", sorted(nh.VARIANTS))
+    def test_bitwise_round_trip_per_variant(self, variant, tmp_path):
+        keys, vals = _dataset()
+        ht = nh.build(keys, vals, variant=variant)
+        path = ht.save(str(tmp_path / "table"))
+        assert path.endswith(".npz")
+        back = nh.HashTable.load(path)
+        assert back.variant == ht.variant
+        assert back.capacity == ht.capacity
+        assert back.buckets_per_line == ht.buckets_per_line
+        assert back.home_capacity == ht.home_capacity
+        for field in ("key_hi", "key_lo", "val_hi", "val_lo"):
+            assert (getattr(back, field) == getattr(ht, field)).all(), field
+        if ht.next_idx is None:
+            assert back.next_idx is None
+        else:
+            assert (back.next_idx == ht.next_idx).all()
+        # build stats survive (max_chain_len is baked into lookups)
+        assert back.stats == ht.stats
+        found, out = back.lookup_host_batch(keys)
+        assert found.all() and (out == vals).all()
+
+    def test_load_rejects_wrong_format(self, tmp_path):
+        keys, vals = _dataset(n=50)
+        ht = nh.build(keys, vals, variant="linear")
+        path = ht.save(str(tmp_path / "t"))
+        blob = dict(np.load(path, allow_pickle=False))
+        meta = json.loads(bytes(blob["meta_json"]).decode())
+        meta["format"] = 999
+        blob["meta_json"] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)
+        np.savez(path, **blob)
+        with pytest.raises(ValueError, match="format"):
+            nh.HashTable.load(path)
+
+
+class TestHybridStoreSnapshot:
+    def _store(self, n=300, vb=16, seed=1, hot_fraction=0.3):
+        rng = np.random.default_rng(seed)
+        keys = np.arange(1, n + 1, dtype=np.uint64)
+        vals = rng.integers(0, 255, (n, vb), dtype=np.uint8)
+        return keys, vals, HybridKVStore(keys, vals.copy(),
+                                         hot_fraction=hot_fraction)
+
+    def test_round_trip_serves_identically(self, tmp_path):
+        keys, vals, st = self._store()
+        # dirty every tier: admissions, COW garbage, deletes
+        st.get_batch(keys[:64])
+        st.upsert_batch(keys[:32], np.full((32, 16), 7, np.uint8),
+                        copy_on_write=True)
+        st.delete_batch(keys[250:260])
+        prefix = str(tmp_path / "store")
+        st.save(prefix)
+        back = HybridKVStore.load(prefix)
+        f0, v0 = st.get_batch(keys, admit=False)
+        f1, v1 = back.get_batch(keys, admit=False)
+        assert (f0 == f1).all() and (v0[f0] == v1[f1]).all()
+        # garbage accounting restores exactly -> compaction thresholds
+        # behave the same after a respawn as before it
+        assert back.stats.garbage_bytes == st.stats.garbage_bytes
+        assert back.stats.cold_file_bytes == st.stats.cold_file_bytes
+        assert abs(back.garbage_fraction - st.garbage_fraction) < 1e-12
+        st.close()
+        back.close()
+
+    def test_index_restores_bitwise(self, tmp_path):
+        keys, vals, st = self._store(n=200)
+        prefix = str(tmp_path / "store")
+        st.save(prefix)
+        back = HybridKVStore.load(prefix)
+        for field in ("key_hi", "key_lo", "val_hi", "val_lo"):
+            assert (getattr(back.index, field)
+                    == getattr(st.index, field)).all(), field
+        st.close()
+        back.close()
+
+    def test_snapshot_immutable_under_post_load_mutation(self, tmp_path):
+        """The loaded store works on a COPY of the cold file: compaction
+        or writes after restore must never dirty the snapshot other
+        replicas (or the next respawn) restore from."""
+        keys, vals, st = self._store(n=200)
+        prefix = str(tmp_path / "store")
+        st.save(prefix)
+        before = open(prefix + ".cold.bin", "rb").read()
+        back = HybridKVStore.load(prefix)
+        back.upsert_batch(keys[:50], np.zeros((50, 16), np.uint8),
+                          copy_on_write=True)
+        back.compact(min_garbage_fraction=0.0)
+        assert open(prefix + ".cold.bin", "rb").read() == before
+        again = HybridKVStore.load(prefix)
+        f, v = again.get_batch(keys[:50], admit=False)
+        assert f.all() and (v == vals[:50]).all()
+        st.close()
+        back.close()
+        again.close()
+
+    def test_compact_after_load(self, tmp_path):
+        keys, vals, st = self._store(n=200, hot_fraction=0.0)
+        st.upsert_batch(keys[:100], np.full((100, 16), 3, np.uint8),
+                        copy_on_write=True)
+        prefix = str(tmp_path / "store")
+        st.save(prefix)
+        back = HybridKVStore.load(prefix)
+        r = back.compact()
+        assert not r["skipped"]
+        f, v = back.get_batch(keys[:100], admit=False)
+        assert f.all() and (v == 3).all()
+        assert back.garbage_fraction == 0.0
+        st.close()
+        back.close()
+
+
+class TestStoreBackendSnapshot:
+    def _backend(self, seed=2):
+        rng = np.random.default_rng(seed)
+        stores = {}
+        for name, vb in (("emb_a", 8), ("emb_b", 32)):
+            keys = np.arange(1, 301, dtype=np.uint64)
+            vals = rng.integers(0, 255, (300, vb), dtype=np.uint8)
+            stores[name] = HybridKVStore(keys, vals, hot_fraction=0.25)
+        return StoreBackend(stores, version=5)
+
+    def test_directory_round_trip(self, tmp_path):
+        backend = self._backend()
+        path = str(tmp_path / "snap")
+        assert backend.snapshot_to(path) == 5
+        meta = json.load(open(os.path.join(path, "meta.json")))
+        assert meta["version"] == 5
+        assert meta["tables"] == ["emb_a", "emb_b"]
+        back = StoreBackend.load_snapshot(path)
+        assert back.latest_version == 5
+        assert back.table_names == backend.table_names
+        keys = np.arange(1, 301, dtype=np.uint64)
+        for name in backend.table_names:
+            h0 = backend.begin({name: keys}, version=5, strict=True)
+            h1 = back.begin({name: keys}, version=5, strict=True)
+            r0, r1 = backend.finish(h0), back.finish(h1)
+            assert (r0[name].found == r1[name].found).all()
+            assert (r0[name].values == r1[name].values).all()
+
+    def test_snapshot_then_update_then_resnapshot(self, tmp_path):
+        """The fabric's periodic snapshot: version advances, a fresh
+        snapshot captures post-delta state, and the first snapshot still
+        restores the old version (generations are independent)."""
+        backend = self._backend()
+        p5 = str(tmp_path / "v5")
+        backend.snapshot_to(p5)
+        keys = np.arange(1, 51, dtype=np.uint64)
+        rows = np.full((50, 8), 9, np.uint8)
+        backend.apply_update(UpdateRequest(version=6,
+                                           upserts={"emb_a": (keys, rows)}))
+        p6 = str(tmp_path / "v6")
+        assert backend.snapshot_to(p6) == 6
+        old = StoreBackend.load_snapshot(p5)
+        new = StoreBackend.load_snapshot(p6)
+        assert (old.latest_version, new.latest_version) == (5, 6)
+        h = new.begin({"emb_a": keys}, version=6, strict=True)
+        assert (new.finish(h)["emb_a"].values == 9).all()
+        h = old.begin({"emb_a": keys}, version=5, strict=True)
+        assert not (old.finish(h)["emb_a"].values == 9).all()
+
+    def test_snapshot_replace_is_atomic_name(self, tmp_path):
+        """Re-snapshotting onto an existing path replaces it whole (tmp
+        dir + os.replace) — a reader never sees a half-written mix."""
+        backend = self._backend()
+        path = str(tmp_path / "snap")
+        backend.snapshot_to(path)
+        first = sorted(os.listdir(path))
+        backend.snapshot_to(path)
+        assert sorted(os.listdir(path)) == first
+        assert StoreBackend.load_snapshot(path).latest_version == 5
