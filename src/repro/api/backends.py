@@ -142,7 +142,11 @@ class StoreBackend:
             raise ValueError(f"compact_threshold must be in (0, 1], got "
                              f"{compact_threshold}")
         self.stores = dict(stores)
-        self._version = int(version)
+        # strict: a version read racing apply_update could pair freshly
+        # updated rows with the pre-update version tag — the torn
+        # (rows, version) state this class exists to prevent — so even
+        # the latest_version property reads under the lock
+        self._version = int(version)    # guarded-by: _update_lock (strict)
         # deletes orphan cold rows in place; once a store's garbage
         # fraction crosses this, apply_update triggers a compaction pass
         # after the delta lands (outside the update lock — in-flight
@@ -155,7 +159,8 @@ class StoreBackend:
 
     @property
     def latest_version(self) -> int:
-        return self._version
+        with self._update_lock:
+            return self._version
 
     @property
     def table_names(self) -> list[str]:

@@ -35,9 +35,11 @@ from repro.api.types import (Consistency, QoSClass, QueryRequest,
 __all__ = [
     "KIND_QUERY", "KIND_UPDATE", "KIND_HEALTH", "KIND_SNAPSHOT",
     "KIND_SHUTDOWN", "KIND_RESPONSE", "KIND_OK", "KIND_ERROR",
-    "decode_error", "decode_request", "decode_response", "decode_tree",
-    "decode_update", "encode_error", "encode_request", "encode_response",
-    "encode_tree", "encode_update", "pack_frame", "unpack_frame",
+    "WIRE_MESSAGES",
+    "decode_error", "decode_ok", "decode_request", "decode_response",
+    "decode_tree", "decode_update", "encode_error", "encode_ok",
+    "encode_request", "encode_response", "encode_tree", "encode_update",
+    "pack_frame", "unpack_frame",
 ]
 
 MAGIC = b"NWIR"
@@ -289,3 +291,20 @@ def encode_ok(info: Optional[dict] = None) -> bytes:
 
 def decode_ok(data) -> dict:
     return decode_tree(data)
+
+
+# Message registry: every frame kind with its (encode, decode) pair.
+# This is the protocol's single source of truth — the fabric dispatches
+# by kind, `tools.analyze` fails if a KIND_* is missing here, and
+# tests/test_wire_roundtrip.py auto-discovers its cases from it, so a
+# new message type gets codec coverage the moment it is registered.
+WIRE_MESSAGES = {
+    KIND_QUERY: (encode_request, decode_request),
+    KIND_UPDATE: (encode_update, decode_update),
+    KIND_HEALTH: (encode_tree, decode_tree),
+    KIND_SNAPSHOT: (encode_tree, decode_tree),
+    KIND_SHUTDOWN: (encode_tree, decode_tree),
+    KIND_RESPONSE: (encode_response, decode_response),
+    KIND_OK: (encode_ok, decode_ok),
+    KIND_ERROR: (encode_error, decode_error),
+}

@@ -352,7 +352,7 @@ class MultiTableEngine:
         self.max_shard_bytes = max_shard_bytes
         self.buckets_per_line = buckets_per_line
         self.window = VersionWindow(retain)
-        self.stats = EngineStats()
+        self.stats = EngineStats()      # guarded-by: _stats_lock
         # concurrent _finish calls (QueryServer worker pool) update the
         # shared counters under this lock; query paths stay lock-free
         self._stats_lock = threading.Lock()

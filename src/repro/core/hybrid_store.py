@@ -111,10 +111,10 @@ class HybridKVStore:
             raise ValueError("values must be uint8 [n, value_bytes]")
         if len(keys) != len(values):
             raise ValueError("keys/values length mismatch")
-        self.n = len(keys)
+        self.n = len(keys)              # guarded-by: _lock
         self.value_bytes = values.shape[1]
         self._load_factor = load_factor
-        self.stats = TierStats()
+        self.stats = TierStats()        # guarded-by: _stats_lock
 
         # --- tier assignment: requested hot set, else the first fraction ---
         if hot_keys is not None:
@@ -126,26 +126,32 @@ class HybridKVStore:
         self.hot_capacity = max(n_hot, 1)
 
         # --- hot tier: value region + LRU metadata ---
+        # (_hot_last_access is deliberately NOT guarded: the LRU touch in
+        # get_batch is a benign racy write — a lost recency stamp costs at
+        # worst one suboptimal eviction, never a torn value)
         self._hot_values = np.zeros((self.hot_capacity, self.value_bytes),
-                                    dtype=np.uint8)
+                                    dtype=np.uint8)  # guarded-by: _lock
         self._hot_last_access = np.zeros(self.hot_capacity, dtype=np.int64)
         self._hot_key = np.full(self.hot_capacity, hc.EMPTY_KEY,
-                                dtype=np.uint64)     # for eviction writeback
-        self._hot_free: list[int] = []
-        self._clock = 0
+                                dtype=np.uint64)     # guarded-by: _lock
+        self._hot_free: list[int] = []               # guarded-by: _lock
+        self._clock = 0                              # guarded-by: _stats_lock
 
         # --- cold tier: file-backed memmap (the "NVMe file") ---
         self._cold_dir = cold_dir or tempfile.mkdtemp(prefix="neighborkv_")
-        self._cold_path = os.path.join(self._cold_dir, "cold.bin")
+        self._cold_path = os.path.join(self._cold_dir,
+                                       "cold.bin")    # guarded-by: _lock
         cold_rows = max(self.n, 1)
         self._cold = np.memmap(self._cold_path, dtype=np.uint8, mode="w+",
-                               shape=(cold_rows, self.value_bytes))
+                               shape=(cold_rows,
+                                      self.value_bytes))  # guarded-by: _lock
         # every record has a cold home slot (hot tier is a cache, like the
         # paper: eviction just flips the tier bit; no cold write needed if the
         # cold copy is current)
         self._cold[:] = values
         self._cold.flush()
-        self._cold_handle = _ColdFile(self._cold_path)
+        self._cold_handle = _ColdFile(self._cold_path)  # guarded-by: _lock
+        # guarded-by: _lock
         self._cold_finalizer = weakref.finalize(self,
                                                 self._cold_handle.decref)
         self.stats.cold_file_bytes = cold_rows * self.value_bytes
@@ -165,10 +171,11 @@ class HybridKVStore:
         # hot_capacity is clamped to 1) must start on the free list or the
         # hot tier is permanently unusable — _admit would always bail
         self._hot_free = list(range(self.hot_capacity - 1, hot_slot - 1, -1))
+        # guarded-by: _lock
         self._cold_slot_of_key_order = {int(k): i for i, k in enumerate(keys)}
         self.index = nh.build(keys, payloads, variant=variant,
                               load_factor=load_factor,
-                              buckets_per_line=buckets_per_line)
+                              buckets_per_line=buckets_per_line)  # guarded-by: _lock
         self._lock = threading.Lock()   # update-path only; reads lock-free
         # seqlock for the lock-free read path: every tier-moving mutation
         # (_admit / eviction / value or index write) bumps this once on
@@ -176,19 +183,23 @@ class HybridKVStore:
         # mid-mutation; get_batch retries its probe+gather when the counter
         # moved, instead of risking a torn payload read (e.g. a cold->hot
         # repoint seen half-written classifying a hot slot as a cold one)
-        self._write_seq = 0
+        self._write_seq = 0             # guarded-by: _lock
         # counter updates from concurrent readers (QueryServer finish
         # workers) go through their own lock so they never contend with —
         # or get lost against — the long-held update-path _lock
         self._stats_lock = threading.Lock()
-        self._retired = False           # True once a clone() owns the writes
+        # True once a clone() owns the writes; strict — the writability
+        # check itself must run under the lock, or a clone() landing
+        # between check and lock lets the retired parent keep writing
+        # rows the clone serves from the shared cold file
+        self._retired = False           # guarded-by: _lock (strict)
         # guards background-thread start/stop: start_async_* must be
         # idempotent under concurrent callers, and it must not ride the
         # update-path _lock (stop joins a loop that takes _lock)
         self._threads_lock = threading.Lock()
-        self._evict_thread: Optional[threading.Thread] = None
+        self._evict_thread: Optional[threading.Thread] = None  # guarded-by: _threads_lock
         self._evict_stop = threading.Event()
-        self._compact_thread: Optional[threading.Thread] = None
+        self._compact_thread: Optional[threading.Thread] = None  # guarded-by: _threads_lock
         self._compact_stop = threading.Event()
 
     # ------------------------------------------------------------------
@@ -242,7 +253,7 @@ class HybridKVStore:
                 self._admit(int(k))
         return found, out
 
-    def _probe_and_gather(self, keys: np.ndarray
+    def _probe_and_gather(self, keys: np.ndarray       # seqlock-read
                           ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
                                      np.ndarray]:
         """One vectorized probe + tier-split gather (no stats, no
@@ -301,7 +312,11 @@ class HybridKVStore:
                 self._hot_key[hot_slot] = key
                 self._hot_last_access[hot_slot] = self._clock
                 self._set_payload(key, np.uint64(hot_slot))
-                self.stats.admissions += 1
+                # counters live under _stats_lock (nested inside _lock,
+                # the established order): a bare increment here would race
+                # the reader-side stats writes in get_batch
+                with self._stats_lock:
+                    self.stats.admissions += 1
             finally:
                 self._write_seq += 1
 
@@ -334,7 +349,8 @@ class HybridKVStore:
                     self._hot_key[slot] = hc.EMPTY_KEY
                     self._hot_free.append(slot)
                     evicted += 1
-                    self.stats.evictions += 1
+                    with self._stats_lock:
+                        self.stats.evictions += 1
             finally:
                 self._write_seq += 1
             return evicted
@@ -634,10 +650,14 @@ class HybridKVStore:
         return new
 
     # ------------------------------------------------------------------
-    def _set_payload(self, key: int, payload: np.uint64):
+    def _set_payload(self, key: int, payload: np.uint64):  # lock-held: _lock
         self.index.update(key, int(payload))     # in-place, offset-preserving
 
-    def _check_writable(self):
+    def _check_writable(self):                    # lock-held: _lock
+        # must run under _lock: clone() flips _retired under the lock, so
+        # an unlocked check could pass just before the flip and let the
+        # retired parent write rows the clone now serves from the shared
+        # cold file (check-then-act race)
         if self._retired:
             raise RuntimeError(
                 "store was retired by clone(): the clone owns the write "
@@ -647,7 +667,6 @@ class HybridKVStore:
     def update_value(self, key: int, value: np.ndarray):
         """Update-path write: cold home slot is rewritten; a hot copy, if
         present, is refreshed in place (single-writer Update Subsystem)."""
-        self._check_writable()
         value = np.asarray(value, dtype=np.uint8)
         if value.shape != (self.value_bytes,):
             # a scalar or wrong-length value would silently broadcast over
@@ -656,6 +675,7 @@ class HybridKVStore:
                 f"value must have shape ({self.value_bytes},), "
                 f"got {value.shape}")
         with self._lock:
+            self._check_writable()
             ok, payload, _, _ = self.index.probe_trace(int(key))
             if not ok:
                 raise KeyError(key)
@@ -685,7 +705,6 @@ class HybridKVStore:
         Duplicate keys within one batch are last-write-wins.  Returns
         ``{"inserted": ..., "updated": ..., "cold_rows_appended": ...}``.
         """
-        self._check_writable()
         keys = np.asarray(keys, dtype=np.uint64).ravel()
         values = np.asarray(values, dtype=np.uint8)
         if values.ndim != 2 or values.shape != (len(keys), self.value_bytes):
@@ -693,6 +712,9 @@ class HybridKVStore:
                 f"values must be uint8 [{len(keys)}, {self.value_bytes}], "
                 f"got {values.dtype} {values.shape}")
         with self._lock:
+            # before the seqlock bump: a writability failure must raise
+            # with the counter still even
+            self._check_writable()
             self._write_seq += 1
             try:
                 return self._upsert_locked(keys, values, copy_on_write)
@@ -703,7 +725,7 @@ class HybridKVStore:
                 self._write_seq += 1
 
     def _upsert_locked(self, keys: np.ndarray, values: np.ndarray,
-                   copy_on_write: bool) -> dict:
+                       copy_on_write: bool) -> dict:   # lock-held: _lock
         last = {int(k): i for i, k in enumerate(keys)}   # last-write-wins
         sel = sorted(last.values())
         # one vectorized probe over the batch (mirrors get_batch)
@@ -764,10 +786,10 @@ class HybridKVStore:
     def delete_batch(self, keys: Sequence[int]) -> int:
         """Remove keys from the index (hot slots are freed; cold rows are
         orphaned until compaction).  Returns the number removed."""
-        self._check_writable()
         keys = np.asarray(keys, dtype=np.uint64).ravel()
         removed = 0
         with self._lock:
+            self._check_writable()
             self._write_seq += 1
             try:
                 for k in keys:
@@ -870,7 +892,7 @@ class HybridKVStore:
         with self._lock:
             self._retired = True
 
-    def _grow_cold(self, extra_rows: int) -> int:
+    def _grow_cold(self, extra_rows: int) -> int:      # lock-held: _lock
         """Extend the cold file by ``extra_rows``; returns the first new
         slot.  Clones mapping the old (shorter) prefix stay valid — the file
         only ever grows and existing offsets never move."""

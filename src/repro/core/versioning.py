@@ -50,7 +50,9 @@ class VersionWindow:
         if retain < 1:
             raise ValueError("retain must be >= 1")
         self.retain = retain
-        self._states: dict[int, object] = {}
+        # strict: the retention sweep in publish() mutates the dict, so
+        # even a point read (max/membership) must serialize with it
+        self._states: dict[int, object] = {}  # guarded-by: _lock (strict)
         self._lock = threading.Lock()
 
     @property

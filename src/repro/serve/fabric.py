@@ -255,8 +255,10 @@ class ReplicaHandle:
         self.conn = conn
         self.shard_id = shard_id
         self.replica_id = replica_id
-        self.alive = True
-        self._pending: dict[int, Future] = {}
+        self.alive = True               # guarded-by: _plock
+        # strict: _mark_dead clears the dict while failing the futures,
+        # so even a point lookup must serialize with the sweep
+        self._pending: dict[int, Future] = {}  # guarded-by: _plock (strict)
         self._plock = threading.Lock()
         self._send_lock = threading.Lock()
         self._ids = itertools.count(1)
@@ -411,20 +413,28 @@ class Router:
         self.cfg = cfg
         self._table_names = sorted(table_names)
         self._ctx = multiprocessing.get_context("spawn")
-        self._fleet_version = int(version)
+        # non-strict: query_ex pins the version with one benign racy
+        # read (an update landing mid-read just means the batch pins
+        # the pre-update version, which stays servable)
+        self._fleet_version = int(version)  # guarded-by: _update_lock
         # (dir, version) of each shard's latest snapshot — the respawn
         # substrate; updated by snapshot_now()
+        # guarded-by: _update_lock (strict)
         self._snapshots: list[tuple[str, int]] = list(snapshots)
         # update log PAST the snapshots: (version, per-shard payloads);
         # a respawned replica restores the snapshot then replays these
+        # guarded-by: _update_lock (strict)
         self._update_log: list[tuple[int, list[bytes]]] = []
-        self._updates_since_snapshot = 0
+        self._updates_since_snapshot = 0  # guarded-by: _update_lock (strict)
         # serializes updates, snapshots, and respawn catch-up: a replica
         # must never join mid-update or replay a half-logged delta
         self._update_lock = threading.RLock()
         self.metrics = FabricMetrics()
         self._rr = [itertools.count() for _ in range(cfg.n_shards)]
-        self.replicas: list[list[Optional[ReplicaHandle]]] = []
+        # non-strict: the query fan-out reads handles lock-free; a
+        # respawn swapping a handle mid-read at worst routes one call
+        # to the dying replica, which fails typed and is retried
+        self.replicas: list[list[Optional[ReplicaHandle]]] = []  # guarded-by: _update_lock
         try:
             for s in range(cfg.n_shards):
                 group = [ReplicaHandle.spawn(self._ctx, s, r,
@@ -435,6 +445,11 @@ class Router:
             self.close()
             raise
         self._health_stop = threading.Event()
+        # serializes health-checker start/stop (same check-then-act
+        # race class as QueryServer.start: two concurrent starts used
+        # to be able to spawn two health loops)
+        self._health_lock = threading.Lock()
+        # guarded-by: _health_lock (strict)
         self._health_thread: Optional[threading.Thread] = None
         self._closed = False
         if cfg.respawn:
@@ -780,19 +795,25 @@ class Router:
 
     # -- health ----------------------------------------------------------
     def start_health_checker(self) -> None:
-        if self._health_thread is not None:
-            return
-        self._health_stop.clear()
-        self._health_thread = threading.Thread(
-            target=self._health_loop, daemon=True, name="fabric-health")
-        self._health_thread.start()
+        with self._health_lock:
+            if self._health_thread is not None:
+                return
+            self._health_stop.clear()
+            self._health_thread = threading.Thread(
+                target=self._health_loop, daemon=True, name="fabric-health")
+            self._health_thread.start()
 
     def stop_health_checker(self) -> None:
-        if self._health_thread is None:
-            return
-        self._health_stop.set()
-        self._health_thread.join()
-        self._health_thread = None
+        # join under the lock: the loop never takes _health_lock (respawn
+        # uses _update_lock), and holding it through the join means a
+        # concurrent start cannot interleave with a half-stopped loop and
+        # resurrect the Event mid-shutdown
+        with self._health_lock:
+            if self._health_thread is None:
+                return
+            self._health_stop.set()
+            self._health_thread.join()
+            self._health_thread = None
 
     def _health_loop(self) -> None:
         ping = wire.encode_tree({})

@@ -197,9 +197,12 @@ class ServerStats:
     def __init__(self, policy: BatchPolicy):
         self._lock = threading.Lock()
         self._policy = policy
-        self._c = StatsSnapshot()
-        self._lat = _LatencyRing(policy.latency_reservoir)
+        self._c = StatsSnapshot()     # guarded-by: _lock (strict)
+        self._lat = _LatencyRing(
+            policy.latency_reservoir)  # guarded-by: _lock (strict)
+        # guarded-by: _lock (strict)
         self._cls = {q: ClassSnapshot() for q in QoSClass}
+        # guarded-by: _lock (strict)
         self._cls_lat = {q: _LatencyRing(min(policy.latency_reservoir,
                                              50_000)) for q in QoSClass}
 
@@ -287,11 +290,11 @@ class Ticket:
         # settles first must stick — the loser's write would otherwise
         # mutate a result the client may already be reading
         self._settle_lock = threading.Lock()
-        self._result: Optional[QueryResult] = None
-        self._error: Optional[BaseException] = None
+        self._result: Optional[QueryResult] = None   # guarded-by: _settle_lock
+        self._error: Optional[BaseException] = None  # guarded-by: _settle_lock
         self.deadline = deadline
-        self.batch_id: Optional[int] = None
-        self.latency_s: Optional[float] = None
+        self.batch_id: Optional[int] = None     # guarded-by: _settle_lock
+        self.latency_s: Optional[float] = None  # guarded-by: _settle_lock
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -445,9 +448,12 @@ class MicroBatcher:
         self._lanes = {q: _Lane(q, overrides.get(q, policy), weights[q])
                        for q in sorted(QoSClass)}
         self._cond = threading.Condition()
-        self._closed = False
-        self._service_time_s = policy.service_time_init_s
-        self._last_observe = time.monotonic()
+        self._closed = False            # guarded-by: _cond (strict)
+        # non-strict: the service_time_s property is a benign racy
+        # float read for telemetry; every admission decision reads it
+        # under _cond
+        self._service_time_s = policy.service_time_init_s  # guarded-by: _cond
+        self._last_observe = time.monotonic()   # guarded-by: _cond
 
     # ------------------------------------------------------------------
     @property
@@ -464,7 +470,7 @@ class MicroBatcher:
                                     + a * seconds)
             self._last_observe = time.monotonic()
 
-    def _estimate(self, now: float) -> float:
+    def _estimate(self, now: float) -> float:   # lock-held: _cond
         """Admission-time service estimate.  The EWMA only refreshes when
         batches complete, so with EVERY request being shed there would be
         no observations and a stale stall reading would wedge admission
@@ -489,8 +495,8 @@ class MicroBatcher:
             return {q.name: len(l.queue) for q, l in self._lanes.items()}
 
     # ------------------------------------------------------------------
-    def _evict_below(self, qos: QoSClass) -> bool:
-        # must hold self._cond.  Class-aware backpressure: free one slot by
+    def _evict_below(self, qos: QoSClass) -> bool:  # lock-held: _cond
+        # Class-aware backpressure: free one slot by
         # shedding the newest request from the LOWEST non-empty lane
         # strictly below ``qos`` (PREFETCH before RETRIEVAL before never-
         # RANKING); newest-first because it has waited least — the oldest
@@ -549,8 +555,7 @@ class MicroBatcher:
             return out
 
     # ------------------------------------------------------------------
-    def _shed_expired(self, now: float) -> None:
-        # must hold self._cond
+    def _shed_expired(self, now: float) -> None:   # lock-held: _cond
         for lane in self._lanes.values():
             if not lane.queue:
                 continue
@@ -567,8 +572,8 @@ class MicroBatcher:
     def _nonempty(self) -> list[_Lane]:
         return [l for l in self._lanes.values() if l.queue]
 
-    def _pick_lane(self) -> _Lane:
-        # must hold self._cond; smooth weighted round-robin over the
+    def _pick_lane(self) -> _Lane:              # lock-held: _cond
+        # smooth weighted round-robin over the
         # non-empty lanes: every lane gains its weight, the richest serves
         # and pays back the round's total — RANKING gets ~4/7 of contended
         # service slots by default, yet PREFETCH still cycles in (weighted
@@ -583,8 +588,9 @@ class MicroBatcher:
         best.credit -= total
         return best
 
-    def _collect(self, lane: _Lane) -> tuple[list[_Pending], bool]:
-        # must hold self._cond; head-of-line request picks the group.
+    def _collect(self, lane: _Lane
+                 ) -> tuple[list[_Pending], bool]:  # lock-held: _cond
+        # head-of-line request picks the group.
         # ``saturated`` reports that a matching request exists but could
         # not fit — the batch is as full as it can get, so the caller must
         # close it now rather than wait out max_wait_s for riders that can

@@ -105,6 +105,12 @@ class QueryServer:
         # lock traffic
         self._inflight_reqs: dict[int, list] = {}
         self._batch_ids = itertools.count()
+        # serializes start()/close() thread management: an unguarded
+        # check-then-act in start() let two concurrent callers each see
+        # _scheduler=None and spawn two scheduler threads draining the
+        # same lanes
+        self._lifecycle_lock = threading.Lock()
+        # guarded-by: _lifecycle_lock
         self._scheduler: Optional[threading.Thread] = None
         self._closed = False
         if start:
@@ -114,11 +120,12 @@ class QueryServer:
     # lifecycle
     # ------------------------------------------------------------------
     def start(self) -> None:
-        if self._scheduler is not None:
-            return
-        self._scheduler = threading.Thread(
-            target=self._run, name="qs-scheduler", daemon=True)
-        self._scheduler.start()
+        with self._lifecycle_lock:
+            if self._scheduler is not None:
+                return
+            self._scheduler = threading.Thread(
+                target=self._run, name="qs-scheduler", daemon=True)
+            self._scheduler.start()
 
     def close(self, timeout: float = 10.0) -> None:
         """Stop admitting, drain every lane, join the pipeline — all under
@@ -137,9 +144,14 @@ class QueryServer:
         deadline = time.monotonic() + timeout
         self._closed = True
         self._batcher.close()
-        if self._scheduler is not None:
-            self._scheduler.join(max(deadline - time.monotonic(), 0.0))
-            self._scheduler = None
+        # detach the thread handle under the lock, join outside it: a
+        # concurrent start() must not block on our (bounded but long)
+        # join, and a post-close start() spawns a scheduler that exits
+        # immediately against the closed batcher
+        with self._lifecycle_lock:
+            scheduler, self._scheduler = self._scheduler, None
+        if scheduler is not None:
+            scheduler.join(max(deadline - time.monotonic(), 0.0))
         for req in self._batcher.drain():
             self.stats.on_failure(1, req.qos)
             req.ticket._fail(ServerClosedError("server closed before the "

@@ -1,0 +1,427 @@
+"""The concurrency-contract analyzer's own coverage.
+
+One minimal violating snippet + one clean snippet per rule, run
+in-process through the ``tools.analyze`` APIs, plus the repo-wide
+zero-violations assertion that makes the analyzer a tier-1 gate.
+"""
+import textwrap
+
+import pytest
+
+from tools.analyze import analyze_repo
+from tools.analyze.coverage import check_kernel_oracles, check_wire_codecs
+from tools.analyze.imports import check_entrypoint
+from tools.analyze.locks import check_module_source
+
+
+def _check(snippet: str):
+    return check_module_source(textwrap.dedent(snippet), "<fixture>")
+
+
+def _rules(violations):
+    return sorted({v.rule for v in violations})
+
+
+# ---------------------------------------------------------------------------
+# rule: guarded-by
+# ---------------------------------------------------------------------------
+class TestGuardedBy:
+    def test_unguarded_write_flagged(self):
+        v = _check("""
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0     # guarded-by: _lock
+
+                def bump(self):
+                    self.count += 1
+        """)
+        assert _rules(v) == ["guarded-by"]
+        assert "write to C.count" in v[0].message
+
+    def test_guarded_write_clean(self):
+        v = _check("""
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0     # guarded-by: _lock
+
+                def bump(self):
+                    with self._lock:
+                        self.count += 1
+        """)
+        assert v == []
+
+    def test_nested_attribute_and_subscript_writes_rooted(self):
+        v = _check("""
+            class C:
+                def __init__(self):
+                    self.stats = object()  # guarded-by: _lock
+                    self.table = {}        # guarded-by: _lock
+
+                def bad(self):
+                    self.stats.hits += 1
+                    self.table["k"] = 1
+        """)
+        assert len(v) == 2 and _rules(v) == ["guarded-by"]
+
+    def test_strict_flags_unguarded_read(self):
+        v = _check("""
+            class C:
+                def __init__(self):
+                    self.version = 0   # guarded-by: _lock (strict)
+
+                def peek(self):
+                    return self.version
+        """)
+        assert _rules(v) == ["guarded-by"]
+        assert "read of C.version" in v[0].message
+
+    def test_non_strict_read_is_fine(self):
+        v = _check("""
+            class C:
+                def __init__(self):
+                    self.version = 0   # guarded-by: _lock
+
+                def peek(self):
+                    return self.version
+        """)
+        assert v == []
+
+    def test_lock_held_escape_hatch(self):
+        v = _check("""
+            class C:
+                def __init__(self):
+                    self.n = 0         # guarded-by: _lock
+
+                def _bump_locked(self):   # lock-held: _lock
+                    self.n += 1
+
+                def bump(self):
+                    with self._lock:
+                        self._bump_locked()
+        """)
+        assert v == []
+
+    def test_lock_held_callee_checked_at_call_site(self):
+        v = _check("""
+            class C:
+                def __init__(self):
+                    self.n = 0         # guarded-by: _lock
+
+                def _bump_locked(self):   # lock-held: _lock
+                    self.n += 1
+
+                def bump(self):
+                    self._bump_locked()
+        """)
+        assert _rules(v) == ["guarded-by"]
+        assert "call to C._bump_locked" in v[0].message
+
+    def test_nested_def_does_not_inherit_held_locks(self):
+        v = _check("""
+            class C:
+                def __init__(self):
+                    self.n = 0         # guarded-by: _lock
+
+                def start(self):
+                    with self._lock:
+                        def loop():
+                            self.n += 1
+                        return loop
+        """)
+        assert _rules(v) == ["guarded-by"]
+
+    def test_init_is_exempt(self):
+        v = _check("""
+            class C:
+                def __init__(self, x):
+                    self.n = 0         # guarded-by: _lock
+                    self.n = x
+        """)
+        assert v == []
+
+    def test_dangling_annotation_is_itself_flagged(self):
+        v = _check("""
+            class C:
+                # guarded-by: _lock
+                def method(self):
+                    pass
+        """)
+        assert _rules(v) == ["guarded-by"]
+        assert "dangling" in v[0].message
+
+
+# ---------------------------------------------------------------------------
+# rule: seqlock
+# ---------------------------------------------------------------------------
+class TestSeqlock:
+    def test_lock_acquisition_flagged(self):
+        v = _check("""
+            class C:
+                def read(self):        # seqlock-read
+                    with self._lock:
+                        return self.data
+        """)
+        assert _rules(v) == ["seqlock"]
+        assert "acquires self._lock" in v[0].message
+
+    def test_explicit_acquire_flagged(self):
+        v = _check("""
+            class C:
+                def read(self):        # seqlock-read
+                    self._lock.acquire()
+                    return self.data
+        """)
+        assert _rules(v) == ["seqlock"]
+
+    def test_self_write_flagged(self):
+        v = _check("""
+            class C:
+                def read(self):        # seqlock-read
+                    self.cache[0] = 1
+                    return self.data
+        """)
+        assert _rules(v) == ["seqlock"]
+        assert "writes self.cache" in v[0].message
+
+    def test_pure_read_section_clean(self):
+        v = _check("""
+            class C:
+                def read(self, keys):  # seqlock-read
+                    index = self.index
+                    out = [index[k] for k in keys]
+                    return out
+        """)
+        assert v == []
+
+
+# ---------------------------------------------------------------------------
+# rule: process-boundary
+# ---------------------------------------------------------------------------
+def _write_tree(root, files: dict):
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+
+
+class TestProcessBoundary:
+    def test_transitive_forbidden_import_flagged(self, tmp_path):
+        _write_tree(tmp_path, {
+            "pkg/child.py": """
+                import pkg.store
+
+                def child_main(conn):
+                    pass
+            """,
+            "pkg/store.py": """
+                import heavyfw.numpy as hnp
+            """,
+        })
+        v = check_entrypoint(str(tmp_path), "pkg.child", "child_main",
+                             forbidden=("heavyfw",), first_party="pkg")
+        assert _rules(v) == ["process-boundary"]
+        assert "pkg.child.child_main -> pkg.store -> heavyfw" \
+            in v[0].message
+
+    def test_function_level_entry_imports_followed(self, tmp_path):
+        _write_tree(tmp_path, {
+            "pkg/child.py": """
+                def child_main(conn):
+                    import pkg.worker
+            """,
+            "pkg/worker.py": """
+                import heavyfw
+            """,
+        })
+        v = check_entrypoint(str(tmp_path), "pkg.child", "child_main",
+                             forbidden=("heavyfw",), first_party="pkg")
+        assert _rules(v) == ["process-boundary"]
+
+    def test_lazy_function_level_import_is_clean(self, tmp_path):
+        _write_tree(tmp_path, {
+            "pkg/child.py": """
+                import pkg.store
+
+                def child_main(conn):
+                    pass
+            """,
+            "pkg/store.py": """
+                def compute(x):
+                    import heavyfw           # deferred: fine
+                    return heavyfw.go(x)
+            """,
+        })
+        v = check_entrypoint(str(tmp_path), "pkg.child", "child_main",
+                             forbidden=("heavyfw",), first_party="pkg")
+        assert v == []
+
+    def test_type_checking_block_is_clean(self, tmp_path):
+        _write_tree(tmp_path, {
+            "pkg/child.py": """
+                from typing import TYPE_CHECKING
+                if TYPE_CHECKING:
+                    import heavyfw
+
+                def child_main(conn):
+                    pass
+            """,
+        })
+        v = check_entrypoint(str(tmp_path), "pkg.child", "child_main",
+                             forbidden=("heavyfw",), first_party="pkg")
+        assert v == []
+
+    def test_package_init_chain_is_scanned(self, tmp_path):
+        _write_tree(tmp_path, {
+            "pkg/child.py": """
+                import pkg.sub.leaf
+
+                def child_main(conn):
+                    pass
+            """,
+            "pkg/sub/__init__.py": """
+                import heavyfw
+            """,
+            "pkg/sub/leaf.py": "",
+        })
+        v = check_entrypoint(str(tmp_path), "pkg.child", "child_main",
+                             forbidden=("heavyfw",), first_party="pkg")
+        assert _rules(v) == ["process-boundary"]
+
+    def test_missing_entrypoint_function_is_flagged(self, tmp_path):
+        _write_tree(tmp_path, {"pkg/child.py": "x = 1\n"})
+        v = check_entrypoint(str(tmp_path), "pkg.child", "child_main",
+                             forbidden=("heavyfw",), first_party="pkg")
+        assert v and "not found" in v[0].message
+
+
+# ---------------------------------------------------------------------------
+# rule: kernel-oracle / wire-codec (coverage gates)
+# ---------------------------------------------------------------------------
+_OPS_OK = """
+    from repro.kernels import ref as _ref
+
+    def my_kernel(x, *, impl="auto"):
+        if impl == "ref":
+            return _ref.my_kernel(x)
+        return x
+"""
+_REF_OK = """
+    def my_kernel(x):
+        return x
+"""
+
+
+class TestCoverageGates:
+    def test_kernel_without_parity_test_flagged(self, tmp_path):
+        _write_tree(tmp_path, {
+            "src/repro/kernels/ops.py": _OPS_OK,
+            "src/repro/kernels/ref.py": _REF_OK,
+            "tests/test_kernel_parity.py": "def test_nothing(): pass\n",
+        })
+        v = check_kernel_oracles(str(tmp_path))
+        assert _rules(v) == ["kernel-oracle"]
+        assert "not exercised" in v[0].message
+
+    def test_kernel_without_oracle_flagged(self, tmp_path):
+        _write_tree(tmp_path, {
+            "src/repro/kernels/ops.py": """
+                def my_kernel(x):
+                    return x
+            """,
+            "src/repro/kernels/ref.py": _REF_OK,
+            "tests/test_kernel_parity.py": """
+                def test_k():
+                    my_kernel(1)
+            """,
+        })
+        v = check_kernel_oracles(str(tmp_path))
+        assert v and "never references" in v[0].message
+
+    def test_covered_kernel_clean(self, tmp_path):
+        _write_tree(tmp_path, {
+            "src/repro/kernels/ops.py": _OPS_OK,
+            "src/repro/kernels/ref.py": _REF_OK,
+            "tests/test_kernel_parity.py": """
+                from repro.kernels import ops
+
+                def test_k():
+                    ops.my_kernel(1)
+            """,
+        })
+        assert check_kernel_oracles(str(tmp_path)) == []
+
+    def test_unregistered_kind_flagged(self, tmp_path):
+        _write_tree(tmp_path, {
+            "src/repro/api/wire.py": """
+                KIND_PING = 1
+                KIND_PONG = 2
+
+                def encode_ping(x):
+                    return b""
+
+                def decode_ping(data):
+                    return None
+
+                WIRE_MESSAGES = {
+                    KIND_PING: (encode_ping, decode_ping),
+                }
+            """,
+        })
+        v = check_wire_codecs(str(tmp_path))
+        assert _rules(v) == ["wire-codec"]
+        assert "KIND_PONG" in v[0].message
+
+    def test_encoder_without_decoder_flagged(self, tmp_path):
+        _write_tree(tmp_path, {
+            "src/repro/api/wire.py": """
+                KIND_PING = 1
+
+                def encode_ping(x):
+                    return b""
+
+                WIRE_MESSAGES = {
+                    KIND_PING: (encode_ping, encode_ping),
+                }
+            """,
+        })
+        v = check_wire_codecs(str(tmp_path))
+        msgs = "\n".join(x.message for x in v)
+        assert "no matching decode_ping" in msgs
+        assert "decode_* slot" in msgs or "decode_" in msgs
+
+    def test_registered_protocol_clean(self, tmp_path):
+        _write_tree(tmp_path, {
+            "src/repro/api/wire.py": """
+                KIND_PING = 1
+
+                def encode_ping(x):
+                    return b""
+
+                def decode_ping(data):
+                    return None
+
+                WIRE_MESSAGES = {
+                    KIND_PING: (encode_ping, decode_ping),
+                }
+            """,
+        })
+        assert check_wire_codecs(str(tmp_path)) == []
+
+
+# ---------------------------------------------------------------------------
+# the gate: the repo itself carries zero violations
+# ---------------------------------------------------------------------------
+def test_repo_is_clean():
+    violations = analyze_repo()
+    assert violations == [], "\n".join(v.format() for v in violations)
+
+
+@pytest.mark.parametrize("rule", ["locks", "process-boundary", "coverage"])
+def test_each_checker_clean_in_isolation(rule):
+    assert analyze_repo(rules=[rule]) == []

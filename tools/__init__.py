@@ -1,0 +1,2 @@
+# tools/ is a package so the analyzer runs as `python -m tools.analyze`
+# from the repo root (tools.check_docs stays a plain script).

@@ -1,0 +1,92 @@
+"""Concurrency-contract analyzer for the repo's annotated invariants.
+
+Four checkers, all stdlib-``ast`` based (no jax, no numpy, no repo
+imports — safe for a bare CI runner):
+
+  guarded-by        lock-discipline linting of ``# guarded-by`` /
+                    ``# lock-held`` annotated attributes
+  seqlock           ``# seqlock-read`` sections must not lock or write
+  process-boundary  jax-free import graph for fabric child processes
+  coverage          kernel-oracle parity + wire-codec registry gates
+
+Run from the repo root::
+
+    python -m tools.analyze            # exit 0 iff no violations
+    python -m tools.analyze --rule seqlock --rule guarded-by
+
+See docs/analysis.md for the annotation grammar and how to add a checker.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional
+
+from . import coverage as _coverage
+from . import imports as _imports
+from . import locks as _locks
+from .core import Violation, iter_py_files
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+# Lock/seqlock annotations are enforced over first-party sources only —
+# tests may deliberately contain violating fixture snippets.
+LOCK_SCAN_ROOT = os.path.join("src", "repro")
+
+
+def _check_locks(repo_root: str) -> list[Violation]:
+    root = os.path.join(repo_root, LOCK_SCAN_ROOT)
+    out: list[Violation] = []
+    for path in iter_py_files(root):
+        out.extend(_locks.check_file(path))
+    return out
+
+
+def _check_imports(repo_root: str) -> list[Violation]:
+    return _imports.check_repo(os.path.join(repo_root, "src"))
+
+
+def _check_coverage(repo_root: str) -> list[Violation]:
+    return _coverage.check_repo(repo_root)
+
+
+# name -> checker; the name doubles as the --rule filter (lock and
+# seqlock share a source walk, so they ship as one entry).
+CHECKERS: dict[str, Callable[[str], list[Violation]]] = {
+    "locks": _check_locks,
+    "process-boundary": _check_imports,
+    "coverage": _check_coverage,
+}
+
+# Rule ids each checker can emit, for --rule filtering.
+_CHECKER_RULES: dict[str, frozenset[str]] = {
+    "locks": frozenset({"guarded-by", "seqlock"}),
+    "process-boundary": frozenset({"process-boundary"}),
+    "coverage": frozenset({"kernel-oracle", "wire-codec"}),
+}
+
+
+def analyze_repo(repo_root: Optional[str] = None,
+                 rules: Optional[list[str]] = None) -> list[Violation]:
+    """Run all (or the selected) checkers; return sorted violations."""
+    repo_root = repo_root or REPO_ROOT
+    wanted = set(rules) if rules else None
+    out: list[Violation] = []
+    for name, checker in CHECKERS.items():
+        if wanted is not None and not (
+                {name} | _CHECKER_RULES[name]) & wanted:
+            continue
+        found = checker(repo_root)
+        if wanted is not None:
+            found = [v for v in found
+                     if v.rule in wanted or name in wanted]
+        out.extend(found)
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule, v.message))
+
+
+def known_rules() -> list[str]:
+    rules: set[str] = set()
+    for name, ids in _CHECKER_RULES.items():
+        rules.add(name)
+        rules.update(ids)
+    return sorted(rules)

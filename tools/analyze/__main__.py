@@ -1,0 +1,42 @@
+"""CLI: ``python -m tools.analyze`` — exit 0 iff the repo is clean."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import REPO_ROOT, analyze_repo, known_rules
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="Check the repo's machine-readable concurrency "
+                    "contracts (see docs/analysis.md).")
+    parser.add_argument(
+        "--root", default=REPO_ROOT,
+        help="repo root to analyze (default: this checkout)")
+    parser.add_argument(
+        "--rule", action="append", dest="rules", metavar="RULE",
+        choices=known_rules(),
+        help="run only this rule/checker (repeatable); "
+             f"known: {', '.join(known_rules())}")
+    parser.add_argument(
+        "--quiet", action="store_true",
+        help="suppress the all-clear summary line")
+    args = parser.parse_args(argv)
+
+    violations = analyze_repo(args.root, args.rules)
+    for v in violations:
+        print(v.format(args.root))
+    if violations:
+        print(f"tools.analyze: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    if not args.quiet:
+        which = ", ".join(args.rules) if args.rules else "all checkers"
+        print(f"tools.analyze: clean ({which})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,219 @@
+"""Shared machinery for the concurrency-contract analyzer.
+
+The analyzer is stdlib-only (``ast`` + ``tokenize``-free line scanning): it
+must run in CI jobs with no jax, no numpy, and no repo imports — checking
+`serve/fabric.py` for jax-freedom by importing it would be self-defeating.
+
+Annotation grammar (full reference: docs/analysis.md):
+
+  ``# guarded-by: <lock>``           on (or directly above) a ``self.<attr>``
+                                     assignment in a class body: every write
+                                     to that attribute outside ``__init__``
+                                     must sit inside ``with self.<lock>:``.
+  ``# guarded-by: <lock> (strict)``  reads are checked too.
+  ``# lock-held: <lock>``            on (or directly above) a ``def``: the
+                                     function is documented as called with
+                                     the lock already held — its accesses
+                                     count as guarded.
+  ``# seqlock-read``                 on (or directly above) a ``def``: the
+                                     function is a seqlock-retryable read
+                                     section — it must not acquire any lock
+                                     and must not write any ``self`` state.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterator, Optional
+
+GUARDED_BY_RE = re.compile(
+    r"#\s*guarded-by:\s*(?P<lock>[A-Za-z_]\w*)"
+    r"(?:\s*\(\s*(?P<strict>strict)\s*\))?\s*$")
+LOCK_HELD_RE = re.compile(r"#\s*lock-held:\s*(?P<lock>[A-Za-z_]\w*)\s*$")
+SEQLOCK_RE = re.compile(r"#\s*seqlock-read\s*$")
+_COMMENT_ONLY_RE = re.compile(r"^\s*#")
+_BLANK_RE = re.compile(r"^\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract breach, formatted ``path:line: [rule] message``."""
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def format(self, root: Optional[str] = None) -> str:
+        path = self.path
+        if root:
+            try:
+                path = os.path.relpath(self.path, root)
+            except ValueError:                        # pragma: no cover
+                pass
+        return f"{path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardedAttr:
+    attr: str
+    lock: str
+    strict: bool
+    line: int
+
+
+@dataclasses.dataclass
+class FunctionMarks:
+    """Annotations attached to one function definition."""
+    lock_held: set[str] = dataclasses.field(default_factory=set)
+    seqlock_read: bool = False
+
+
+def parse_module(source: str, path: str) -> ast.Module:
+    return ast.parse(source, filename=path)
+
+
+def iter_py_files(root: str) -> Iterator[str]:
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                yield os.path.join(dirpath, name)
+
+
+# ---------------------------------------------------------------------------
+# annotation extraction: comments -> the AST node they attach to
+# ---------------------------------------------------------------------------
+def _attach_line(lines: list[str], comment_line: int,
+                 spans: dict[int, tuple[int, object]]) -> Optional[object]:
+    """Resolve the statement an annotation comment attaches to.
+
+    ``spans`` maps a statement's first line to ``(end_line, node)``.  A
+    trailing comment (the annotation sits on one of the statement's own
+    lines) attaches to that statement; a comment-above block attaches to
+    the first statement after the run of comment/blank lines."""
+    for start, (end, node) in spans.items():
+        if start <= comment_line <= end:
+            return node
+    line = comment_line + 1
+    while line <= len(lines) and (
+            _COMMENT_ONLY_RE.match(lines[line - 1])
+            or _BLANK_RE.match(lines[line - 1])):
+        line += 1
+    got = spans.get(line)
+    return got[1] if got is not None else None
+
+
+def _self_attr_assign_spans(cls: ast.ClassDef
+                            ) -> dict[int, tuple[int, ast.stmt]]:
+    """First-line -> (last-line, node) for every ``self.<attr> = ...``
+    style statement anywhere inside the class (annotation anchors)."""
+    spans: dict[int, tuple[int, ast.stmt]] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if root_self_attr(t) is not None:
+                    spans[node.lineno] = (node.end_lineno or node.lineno,
+                                          node)
+                    break
+    return spans
+
+
+def _def_spans(tree: ast.AST) -> dict[int, tuple[int, ast.AST]]:
+    """First-line -> (signature-end line, node) for every function def.
+    The span runs from the first decorator to the last signature line, so
+    a trailing annotation on any line of a multi-line signature (or a
+    comment above the decorators) resolves to the function."""
+    spans: dict[int, tuple[int, ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            first = min([node.lineno]
+                        + [d.lineno for d in node.decorator_list])
+            sig_end = node.body[0].lineno - 1 if node.body else node.lineno
+            spans[first] = (max(sig_end, node.lineno), node)
+    return spans
+
+
+def root_self_attr(expr: ast.expr) -> Optional[str]:
+    """The first attribute in a ``self.<attr>...`` chain (through any mix
+    of attribute/subscript hops), or None if the expression does not root
+    at ``self``.  ``self.stats.garbage_bytes`` -> ``stats``;
+    ``self._hot_key[slot]`` -> ``_hot_key``; ``out[i]`` -> None."""
+    node = expr
+    attr = None
+    while True:
+        if isinstance(node, ast.Attribute):
+            attr = node.attr
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Name):
+            return attr if node.id == "self" else None
+        else:
+            return None
+
+
+def collect_class_annotations(cls: ast.ClassDef, lines: list[str]
+                              ) -> tuple[list[GuardedAttr],
+                                         dict[ast.AST, FunctionMarks],
+                                         list[Violation]]:
+    """Scan the class's source lines for annotations and attach each to
+    its attribute assignment or function def.  A dangling annotation (no
+    statement to attach to) is itself a violation — a silently ignored
+    contract is worse than none."""
+    guarded: list[GuardedAttr] = []
+    marks: dict[ast.AST, FunctionMarks] = {}
+    errors: list[Violation] = []
+    assign_spans = _self_attr_assign_spans(cls)
+    def_spans = _def_spans(cls)
+    start = cls.lineno
+    end = cls.end_lineno or cls.lineno
+    for line_no in range(start, min(end, len(lines)) + 1):
+        text = lines[line_no - 1]
+        m = GUARDED_BY_RE.search(text)
+        if m:
+            node = _attach_line(lines, line_no, assign_spans)
+            attr = None
+            if node is not None:
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    attr = root_self_attr(t)
+                    if attr:
+                        break
+            if attr is None:
+                errors.append(Violation(
+                    path="", line=line_no, rule="guarded-by",
+                    message="dangling '# guarded-by' annotation: no "
+                            "'self.<attr> = ...' statement to attach to"))
+            else:
+                guarded.append(GuardedAttr(
+                    attr=attr, lock=m.group("lock"),
+                    strict=m.group("strict") is not None, line=line_no))
+            continue
+        m = LOCK_HELD_RE.search(text)
+        if m:
+            node = _attach_line(lines, line_no, def_spans)
+            if node is None:
+                errors.append(Violation(
+                    path="", line=line_no, rule="guarded-by",
+                    message="dangling '# lock-held' annotation: no "
+                            "function definition to attach to"))
+            else:
+                marks.setdefault(node, FunctionMarks()).lock_held.add(
+                    m.group("lock"))
+            continue
+        if SEQLOCK_RE.search(text):
+            node = _attach_line(lines, line_no, def_spans)
+            if node is None:
+                errors.append(Violation(
+                    path="", line=line_no, rule="seqlock",
+                    message="dangling '# seqlock-read' annotation: no "
+                            "function definition to attach to"))
+            else:
+                marks.setdefault(node, FunctionMarks()).seqlock_read = True
+    return guarded, marks, errors

@@ -1,0 +1,203 @@
+"""Checker 4: coverage gates.
+
+Two structural invariants that keep the test suite honest:
+
+* **kernel-oracle** — every public kernel exported from
+  ``kernels/ops.py`` must dispatch to an oracle defined in
+  ``kernels/ref.py`` (the ``_ref.<name>`` reference inside its body) and
+  must be exercised by name in ``tests/test_kernel_parity.py``.  A kernel
+  without a parity test is a kernel whose Pallas path can silently drift
+  from the reference.
+* **wire-codec** — every ``KIND_*`` message type in ``api/wire.py`` must
+  be registered in the ``WIRE_MESSAGES`` dict with a defined
+  encode/decode pair, and every ``encode_X`` handler must have a matching
+  ``decode_X`` (and vice versa).  The same registry drives the
+  auto-discovered round-trip test, so registering a kind is what buys it
+  coverage.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Optional
+
+from .core import Violation, parse_module
+
+
+def _parse_file(path: str) -> Optional[ast.Module]:
+    if not os.path.isfile(path):
+        return None
+    with open(path, "r", encoding="utf-8") as fh:
+        return parse_module(fh.read(), path)
+
+
+def _top_level_defs(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _ref_aliases(tree: ast.Module) -> set[str]:
+    """Local names bound to the kernels ref module (``_ref`` today)."""
+    aliases: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.endswith(".ref"):
+                    aliases.add(alias.asname or alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module.endswith("kernels"):
+                for alias in node.names:
+                    if alias.name == "ref":
+                        aliases.add(alias.asname or "ref")
+            elif node.module.endswith(".ref") or node.module == "ref":
+                pass  # `from ..ref import x` handled as direct names
+    return aliases
+
+
+def _names_used(tree: ast.AST) -> set[str]:
+    """All bare names and attribute names referenced anywhere — how we
+    ask 'does this test file exercise kernel X' without importing it."""
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            used.add(node.attr)
+    return used
+
+
+def check_kernel_oracles(repo_root: str) -> list[Violation]:
+    ops_path = os.path.join(repo_root, "src", "repro", "kernels", "ops.py")
+    ref_path = os.path.join(repo_root, "src", "repro", "kernels", "ref.py")
+    test_path = os.path.join(repo_root, "tests", "test_kernel_parity.py")
+    out: list[Violation] = []
+    ops_tree = _parse_file(ops_path)
+    if ops_tree is None:
+        return [Violation(path=ops_path, line=0, rule="kernel-oracle",
+                          message="kernels/ops.py not found")]
+    ref_tree = _parse_file(ref_path)
+    ref_defs = set(_top_level_defs(ref_tree)) if ref_tree else set()
+    test_tree = _parse_file(test_path)
+    test_names = _names_used(test_tree) if test_tree else set()
+    ref_aliases = _ref_aliases(ops_tree)
+
+    public = {name: fn for name, fn in _top_level_defs(ops_tree).items()
+              if not name.startswith("_")}
+    if test_tree is None and public:
+        out.append(Violation(
+            path=test_path, line=0, rule="kernel-oracle",
+            message="tests/test_kernel_parity.py not found"))
+    for name, fn in sorted(public.items()):
+        # oracles this kernel dispatches to: `<ref_alias>.<oracle>(...)`
+        oracles = {sub.attr for sub in ast.walk(fn)
+                   if isinstance(sub, ast.Attribute)
+                   and isinstance(sub.value, ast.Name)
+                   and sub.value.id in ref_aliases}
+        if not oracles:
+            out.append(Violation(
+                path=ops_path, line=fn.lineno, rule="kernel-oracle",
+                message=f"public kernel {name!r} never references a "
+                        f"kernels/ref.py oracle"))
+        for oracle in sorted(oracles - ref_defs):
+            out.append(Violation(
+                path=ops_path, line=fn.lineno, rule="kernel-oracle",
+                message=f"kernel {name!r} dispatches to ref.{oracle}, "
+                        f"which is not defined in kernels/ref.py"))
+        if test_tree is not None and name not in test_names:
+            out.append(Violation(
+                path=ops_path, line=fn.lineno, rule="kernel-oracle",
+                message=f"public kernel {name!r} is not exercised in "
+                        f"tests/test_kernel_parity.py"))
+    return out
+
+
+def _dict_literal_assign(tree: ast.Module, name: str
+                         ) -> Optional[ast.Dict]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name \
+                        and isinstance(node.value, ast.Dict):
+                    return node.value
+    return None
+
+
+def check_wire_codecs(repo_root: str) -> list[Violation]:
+    wire_path = os.path.join(repo_root, "src", "repro", "api", "wire.py")
+    out: list[Violation] = []
+    tree = _parse_file(wire_path)
+    if tree is None:
+        return [Violation(path=wire_path, line=0, rule="wire-codec",
+                          message="api/wire.py not found")]
+    defs = _top_level_defs(tree)
+    kinds: dict[str, int] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if isinstance(t, ast.Name) and t.id.startswith("KIND_"):
+                kinds[t.id] = node.lineno
+
+    # encode_X <-> decode_X pairing
+    encoders = {n for n in defs if n.startswith("encode_")}
+    decoders = {n for n in defs if n.startswith("decode_")}
+    for enc in sorted(encoders):
+        if "decode_" + enc[len("encode_"):] not in decoders:
+            out.append(Violation(
+                path=wire_path, line=defs[enc].lineno, rule="wire-codec",
+                message=f"{enc} has no matching "
+                        f"decode_{enc[len('encode_'):]}"))
+    for dec in sorted(decoders):
+        if "encode_" + dec[len("decode_"):] not in encoders:
+            out.append(Violation(
+                path=wire_path, line=defs[dec].lineno, rule="wire-codec",
+                message=f"{dec} has no matching "
+                        f"encode_{dec[len('decode_'):]}"))
+
+    registry = _dict_literal_assign(tree, "WIRE_MESSAGES")
+    if registry is None:
+        out.append(Violation(
+            path=wire_path, line=0, rule="wire-codec",
+            message="api/wire.py has no WIRE_MESSAGES dict literal "
+                    "registry mapping each KIND_* to its "
+                    "(encode, decode) handlers"))
+        return out
+    registered: set[str] = set()
+    for key, value in zip(registry.keys, registry.values):
+        if not isinstance(key, ast.Name) or not key.id.startswith("KIND_"):
+            out.append(Violation(
+                path=wire_path, line=registry.lineno, rule="wire-codec",
+                message="WIRE_MESSAGES keys must be KIND_* names"))
+            continue
+        registered.add(key.id)
+        handler_names = []
+        if isinstance(value, ast.Tuple):
+            handler_names = [e.id for e in value.elts
+                             if isinstance(e, ast.Name)]
+        if len(handler_names) != 2:
+            out.append(Violation(
+                path=wire_path, line=value.lineno, rule="wire-codec",
+                message=f"WIRE_MESSAGES[{key.id}] must be an "
+                        f"(encode_fn, decode_fn) tuple of module-level "
+                        f"handler names"))
+            continue
+        for fname, prefix in zip(handler_names, ("encode_", "decode_")):
+            if fname not in defs:
+                out.append(Violation(
+                    path=wire_path, line=value.lineno, rule="wire-codec",
+                    message=f"WIRE_MESSAGES[{key.id}] references "
+                            f"{fname}, not defined in api/wire.py"))
+            elif not fname.startswith(prefix):
+                out.append(Violation(
+                    path=wire_path, line=value.lineno, rule="wire-codec",
+                    message=f"WIRE_MESSAGES[{key.id}] slot "
+                            f"{prefix}* got {fname!r}"))
+    for kind in sorted(set(kinds) - registered):
+        out.append(Violation(
+            path=wire_path, line=kinds[kind], rule="wire-codec",
+            message=f"message type {kind} is not registered in "
+                    f"WIRE_MESSAGES (no encode/decode coverage)"))
+    return out
+
+
+def check_repo(repo_root: str) -> list[Violation]:
+    return check_kernel_oracles(repo_root) + check_wire_codecs(repo_root)

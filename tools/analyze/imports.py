@@ -1,0 +1,189 @@
+"""Checker 3: process-boundary import hygiene.
+
+Fabric shard-server children must stay jax-free: jax's runtime does not
+survive ``fork``/``spawn`` cheaply, and a child that initializes a TPU
+backend would fight the router for the device.  PR 6 established the rule
+by hand (lazy ``_LazyJnp`` in hashcore, ``sys.modules`` probing in
+``api/backends.as_backend``); this checker makes it structural.
+
+We build the static import graph from each child entrypoint — the
+module-scope imports of the entrypoint's module plus any function-level
+imports inside the entrypoint function — and BFS over first-party
+(``repro.*``) edges, resolving each module to its file under ``src/``.
+Reaching a module whose *module scope* imports a forbidden package fails,
+with the full import chain in the message.  Imports inside functions,
+``if TYPE_CHECKING:`` blocks, and dynamic ``importlib`` calls are outside
+the contract: they are deferred by construction.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, Optional
+
+from .core import Violation, parse_module
+
+# (module, function) pairs that run in a forked/spawned child process.
+CHILD_ENTRYPOINTS: tuple[tuple[str, str], ...] = (
+    ("repro.serve.fabric", "_shard_server_main"),
+)
+FORBIDDEN_PACKAGES: tuple[str, ...] = ("jax", "jaxlib")
+FIRST_PARTY_PREFIX = "repro"
+
+
+def _is_forbidden(module: str, forbidden: Iterable[str]) -> Optional[str]:
+    for pkg in forbidden:
+        if module == pkg or module.startswith(pkg + "."):
+            return pkg
+    return None
+
+
+def _resolve(module: str, src_root: str) -> Optional[str]:
+    """Module name -> source file under ``src_root``; None for namespace
+    packages (no __init__.py, nothing executes) and non-existent names."""
+    parts = module.split(".")
+    as_file = os.path.join(src_root, *parts) + ".py"
+    if os.path.isfile(as_file):
+        return as_file
+    as_pkg = os.path.join(src_root, *parts, "__init__.py")
+    if os.path.isfile(as_pkg):
+        return as_pkg
+    return None
+
+
+def _is_type_checking_if(node: ast.If) -> bool:
+    t = node.test
+    return (isinstance(t, ast.Name) and t.id == "TYPE_CHECKING") or (
+        isinstance(t, ast.Attribute) and t.attr == "TYPE_CHECKING")
+
+
+def _module_scope_imports(tree: ast.Module) -> list[tuple[str, int]]:
+    """(imported module, line) for every import executed at module scope.
+    Recurses through top-level ``if``/``try`` bodies (those run at import
+    time) but not into functions or classes; skips TYPE_CHECKING blocks."""
+    out: list[tuple[str, int]] = []
+
+    def visit(stmts: list[ast.stmt]) -> None:
+        for node in stmts:
+            if isinstance(node, ast.Import):
+                out.extend((alias.name, node.lineno)
+                           for alias in node.names)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0 and node.module:
+                    out.append((node.module, node.lineno))
+                    # `from pkg import name` may bind submodule pkg.name
+                    out.extend((f"{node.module}.{alias.name}", node.lineno)
+                               for alias in node.names
+                               if alias.name != "*")
+            elif isinstance(node, ast.If):
+                if _is_type_checking_if(node):
+                    visit(node.orelse)
+                else:
+                    visit(node.body)
+                    visit(node.orelse)
+            elif isinstance(node, ast.Try):
+                visit(node.body)
+                for handler in node.handlers:
+                    visit(handler.body)
+                visit(node.orelse)
+                visit(node.finalbody)
+            elif isinstance(node, (ast.With, ast.For, ast.While)):
+                visit(node.body)
+                visit(getattr(node, "orelse", []))
+    visit(tree.body)
+    return out
+
+
+def _function_imports(tree: ast.Module, func_name: str
+                      ) -> list[tuple[str, int]]:
+    """Imports anywhere inside the named top-level function — these run
+    in the child, so they are roots of the child's import graph."""
+    out: list[tuple[str, int]] = []
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == func_name:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Import):
+                    out.extend((alias.name, sub.lineno)
+                               for alias in sub.names)
+                elif isinstance(sub, ast.ImportFrom):
+                    if sub.level == 0 and sub.module:
+                        out.append((sub.module, sub.lineno))
+                        out.extend(
+                            (f"{sub.module}.{alias.name}", sub.lineno)
+                            for alias in sub.names if alias.name != "*")
+    return out
+
+
+def _package_chain(module: str) -> list[str]:
+    """Importing a.b.c also executes packages a and a.b."""
+    parts = module.split(".")
+    return [".".join(parts[:i]) for i in range(1, len(parts) + 1)]
+
+
+def check_entrypoint(src_root: str, entry_module: str, entry_func: str,
+                     forbidden: Iterable[str] = FORBIDDEN_PACKAGES,
+                     first_party: str = FIRST_PARTY_PREFIX
+                     ) -> list[Violation]:
+    """BFS the child's import graph; flag forbidden module-scope imports.
+
+    Every first-party module reached gets its module-scope imports
+    scanned; forbidden hits report the chain from the entrypoint."""
+    out: list[Violation] = []
+    entry_path = _resolve(entry_module, src_root)
+    if entry_path is None:
+        return [Violation(
+            path=os.path.join(src_root, *entry_module.split(".")) + ".py",
+            line=0, rule="process-boundary",
+            message=f"child entrypoint module {entry_module!r} not found "
+                    f"under {src_root}")]
+    with open(entry_path, "r", encoding="utf-8") as fh:
+        entry_tree = parse_module(fh.read(), entry_path)
+    func_imports = _function_imports(entry_tree, entry_func)
+    if not any(isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and n.name == entry_func for n in entry_tree.body):
+        out.append(Violation(
+            path=entry_path, line=0, rule="process-boundary",
+            message=f"child entrypoint {entry_module}.{entry_func} not "
+                    f"found — update CHILD_ENTRYPOINTS in "
+                    f"tools/analyze/imports.py"))
+        return out
+
+    # queue of (module, chain-of-modules, import line, importer path)
+    queue: list[tuple[str, tuple[str, ...], int, str]] = []
+    root = f"{entry_module}.{entry_func}"
+    for mod, line in _module_scope_imports(entry_tree) + func_imports:
+        queue.append((mod, (root,), line, entry_path))
+    seen: set[str] = set()
+    while queue:
+        module, chain, line, importer = queue.pop(0)
+        for step in _package_chain(module):
+            pkg = _is_forbidden(step, forbidden)
+            if pkg is not None:
+                via = " -> ".join(chain + (step,))
+                out.append(Violation(
+                    path=importer, line=line, rule="process-boundary",
+                    message=f"forbidden package {pkg!r} reachable at "
+                            f"module scope from child entrypoint: {via}"))
+                break
+            if not (step == first_party
+                    or step.startswith(first_party + ".")):
+                continue
+            if step in seen:
+                continue
+            seen.add(step)
+            path = _resolve(step, src_root)
+            if path is None:
+                continue
+            with open(path, "r", encoding="utf-8") as fh:
+                tree = parse_module(fh.read(), path)
+            for mod, mline in _module_scope_imports(tree):
+                queue.append((mod, chain + (step,), mline, path))
+    return out
+
+
+def check_repo(src_root: str) -> list[Violation]:
+    out: list[Violation] = []
+    for entry_module, entry_func in CHILD_ENTRYPOINTS:
+        out.extend(check_entrypoint(src_root, entry_module, entry_func))
+    return out

@@ -1,0 +1,279 @@
+"""Checkers 1 & 2: guarded-by lock discipline and seqlock read sections.
+
+Both operate purely lexically on one module at a time: a ``with
+self.<lock>:`` block is what "holding the lock" means, and a
+``# lock-held: <lock>`` function annotation is the documented escape hatch
+for helpers whose callers hold the lock.  ``__init__`` is exempt from
+guarded-by enforcement — during construction the object is not yet shared.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .core import (FunctionMarks, GuardedAttr, Violation,
+                   collect_class_annotations, parse_module, root_self_attr)
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+_CONSTRUCTORS = frozenset({"__init__", "__new__"})
+
+
+def _with_locks(node: ast.With | ast.AsyncWith) -> set[str]:
+    """Lock names acquired by this with statement (``with self._lock:``,
+    including multi-item ``with self.a, self.b:``)."""
+    locks: set[str] = set()
+    for item in node.items:
+        expr = item.context_expr
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"):
+            locks.add(expr.attr)
+    return locks
+
+
+def _self_lock_of_acquire(call: ast.Call) -> Optional[str]:
+    """``self.<lock>.acquire(...)`` -> lock name, else None."""
+    fn = call.func
+    if (isinstance(fn, ast.Attribute) and fn.attr == "acquire"
+            and isinstance(fn.value, ast.Attribute)
+            and isinstance(fn.value.value, ast.Name)
+            and fn.value.value.id == "self"):
+        return fn.value.attr
+    return None
+
+
+class _GuardedWalker:
+    """Walk one method body tracking lexically held locks; emit a
+    violation for every unguarded write (and, for strict attrs, read)
+    of a guarded attribute."""
+
+    def __init__(self, path: str, cls_name: str,
+                 guarded: dict[str, GuardedAttr], exempt: set[str],
+                 lock_held_methods: dict[str, set[str]]):
+        self.path = path
+        self.cls_name = cls_name
+        self.guarded = guarded
+        self.exempt = exempt          # locks held per '# lock-held'
+        # sibling methods annotated '# lock-held: L' — calling one
+        # without holding L is the caller-side half of the contract
+        self.lock_held_methods = lock_held_methods
+        self.out: list[Violation] = []
+
+    def run(self, func: ast.AST) -> list[Violation]:
+        for stmt in func.body:
+            self._stmt(stmt, set(self.exempt))
+        return self.out
+
+    # -- statement dispatch, threading the held-lock set ----------------
+    def _stmt(self, node: ast.stmt, held: set[str]) -> None:
+        if isinstance(node, _FUNC_NODES):
+            # A nested def runs later, possibly on another thread: it
+            # does NOT inherit the locks held at its definition site.
+            for inner in node.body:
+                self._stmt(inner, set(self.exempt))
+            return
+        if isinstance(node, ast.Lambda):      # pragma: no cover
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self._expr(item.context_expr, held)
+                if item.optional_vars is not None:
+                    self._check_store(item.optional_vars, held)
+            inner = held | _with_locks(node)
+            for stmt in node.body:
+                self._stmt(stmt, inner)
+            return
+        # Generic statement: check stores and loads in evaluation parts.
+        if isinstance(node, ast.Assign):
+            self._expr(node.value, held)
+            for t in node.targets:
+                self._check_store(t, held)
+            return
+        if isinstance(node, ast.AugAssign):
+            self._expr(node.value, held)
+            self._check_store(node.target, held)
+            # x += 1 also reads x
+            self._check_load_of(node.target, held)
+            return
+        if isinstance(node, ast.AnnAssign):
+            if node.value is not None:
+                self._expr(node.value, held)
+            self._check_store(node.target, held)
+            return
+        if isinstance(node, ast.Delete):
+            for t in node.targets:
+                self._check_store(t, held)
+            return
+        if isinstance(node, ast.For):
+            self._expr(node.iter, held)
+            self._check_store(node.target, held)
+            for stmt in node.body + node.orelse:
+                self._stmt(stmt, held)
+            return
+        # Compound statements: recurse into child statements with the
+        # same held set, and scan their condition expressions.
+        for field in ("test", "value", "exc", "cause", "msg", "subject"):
+            child = getattr(node, field, None)
+            if isinstance(child, ast.expr):
+                self._expr(child, held)
+        for field in ("body", "orelse", "finalbody", "handlers", "cases"):
+            children = getattr(node, field, None) or []
+            for child in children:
+                if isinstance(child, ast.stmt):
+                    self._stmt(child, held)
+                elif isinstance(child, ast.ExceptHandler):
+                    for stmt in child.body:
+                        self._stmt(stmt, held)
+                elif hasattr(child, "body"):   # match_case
+                    for stmt in child.body:
+                        self._stmt(stmt, held)
+
+    # -- expressions: strict-attr loads + nested lambdas/defs ------------
+    def _expr(self, node: ast.expr, held: set[str]) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute) and isinstance(
+                    sub.ctx, ast.Load):
+                self._check_load_attr(sub, held)
+            elif isinstance(sub, ast.Call):
+                self._check_call(sub, held)
+
+    def _check_call(self, call: ast.Call, held: set[str]) -> None:
+        fn = call.func
+        if not (isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "self"):
+            return
+        needed = self.lock_held_methods.get(fn.attr, set())
+        for lock in sorted(needed - held):
+            self.out.append(Violation(
+                path=self.path, line=call.lineno, rule="guarded-by",
+                message=f"call to {self.cls_name}.{fn.attr} (lock-held: "
+                        f"{lock}) outside 'with self.{lock}:'"))
+
+    def _check_load_of(self, target: ast.expr, held: set[str]) -> None:
+        for sub in ast.walk(target):
+            if isinstance(sub, ast.Attribute):
+                self._check_load_attr(sub, held)
+
+    def _check_load_attr(self, node: ast.Attribute,
+                         held: set[str]) -> None:
+        if not (isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            return
+        g = self.guarded.get(node.attr)
+        if g is not None and g.strict and g.lock not in held:
+            self.out.append(Violation(
+                path=self.path, line=node.lineno, rule="guarded-by",
+                message=f"read of {self.cls_name}.{node.attr} (strict "
+                        f"guarded-by {g.lock}) outside 'with "
+                        f"self.{g.lock}:'"))
+
+    def _check_store(self, target: ast.expr, held: set[str]) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._check_store(elt, held)
+            return
+        attr = root_self_attr(target)
+        if attr is None:
+            # still scan index expressions etc. for strict loads
+            self._expr(target, held)
+            return
+        g = self.guarded.get(attr)
+        if g is not None and g.lock not in held:
+            self.out.append(Violation(
+                path=self.path, line=target.lineno, rule="guarded-by",
+                message=f"write to {self.cls_name}.{attr} (guarded-by "
+                        f"{g.lock}) outside 'with self.{g.lock}:'"))
+        # subscript/attribute hops may themselves load strict attrs
+        self._expr(target, held)
+
+
+class _SeqlockWalker:
+    """A seqlock read section retries on a version counter instead of
+    blocking: any lock acquisition (deadlock against the writer's retry
+    window) or self-write (torn state visible to other readers) inside
+    one is a bug."""
+
+    def __init__(self, path: str, cls_name: str, fname: str):
+        self.path = path
+        self.where = f"{cls_name}.{fname}"
+        self.out: list[Violation] = []
+
+    def run(self, func: ast.AST) -> list[Violation]:
+        for node in ast.walk(func):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for lock in sorted(_with_locks(node)):
+                    self.out.append(Violation(
+                        path=self.path, line=node.lineno, rule="seqlock",
+                        message=f"seqlock-read section {self.where} "
+                                f"acquires self.{lock}"))
+            elif isinstance(node, ast.Call):
+                lock = _self_lock_of_acquire(node)
+                if lock is not None:
+                    self.out.append(Violation(
+                        path=self.path, line=node.lineno, rule="seqlock",
+                        message=f"seqlock-read section {self.where} "
+                                f"calls self.{lock}.acquire()"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign,
+                                   ast.AnnAssign, ast.Delete)):
+                targets = (node.targets if isinstance(
+                    node, (ast.Assign, ast.Delete)) else [node.target])
+                for t in targets:
+                    self._store(t, node.lineno)
+        return self.out
+
+    def _store(self, target: ast.expr, line: int) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._store(elt, line)
+            return
+        attr = root_self_attr(target)
+        if attr is not None:
+            self.out.append(Violation(
+                path=self.path, line=line, rule="seqlock",
+                message=f"seqlock-read section {self.where} writes "
+                        f"self.{attr}"))
+
+
+def check_module_source(source: str, path: str) -> list[Violation]:
+    """Run the lock-discipline and seqlock checkers over one module."""
+    try:
+        tree = parse_module(source, path)
+    except SyntaxError as exc:
+        return [Violation(path=path, line=exc.lineno or 0,
+                          rule="guarded-by",
+                          message=f"could not parse module: {exc.msg}")]
+    lines = source.splitlines()
+    out: list[Violation] = []
+    for cls in [n for n in ast.walk(tree)
+                if isinstance(n, ast.ClassDef)]:
+        guarded_list, marks, errors = collect_class_annotations(cls, lines)
+        for err in errors:
+            out.append(Violation(path=path, line=err.line, rule=err.rule,
+                                 message=err.message))
+        guarded = {g.attr: g for g in guarded_list}
+        if not guarded and not marks:
+            continue
+        lock_held_methods = {
+            f.name: set(m.lock_held)
+            for f, m in marks.items()
+            if m.lock_held and isinstance(f, _FUNC_NODES)}
+        # Methods directly in the class body (nested defs are handled by
+        # the walker itself, with a fresh held-lock set).
+        for func in [n for n in cls.body if isinstance(n, _FUNC_NODES)]:
+            fmarks = marks.get(func, FunctionMarks())
+            if fmarks.seqlock_read:
+                out.extend(_SeqlockWalker(path, cls.name,
+                                          func.name).run(func))
+                continue
+            if func.name in _CONSTRUCTORS:
+                continue
+            out.extend(_GuardedWalker(path, cls.name, guarded,
+                                      fmarks.lock_held,
+                                      lock_held_methods).run(func))
+    return out
+
+
+def check_file(path: str) -> list[Violation]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return check_module_source(fh.read(), path)
