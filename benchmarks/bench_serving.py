@@ -44,6 +44,27 @@ KEYS_SCALAR = 96
 KEYS_EMB = 48
 
 
+def _attach_engine_metrics(engine, server_snapshot=None) -> None:
+    """Bridge the run's silos into a throwaway obs registry and hand its
+    flattened snapshot to the suite's BENCH record."""
+    from repro.obs.bridge import (bridge_server_stats, bridge_tier_stats,
+                                  bridge_version_window)
+    from repro.obs.metrics import Registry
+
+    reg = Registry()
+    if server_snapshot is not None:
+        bridge_server_stats(reg, lambda: server_snapshot)
+
+    def tiers():
+        ok, _, build = engine.window.get(None)
+        return ({name: store.stats_snapshot()
+                 for name, store in build.stores.items()} if ok else {})
+
+    bridge_tier_stats(reg, tiers)
+    bridge_version_window(reg, engine.window)
+    common.attach_metrics(reg)
+
+
 def _make_engine(n_items: int, max_shard_bytes: int = 1 << 20
                  ) -> tuple[MultiTableEngine, np.ndarray]:
     rng = np.random.default_rng(0)
@@ -160,6 +181,7 @@ def main(quick: bool = False) -> None:
     common.row("serving/acceptance_8clients",
                0.0, f"best_speedup={best_8plus:.2f}x (target >= 2x) "
                     f"cores={os.cpu_count()}")
+    _attach_engine_metrics(engine, snap)    # last coalesced config's stats
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +308,7 @@ def main_qos(quick: bool = False) -> None:
         f"ranking_shed={rank.shed_rate:.1%} "
         f"prefetch_shed={pref.shed_rate:.1%} "
         f"ranking_strictly_better={ok}")
+    _attach_engine_metrics(engine, snap)    # the lanes run's stats
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +389,12 @@ def main_fabric(quick: bool = False) -> None:
                        f"qps={qps:.0f} "
                        f"p99={np.percentile(lats, 99):.1f}ms "
                        f"replicas=1 clients={n_clients}")
+            if n_shards == 4:      # the full-width run's fabric metrics
+                from repro.obs.bridge import bridge_router
+                from repro.obs.metrics import Registry
+                reg = Registry()
+                bridge_router(reg, router)
+                common.attach_metrics(reg)
         finally:
             router.close()
             shutil.rmtree(root, ignore_errors=True)

@@ -41,3 +41,22 @@ def drain_rows() -> list[dict]:
     out = list(_captured)
     _captured.clear()
     return out
+
+
+# metrics snapshots since the last drain — run.py drains per suite into
+# the BENCH_<alias>.json record's "metrics" key
+_metrics: dict = {}
+
+
+def attach_metrics(registry) -> None:
+    """Merge a flattened obs-registry snapshot into the suite's record
+    (later attaches win on key collisions)."""
+    from repro.obs import exporter
+    _metrics.update(exporter.snapshot(registry))
+
+
+def drain_metrics() -> dict:
+    """Return and clear the metrics attached since the last drain."""
+    out = dict(_metrics)
+    _metrics.clear()
+    return out

@@ -1,9 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks datasets.
-``--records-dir DIR`` additionally writes one ``BENCH_<alias>.json`` per
-suite run (rows + timing + outcome) — the machine-readable record CI
-uploads as an artifact, so a perf regression is diffable across commits
-without scraping logs."""
+Writes one ``BENCH_<alias>.json`` per suite run (rows + timing + outcome
++ a flattened metrics snapshot) into ``--records-dir`` — defaulting to
+the repo root, so records accumulate where CI commits/uploads them — the
+machine-readable record that makes a perf regression diffable across
+commits without scraping logs.  ``--records-dir ''`` disables records."""
 from __future__ import annotations
 
 import argparse
@@ -19,8 +20,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv,"
                          "qos,fab")
-    ap.add_argument("--records-dir", default=None,
-                    help="write BENCH_<alias>.json per suite here")
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap.add_argument("--records-dir", default=repo_root,
+                    help="write BENCH_<alias>.json per suite here "
+                         "(default: the repo root; '' disables)")
     args = ap.parse_args()
 
     from benchmarks import (common, bench_scalar_tables, bench_size_sweep,
@@ -52,6 +55,7 @@ def main() -> None:
             continue
         t0 = time.time()
         common.drain_rows()                        # suite-local capture
+        common.drain_metrics()
         ok, error = True, None
         try:
             fn(quick=args.quick)
@@ -64,7 +68,8 @@ def main() -> None:
         if args.records_dir:
             record = {"alias": key, "quick": bool(args.quick),
                       "unix_time": int(t0), "duration_s": round(duration, 3),
-                      "ok": ok, "rows": common.drain_rows()}
+                      "ok": ok, "rows": common.drain_rows(),
+                      "metrics": common.drain_metrics()}
             if error:
                 record["error"] = error
             path = os.path.join(args.records_dir, f"BENCH_{key}.json")

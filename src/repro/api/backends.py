@@ -279,6 +279,13 @@ class StoreBackend:
                     f"{self._version} (versions are monotonic)")
             self._version = version
 
+    def tier_stats(self) -> dict[str, dict]:
+        """Per-table tier-counter snapshots (``{table: {field: value}}``)
+        for the observability bridge and the fabric's KIND_STATS scrape —
+        each store's counters copied atomically under its stats lock."""
+        return {name: dataclasses.asdict(store.stats_snapshot())
+                for name, store in self.stores.items()}
+
     # -- snapshot/restore (the fabric's respawn substrate) ---------------
     SNAPSHOT_FORMAT = 1
 

@@ -142,12 +142,18 @@ def _coerce_tables(tables: dict) -> dict[str, np.ndarray]:
 
 @dataclasses.dataclass
 class QueryRequest:
-    """One typed query: per-table key sets + QoS + consistency + budget."""
+    """One typed query: per-table key sets + QoS + consistency + budget.
+
+    ``trace`` is the optional tracing context (``{"trace_id": ...,
+    "parent_id": ...}``) stamped at the sampling edge; servers that see
+    it record spans for this request (obs/trace.py) and carry it across
+    the wire, so a fabric query yields one cross-process timeline."""
 
     tables: dict[str, np.ndarray]
     qos: QoSClass = QoSClass.RANKING
     consistency: Consistency = dataclasses.field(default_factory=Consistency)
     budget_s: Optional[float] = None
+    trace: Optional[dict] = None
 
     def __post_init__(self):
         self.tables = _coerce_tables(self.tables)
@@ -158,6 +164,11 @@ class QueryRequest:
         if self.budget_s is not None and not self.budget_s > 0:
             raise ValueError(f"budget_s must be positive, "
                              f"got {self.budget_s}")
+        if self.trace is not None and (
+                not isinstance(self.trace, dict)
+                or not isinstance(self.trace.get("trace_id"), str)):
+            raise ValueError("trace must be None or a dict with a "
+                             "'trace_id' str")
 
     @property
     def n_keys(self) -> int:
@@ -173,12 +184,16 @@ class QueryResponse(QueryResult):
     qos: QoSClass = QoSClass.RANKING
     latency_s: float = float("nan")
     batch_id: int = -1                 # -1: direct (unbatched) backend call
+    # spans recorded for this request (list of Span.to_wire dicts) when it
+    # carried a trace context; the router merges shard-side lists here
+    trace: Optional[list] = None
 
     @classmethod
     def from_result(cls, result: QueryResult, *, qos: QoSClass,
-                    latency_s: float, batch_id: int = -1) -> "QueryResponse":
+                    latency_s: float, batch_id: int = -1,
+                    trace: Optional[list] = None) -> "QueryResponse":
         return cls(version=result.version, tables=result.tables, qos=qos,
-                   latency_s=latency_s, batch_id=batch_id)
+                   latency_s=latency_s, batch_id=batch_id, trace=trace)
 
 
 @dataclasses.dataclass

@@ -34,12 +34,12 @@ from repro.api.types import (Consistency, QoSClass, QueryRequest,
 
 __all__ = [
     "KIND_QUERY", "KIND_UPDATE", "KIND_HEALTH", "KIND_SNAPSHOT",
-    "KIND_SHUTDOWN", "KIND_RESPONSE", "KIND_OK", "KIND_ERROR",
-    "WIRE_MESSAGES",
+    "KIND_SHUTDOWN", "KIND_STATS", "KIND_RESPONSE", "KIND_OK",
+    "KIND_ERROR", "WIRE_MESSAGES",
     "decode_error", "decode_ok", "decode_request", "decode_response",
-    "decode_tree", "decode_update", "encode_error", "encode_ok",
-    "encode_request", "encode_response", "encode_tree", "encode_update",
-    "pack_frame", "unpack_frame",
+    "decode_stats", "decode_tree", "decode_update", "encode_error",
+    "encode_ok", "encode_request", "encode_response", "encode_stats",
+    "encode_tree", "encode_update", "pack_frame", "unpack_frame",
 ]
 
 MAGIC = b"NWIR"
@@ -51,6 +51,7 @@ KIND_UPDATE = 2
 KIND_HEALTH = 3
 KIND_SNAPSHOT = 4
 KIND_SHUTDOWN = 5
+KIND_STATS = 6       # observability scrape: shard stats silo snapshots
 # shard -> router
 KIND_RESPONSE = 16
 KIND_OK = 17
@@ -186,6 +187,8 @@ def encode_request(req: QueryRequest) -> bytes:
         "consistency": {"mode": req.consistency.mode,
                         "version": req.consistency.version},
         "budget_s": req.budget_s,
+        # tracing context header (obs/trace.py); None when unsampled
+        "trace": req.trace,
     })
 
 
@@ -196,7 +199,8 @@ def decode_request(data) -> QueryRequest:
         tables=t["tables"],
         qos=QoSClass.parse(t["qos"]),
         consistency=Consistency(c["mode"], c["version"]),
-        budget_s=t["budget_s"])
+        budget_s=t["budget_s"],
+        trace=t.get("trace"))
 
 
 def encode_response(res: QueryResponse) -> bytes:
@@ -210,6 +214,9 @@ def encode_response(res: QueryResponse) -> bytes:
         "latency_s": res.latency_s,
         "batch_id": res.batch_id,
         "tables": tables,
+        # spans recorded shard-side for a traced request (wire dicts);
+        # the router merges them into its own timeline
+        "trace": res.trace,
     })
 
 
@@ -221,7 +228,8 @@ def decode_response(data) -> QueryResponse:
     return QueryResponse(version=int(t["version"]), tables=tables,
                          qos=QoSClass.parse(t["qos"]),
                          latency_s=t["latency_s"],
-                         batch_id=int(t["batch_id"]))
+                         batch_id=int(t["batch_id"]),
+                         trace=t.get("trace"))
 
 
 def encode_update(version: int, upserts: dict, deletes: dict) -> bytes:
@@ -293,6 +301,18 @@ def decode_ok(data) -> dict:
     return decode_tree(data)
 
 
+def encode_stats(stats: Optional[dict] = None) -> bytes:
+    """Observability scrape payload — a plain tree of stat-silo snapshots
+    (``{"server": ..., "tiers": ...}`` in replies; ``{}`` as the request
+    ping).  Kept as its own codec pair so the wire-coverage gate pins a
+    stable shape for the stats RPC."""
+    return encode_tree(stats or {})
+
+
+def decode_stats(data) -> dict:
+    return decode_tree(data)
+
+
 # Message registry: every frame kind with its (encode, decode) pair.
 # This is the protocol's single source of truth — the fabric dispatches
 # by kind, `tools.analyze` fails if a KIND_* is missing here, and
@@ -304,6 +324,7 @@ WIRE_MESSAGES = {
     KIND_HEALTH: (encode_tree, decode_tree),
     KIND_SNAPSHOT: (encode_tree, decode_tree),
     KIND_SHUTDOWN: (encode_tree, decode_tree),
+    KIND_STATS: (encode_stats, decode_stats),
     KIND_RESPONSE: (encode_response, decode_response),
     KIND_OK: (encode_ok, decode_ok),
     KIND_ERROR: (encode_error, decode_error),

@@ -21,6 +21,7 @@ translates observed IO counts into modeled NVMe/DDR time for benchmarks.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import json
 import os
@@ -393,6 +394,14 @@ class HybridKVStore:
         pair yields a fraction that never existed."""
         with self._stats_lock:
             return self.stats.garbage_bytes, self.stats.cold_file_bytes
+
+    def stats_snapshot(self) -> TierStats:
+        """A consistent copy of the tier counters for observability
+        bridges/scrapes — every field read under ``_stats_lock`` as one
+        atomic snapshot (a scrape must never see a torn hit/lookup or
+        garbage/file pair)."""
+        with self._stats_lock:
+            return dataclasses.replace(self.stats)
 
     @property
     def garbage_fraction(self) -> float:

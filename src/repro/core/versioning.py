@@ -54,6 +54,17 @@ class VersionWindow:
         # even a point read (max/membership) must serialize with it
         self._states: dict[int, object] = {}  # guarded-by: _lock (strict)
         self._lock = threading.Lock()
+        # protocol counters for the observability bridge: pins served,
+        # NACKs issued, publishes/evictions seen; bumped under the same
+        # lock the protocol itself runs under
+        # guarded-by: _lock (strict)
+        self._counters = {"pins": 0, "nacks": 0, "publishes": 0,
+                          "evictions": 0}
+
+    def counters(self) -> dict[str, int]:
+        """A consistent copy of the window's protocol counters."""
+        with self._lock:
+            return dict(self._counters)
 
     @property
     def versions(self) -> list[int]:
@@ -68,8 +79,10 @@ class VersionWindow:
     def publish(self, version: int, state) -> None:
         with self._lock:
             self._states[version] = state
+            self._counters["publishes"] += 1
             while len(self._states) > self.retain:
                 del self._states[min(self._states)]
+                self._counters["evictions"] += 1
 
     def reset(self, versions_to_states: dict) -> None:
         """Replace the whole window (node repair / replica revive); the
@@ -84,11 +97,14 @@ class VersionWindow:
         """-> (ok, version_served, state).  ``version=None`` pins latest."""
         with self._lock:
             if not self._states:
+                self._counters["nacks"] += 1
                 return False, -1, None
             v = max(self._states) if version is None else version
             if v not in self._states:
                 # NACK + best retained hint
+                self._counters["nacks"] += 1
                 return False, max(self._states), None
+            self._counters["pins"] += 1
             return True, v, self._states[v]
 
 

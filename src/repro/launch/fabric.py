@@ -17,6 +17,7 @@ This module is importable without jax — the whole fabric stack is.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import tempfile
 import threading
@@ -26,6 +27,9 @@ import numpy as np
 
 from repro.api import FeatureClient, UpdateRequest, as_backend
 from repro.core.query_types import EmbeddingTable
+from repro.obs.bridge import bridge_router
+from repro.obs.exporter import MetricsServer, snapshot
+from repro.obs.metrics import Registry
 from repro.serve.fabric import FabricConfig, FabricError, Router
 
 
@@ -39,7 +43,8 @@ def build_router(args, snapshot_root: str) -> Router:
                              variant=args.variant)]
     cfg = FabricConfig(n_shards=args.shards, n_replicas=args.replicas,
                        snapshot_root=snapshot_root,
-                       health_period_s=0.25, snapshot_every=4)
+                       health_period_s=0.25, snapshot_every=4,
+                       trace_sample_rate=args.trace_sample)
     t0 = time.perf_counter()
     router = Router.build(tables, cfg)
     print(f"fabric: {args.shards} shards x {args.replicas} replicas up in "
@@ -50,7 +55,9 @@ def build_router(args, snapshot_root: str) -> Router:
 
 def drive(args, router: Router) -> int:
     client = FeatureClient(as_backend(router), default_budget_s=5.0)
-    rng = np.random.default_rng(1)
+    # same generator seed as build_router: drive the keys the tables
+    # actually hold, so hit-rate/tier metrics reflect real traffic
+    rng = np.random.default_rng(0)
     keys = np.unique(rng.integers(1, 1 << 62, args.n_keys * 2,
                                   dtype=np.uint64))[:args.n_keys]
     lat: list[float] = []
@@ -144,6 +151,14 @@ def main():
                     help="kill a random replica every second while serving")
     ap.add_argument("--snapshot-root", default=None,
                     help="snapshot directory (default: a temp dir)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics on this port while "
+                         "driving (0 = ephemeral; the bound URL is printed)")
+    ap.add_argument("--trace-sample", type=float, default=0.0,
+                    help="fraction of queries to trace end-to-end [0,1]")
+    ap.add_argument("--record", default=None,
+                    help="write a BENCH-style JSON record (counters + "
+                         "metrics snapshot) to this path on exit")
     args = ap.parse_args()
     if args.smoke:
         args.n_keys = min(args.n_keys, 8000)
@@ -151,10 +166,32 @@ def main():
 
     own_tmp = args.snapshot_root is None
     root = args.snapshot_root or tempfile.mkdtemp(prefix="fabric-snap-")
+    t_start = time.time()
     router = build_router(args, root)
+    registry = Registry()
+    bridge_router(registry, router)
+    metrics_srv = None
+    if args.metrics_port is not None:
+        metrics_srv = MetricsServer(registry,
+                                    port=args.metrics_port).start()
+        print(f"metrics: serving {metrics_srv.url}", flush=True)
     try:
         rc = drive(args, router)
+        if args.record:
+            record = {
+                "alias": "fabric_chaos" if args.chaos else "fabric_smoke",
+                "unix_time": int(t_start),
+                "duration_s": round(time.time() - t_start, 3),
+                "ok": rc == 0,
+                "shards": args.shards, "replicas": args.replicas,
+                "metrics": snapshot(registry),
+            }
+            with open(args.record, "w") as f:
+                json.dump(record, f, indent=1)
+            print(f"record: wrote {args.record}", flush=True)
     finally:
+        if metrics_srv is not None:
+            metrics_srv.close()
         router.close()
         if own_tmp:
             import shutil

@@ -1,0 +1,15 @@
+"""Dependency-free observability: metrics registry, Prometheus text
+exposition, and sampled cross-process request tracing.
+
+Everything in this package is stdlib-only and importable without jax —
+shard-server children (gated by the import-graph checker) serve their own
+``/metrics`` endpoint from it.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry,
+                               REGISTRY, get_registry)
+from repro.obs.trace import Span, Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+    "get_registry", "Span", "Tracer",
+]

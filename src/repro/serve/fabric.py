@@ -51,9 +51,11 @@ from repro.api.types import (Consistency, QoSClass, QueryRequest,
 from repro.core.hybrid_store import HybridKVStore
 from repro.core.query_types import (EmbeddingTable, QueryResult, TableResult,
                                     VersionEvictedError)
+from repro.obs.trace import Span, Tracer, new_id
 
-__all__ = ["FabricConfig", "FabricError", "FabricMetrics", "NoReplicaError",
-           "ReplicaDeadError", "ReplicaHandle", "Router", "shard_of_keys"]
+__all__ = ["FabricConfig", "FabricCounts", "FabricError", "FabricMetrics",
+           "NoReplicaError", "ReplicaDeadError", "ReplicaHandle", "Router",
+           "shard_of_keys"]
 
 
 class FabricError(RuntimeError):
@@ -83,17 +85,24 @@ class FabricConfig:
     version_retries: int = 8          # NACK -> re-resolve attempts per query
     server_workers: int = 2           # QueryServer finish workers per shard
     max_wait_s: float = 0.0           # shard-side micro-batch close rule
+    trace_sample_rate: float = 0.0    # fraction of queries traced end-to-end
 
     def __post_init__(self):
         if self.n_shards < 1 or self.n_replicas < 1:
             raise ValueError("n_shards and n_replicas must be >= 1")
+        if not 0.0 <= self.trace_sample_rate <= 1.0:
+            raise ValueError(f"trace_sample_rate must be in [0, 1], got "
+                             f"{self.trace_sample_rate}")
         if not self.snapshot_root:
             raise ValueError("snapshot_root is required (snapshots are the "
                              "respawn substrate, not an optional extra)")
 
 
 @dataclasses.dataclass
-class FabricMetrics:
+class FabricCounts:
+    """The router's counter set — a plain record so ``snapshot()`` can
+    hand out consistent copies and the metrics bridge (obs/bridge.py) can
+    enumerate the fields."""
     queries: int = 0
     sub_queries: int = 0
     updates: int = 0
@@ -104,6 +113,33 @@ class FabricMetrics:
     replica_failures: int = 0         # processes observed dead
     respawns: int = 0
     snapshots: int = 0
+
+
+class FabricMetrics:
+    """Thread-safe fabric counters.  The old dataclass was bumped bare
+    (``metrics.queries += 1``) from client threads, the health checker,
+    and finish workers at once — increments raced and lost.  Writes now go
+    through ``inc`` under a lock; reads keep working attribute-style
+    (``router.metrics.respawns``) via ``__getattr__``, each one a locked
+    point read of the live counts."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._c = FabricCounts()      # guarded-by: _lock (strict)
+
+    def inc(self, field: str, n: int = 1) -> None:
+        with self._lock:
+            setattr(self._c, field, getattr(self._c, field) + n)
+
+    def snapshot(self) -> FabricCounts:
+        with self._lock:
+            return dataclasses.replace(self._c)
+
+    def __getattr__(self, name: str):
+        if name.startswith("_"):
+            raise AttributeError(name)
+        with self._lock:
+            return getattr(self._c, name)
 
 
 # the repo-wide mix hash (hashcore's numpy flavour), restated here so the
@@ -162,10 +198,16 @@ def _shard_server_main(conn, shard_id: int, replica_id: int,
     except BaseException as e:  # noqa: BLE001
         send(wire.KIND_ERROR, 0, wire.encode_error(e))
         return
+    # sample_rate 0: the shard never ORIGINATES traces, but requests that
+    # arrive carrying a trace context (sampled at the router edge) are
+    # recorded, and their spans ride back on the wire response
+    tracer = Tracer(sample_rate=0.0,
+                    proc=f"shard{shard_id}/r{replica_id}")
     server = QueryServer(
         backend,
         BatchPolicy(max_wait_s=float(options.get("max_wait_s", 0.0))),
-        workers=int(options.get("server_workers", 2)))
+        workers=int(options.get("server_workers", 2)),
+        tracer=tracer)
     pool = ThreadPoolExecutor(max_workers=4,
                               thread_name_prefix=f"reply-s{shard_id}")
     send(wire.KIND_OK, 0, wire.encode_tree(
@@ -217,6 +259,17 @@ def _shard_server_main(conn, shard_id: int, replica_id: int,
             send(wire.KIND_OK, rid, wire.encode_tree(
                 {"version": backend.latest_version,
                  "tables": backend.table_names}))
+        elif kind == wire.KIND_STATS:
+            # observability scrape: this replica's stat silos as one tree
+            # (serving counters/percentiles + per-table tier counters)
+            try:
+                send(wire.KIND_OK, rid, wire.encode_stats({
+                    "shard": shard_id, "replica": replica_id,
+                    "version": backend.latest_version,
+                    "server": dataclasses.asdict(server.stats_snapshot()),
+                    "tiers": backend.tier_stats()}))
+            except BaseException as e:  # noqa: BLE001
+                send(wire.KIND_ERROR, rid, wire.encode_error(e))
         elif kind == wire.KIND_SNAPSHOT:
             try:
                 target = wire.decode_tree(payload)["dir"]
@@ -430,6 +483,11 @@ class Router:
         # must never join mid-update or replay a half-logged delta
         self._update_lock = threading.RLock()
         self.metrics = FabricMetrics()
+        # edge tracer: query_ex samples here, shard children record under
+        # the propagated context, and the merged cross-process timeline
+        # lands back in this tracer (and on the response)
+        self.tracer = Tracer(sample_rate=cfg.trace_sample_rate,
+                             proc="router")
         self._rr = [itertools.count() for _ in range(cfg.n_shards)]
         # non-strict: the query fan-out reads handles lock-free; a
         # respawn swapping a handle mid-read at worst routes one call
@@ -532,12 +590,24 @@ class Router:
             for s in np.unique(owner):
                 sub_tables.setdefault(int(s), {})[name] = uniq[owner == s]
         info = {"keys_deviceside": deviceside, "launches": len(sub_tables)}
-        self.metrics.queries += 1
+        self.metrics.inc("queries")
+
+        # edge sampling: an incoming context propagates; otherwise the
+        # router's tracer decides.  Sub-queries carry the context with the
+        # route span as parent, so shard-side timelines merge under it.
+        tctx = request.trace
+        if tctx is None:
+            tid = self.tracer.sample()
+            if tid is not None:
+                tctx = {"trace_id": tid}
+        route_sid = new_id() if tctx is not None else None
+        sub_trace = None if tctx is None else \
+            {"trace_id": tctx["trace_id"], "parent_id": route_sid}
 
         last_error: Optional[BaseException] = None
         for attempt in range(self.cfg.version_retries):
             if attempt:
-                self.metrics.version_retries += 1
+                self.metrics.inc("version_retries")
                 time.sleep(0.001 * attempt)       # let the update settle
             v = self._fleet_version
             if request.consistency.mode == "pinned" \
@@ -546,7 +616,8 @@ class Router:
                     f"version {request.consistency.version} not retained; "
                     f"the fleet serves only [{v}]")
             try:
-                responses = self._fan_out(sub_tables, v, request.qos)
+                responses, rpc_spans = self._fan_out(
+                    sub_tables, v, request.qos, trace=sub_trace)
             except VersionEvictedError as e:
                 last_error = e        # stale pin: re-resolve and retry
                 continue
@@ -554,36 +625,67 @@ class Router:
             if len(versions) > 1:                  # pragma: no cover
                 # strict pins make this unreachable; belt + braces so a
                 # future bug turns into a retry, never a mixed answer
-                self.metrics.mixed_version_averted += 1
+                self.metrics.inc("mixed_version_averted")
                 last_error = FabricError(
                     f"sub-responses spanned versions {sorted(versions)}")
                 continue
             served = versions.pop() if versions else v
             request.consistency.check(served)     # min_version post-check
-            self.metrics.consistent_batches += 1
+            self.metrics.inc("consistent_batches")
             merged = self._merge(parts, responses, served)
+            trace_wire = None
+            if tctx is not None:
+                trace_wire = self._merge_trace(
+                    tctx, route_sid, t0, rpc_spans, responses, served,
+                    attempt)
             return (QueryResponse.from_result(
                 merged, qos=request.qos,
-                latency_s=time.monotonic() - t0), info)
+                latency_s=time.monotonic() - t0,
+                trace=trace_wire), info)
         raise FabricError(
             f"query failed after {self.cfg.version_retries} attempts"
             ) from last_error
 
-    def _fan_out(self, sub_tables: dict, version: int, qos: QoSClass
-                 ) -> dict:
+    def _merge_trace(self, tctx: dict, route_sid: str, t0: float,
+                     rpc_spans: list, responses: dict, version: int,
+                     attempt: int) -> list:
+        """One cross-process timeline: the router's ``route`` root + its
+        per-shard ``shard_rpc`` spans + every span the shard servers
+        recorded (admission ... scatter, stamped on the shared
+        CLOCK_MONOTONIC timebase).  Recorded in the router tracer and
+        returned as wire dicts on the response."""
+        tid = tctx["trace_id"]
+        spans = [Span(tid, "route", t0, time.monotonic(),
+                      parent_id=tctx.get("parent_id"), span_id=route_sid,
+                      proc=self.tracer.proc,
+                      tags={"version": version, "attempts": attempt + 1,
+                            "shards": sorted(responses)})]
+        spans.extend(rpc_spans)
+        for res in responses.values():
+            if res.trace:
+                spans.extend(Span.from_wire(d) for d in res.trace)
+        self.tracer.record(spans)
+        return [s.to_wire() for s in spans]
+
+    def _fan_out(self, sub_tables: dict, version: int, qos: QoSClass,
+                 trace: Optional[dict] = None) -> tuple[dict, list]:
         """Dispatch every shard's sub-query pinned strict to ``version``,
         with per-shard failover to surviving replicas; returns
-        ``{shard: QueryResult}``."""
+        ``({shard: QueryResult}, [shard_rpc Span, ...])`` (the span list
+        is empty for untraced queries)."""
         payloads = {}
         for s, tables in sub_tables.items():
             payloads[s] = wire.encode_request(QueryRequest(
                 tables=tables, qos=qos,
-                consistency=Consistency.pinned(version)))
+                consistency=Consistency.pinned(version),
+                trace=trace))
+        t_dispatch = time.monotonic()
         futures = {}
         for s, payload in payloads.items():
             futures[s] = self._submit_shard(s, payload)
-            self.metrics.sub_queries += 1
+            self.metrics.inc("sub_queries")
         responses = {}
+        rpc_spans: list = []
         first_error: Optional[BaseException] = None
         for s, fut in futures.items():
             payload = payloads[s]
@@ -591,6 +693,12 @@ class Router:
                 try:
                     _, data = fut.result(self.cfg.call_timeout_s)
                     responses[s] = wire.decode_response(data)
+                    if trace is not None:
+                        rpc_spans.append(Span(
+                            trace["trace_id"], "shard_rpc", t_dispatch,
+                            time.monotonic(),
+                            parent_id=trace.get("parent_id"),
+                            proc=self.tracer.proc, tags={"shard": s}))
                     break
                 except FutureTimeoutError:
                     first_error = first_error or FabricError(
@@ -601,10 +709,10 @@ class Router:
                     # the replica died mid-flight: the request is NOT
                     # lost — re-dispatch the identical pinned sub-query
                     # to a survivor (NoReplicaError if none remain)
-                    self.metrics.failovers += 1
+                    self.metrics.inc("failovers")
                     try:
                         fut = self._submit_shard(s, payload)
-                        self.metrics.sub_queries += 1
+                        self.metrics.inc("sub_queries")
                     except NoReplicaError as e:
                         first_error = first_error or e
                         break
@@ -615,7 +723,7 @@ class Router:
                     break
         if first_error is not None:
             raise first_error
-        return responses
+        return responses, rpc_spans
 
     def _submit_shard(self, shard: int, payload: bytes) -> Future:
         group = self.replicas[shard]
@@ -626,7 +734,7 @@ class Router:
             try:
                 return handle.submit(wire.KIND_QUERY, payload)
             except ReplicaDeadError:
-                self.metrics.replica_failures += 1
+                self.metrics.inc("replica_failures")
                 continue
         raise NoReplicaError(f"shard {shard} has no live replica")
 
@@ -687,14 +795,14 @@ class Router:
                             (s, handle,
                              handle.submit(wire.KIND_UPDATE, payloads[s])))
                     except ReplicaDeadError:
-                        self.metrics.replica_failures += 1
+                        self.metrics.inc("replica_failures")
             acked_shards = set()
             for s, handle, fut in acks:
                 try:
                     fut.result(self.cfg.call_timeout_s)
                     acked_shards.add(s)
                 except (ReplicaDeadError, FutureTimeoutError):
-                    self.metrics.replica_failures += 1
+                    self.metrics.inc("replica_failures")
                 # a typed application error (bad rows) re-raises: the
                 # update was validated identically everywhere, so one
                 # replica failing it means they all would
@@ -706,7 +814,7 @@ class Router:
                     f"shards {missing}; fleet version stays "
                     f"{self._fleet_version}")
             self._fleet_version = update.version
-            self.metrics.updates += 1
+            self.metrics.inc("updates")
             self._updates_since_snapshot += 1
             due = self._updates_since_snapshot >= self.cfg.snapshot_every
         if due:
@@ -757,7 +865,7 @@ class Router:
             floor = min(sv for _, sv in self._snapshots)
             self._update_log = [e for e in self._update_log if e[0] > floor]
             self._updates_since_snapshot = 0
-            self.metrics.snapshots += 1
+            self.metrics.inc("snapshots")
         for path in old:
             shutil.rmtree(path, ignore_errors=True)
 
@@ -766,6 +874,26 @@ class Router:
             if handle is not None and handle.alive:
                 return handle
         return None
+
+    # -- observability ----------------------------------------------------
+    def collect_shard_stats(self, timeout_s: float = 5.0) -> dict:
+        """Scrape every live replica's stat silos over KIND_STATS:
+        ``{"shard<k>/r<j>": {"server": ..., "tiers": ..., ...}}``.  Dead
+        or unresponsive replicas are simply absent — a scrape must degrade,
+        never raise, mid-failover (the metrics endpoint calls this)."""
+        out: dict[str, dict] = {}
+        ping = wire.encode_stats({})
+        for s, group in enumerate(self.replicas):
+            for r, handle in enumerate(group):
+                if handle is None or not handle.alive:
+                    continue
+                try:
+                    _, data = handle.call(wire.KIND_STATS, ping,
+                                          timeout=timeout_s)
+                    out[f"shard{s}/r{r}"] = wire.decode_stats(data)
+                except (FabricError, ReplicaDeadError):
+                    continue
+        return out
 
     def respawn(self, shard: int, replica: int) -> None:
         """Bring a dead replica back: boot from the shard's latest
@@ -791,7 +919,7 @@ class Router:
                 handle.destroy()
                 raise
             self.replicas[shard][replica] = handle
-            self.metrics.respawns += 1
+            self.metrics.inc("respawns")
 
     # -- health ----------------------------------------------------------
     def start_health_checker(self) -> None:
@@ -823,7 +951,7 @@ class Router:
                     if self._health_stop.is_set():
                         return
                     if handle is None or not handle.alive:
-                        self.metrics.replica_failures += 1
+                        self.metrics.inc("replica_failures")
                         if self.cfg.respawn:
                             try:
                                 self.respawn(s, r)

@@ -341,6 +341,10 @@ class _Pending:
     qos: QoSClass
     consistency: Consistency          # checked against the served build
     ticket: Ticket
+    # tracing context (obs/trace.py) for a sampled request: at least
+    # {"trace_id": ...}; None on the untraced hot path — the server's
+    # span emission keys off this being non-None
+    trace: Optional[dict] = None
 
     @property
     def group(self) -> tuple:

@@ -44,6 +44,7 @@ from typing import Optional
 from repro.api.backends import as_backend
 from repro.api.types import (Consistency, ConsistencyError, QoSClass,
                              QueryRequest, QueryResponse)
+from repro.obs.trace import Span, Tracer
 from repro.serve.scheduler import (BatchPolicy, MicroBatcher, ServerStats,
                                    ServerClosedError, StatsSnapshot, Ticket,
                                    _Pending, coalesce, scatter)
@@ -73,11 +74,17 @@ class QueryServer:
                  class_policies: Optional[dict] = None,
                  lane_weights: Optional[dict] = None,
                  workers: int = 2, pipeline_depth: int = 2,
+                 tracer: Optional[Tracer] = None,
                  start: bool = True):
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
         if workers < 1:
             raise ValueError("workers must be >= 1")
+        # optional request tracing (obs/trace.py): with no tracer the only
+        # per-request cost is `is None` checks; with one, the tracer's
+        # sample() decides which fresh requests get a span timeline, and
+        # requests arriving with a trace context are always recorded
+        self.tracer = tracer
         self.backend = as_backend(backend)
         # legacy face: engine-backed servers keep their .engine attribute
         self.engine = getattr(self.backend, "engine", None)
@@ -214,13 +221,23 @@ class QueryServer:
                                                 min_version),
                 budget_s=budget_s)
         pin_version, pin_strict = req.consistency.pin_args()
+        tracer = self.tracer
+        tctx = None
+        if tracer is not None:
+            if req.trace is not None:
+                tctx = dict(req.trace)   # propagated edge decision
+            else:
+                tid = tracer.sample()    # rate 0 short-circuits
+                if tid is not None:
+                    tctx = {"trace_id": tid}
         now = time.monotonic()
         deadline = None if req.budget_s is None else now + req.budget_s
         ticket = Ticket(deadline)
         pending = _Pending(
             tables=req.tables, n_keys=req.n_keys, t_submit=now,
             deadline=deadline, version=pin_version, strict=pin_strict,
-            qos=req.qos, consistency=req.consistency, ticket=ticket)
+            qos=req.qos, consistency=req.consistency, ticket=ticket,
+            trace=tctx)
         self.stats.on_submit(req.qos)
         try:
             self._batcher.admit(pending)   # raises the typed shed errors
@@ -230,6 +247,11 @@ class QueryServer:
             # not a silently vanished request
             self.stats.on_failure(1, req.qos)
             raise
+        if tctx is not None:
+            # stamped post-admit; the scheduler may already be batching
+            # this request, so span emission falls back to t_submit when
+            # it wins that race
+            tctx["t_admit"] = time.monotonic()
         return ticket
 
     def query(self, request, *, qos=None, budget_s: Optional[float] = None,
@@ -276,7 +298,15 @@ class QueryServer:
                 return
             self._inflight.acquire()
             batch_id = next(self._batch_ids)
+            # batch-level trace timestamps, shared by every traced rider
+            # (coalesce/pin/begin/device/finish happen once per batch)
+            tinfo = None
+            if self.tracer is not None \
+                    and any(r.trace is not None for r in batch):
+                tinfo = {"formed": time.monotonic()}
             fused, spans = coalesce(batch)
+            if tinfo is not None:
+                tinfo["coalesced"] = time.monotonic()
             t_launch = time.monotonic()
             # in-flight BEFORE begin: a request stalled inside a slow
             # backend.begin() must be visible to close()'s drain, or a
@@ -289,6 +319,8 @@ class QueryServer:
                 # a concurrent publish evicts it from the window mid-flight
                 inflight = self.backend.begin(
                     fused, version=batch[0].version, strict=batch[0].strict)
+                if tinfo is not None:
+                    tinfo["begun"] = time.monotonic()
             except BaseException as e:  # noqa: BLE001
                 self._inflight.release()
                 self._inflight_reqs.pop(batch_id, None)
@@ -307,35 +339,86 @@ class QueryServer:
             # thread loops on to stage/launch the next micro-batch
             try:
                 self._pool.submit(self._finish_batch, batch_id, batch,
-                                  spans, inflight, t_launch)
+                                  spans, inflight, t_launch, tinfo)
             except RuntimeError:
                 # pool already shut down (close() raced a long drain):
                 # finish inline so no ticket is ever left hanging
                 self._finish_batch(batch_id, batch, spans, inflight,
-                                   t_launch)
+                                   t_launch, tinfo)
 
     def _serve_single(self, req: _Pending) -> None:
         """Rare fallback: serve one request as its own micro-batch, inline
         on the scheduler thread (used when a fused begin() failed, to
         isolate a request-specific fault to its origin)."""
+        tinfo = None
+        if self.tracer is not None and req.trace is not None:
+            tinfo = {"formed": time.monotonic()}
         fused, spans = coalesce([req])
+        if tinfo is not None:
+            tinfo["coalesced"] = time.monotonic()
         t_launch = time.monotonic()
         try:
             inflight = self.backend.begin(fused, version=req.version,
                                           strict=req.strict)
+            if tinfo is not None:
+                tinfo["begun"] = time.monotonic()
+                tinfo["finish_start"] = tinfo["begun"]
             result = self.backend.finish(inflight)
         except BaseException as e:  # noqa: BLE001
             self.stats.on_failure(1, req.qos)
             req.ticket._fail(e)
             return
         now = time.monotonic()
+        if tinfo is not None:
+            tinfo["launch"] = t_launch
+            tinfo["finish_end"] = now
         self._batcher.observe_service_time(now - t_launch)
         self.stats.on_batch(1, inflight.keys_requested,
                             inflight.keys_deviceside, inflight.launches)
-        self._deliver(req, result, spans[0], next(self._batch_ids), now)
+        self._deliver(req, result, spans[0], next(self._batch_ids), now,
+                      tinfo)
+
+    def _trace_spans(self, req: _Pending, tinfo: Optional[dict],
+                     version: int, batch_id: int, t_scatter: float,
+                     t_end: float) -> list:
+        """Build this request's span timeline (obs/trace.py taxonomy:
+        admission -> lane_wait -> coalesce -> version_pin -> begin ->
+        device -> finish -> scatter under a ``serve`` root), record it in
+        the tracer, and return the spans."""
+        tracer = self.tracer
+        ctx = req.trace
+        tid = ctx["trace_id"]
+        proc = tracer.proc
+        root = Span(tid, "serve", req.t_submit, t_end,
+                    parent_id=ctx.get("parent_id"), proc=proc,
+                    tags={"qos": req.qos.name, "batch_id": batch_id,
+                          "version": version, "n_keys": req.n_keys})
+        pid = root.span_id
+        # submit() stamps t_admit after admit() returns; a fast scheduler
+        # can deliver before that lands — fall back to the submit stamp
+        t_admit = ctx.get("t_admit", req.t_submit)
+        out = [root, Span(tid, "admission", req.t_submit, t_admit,
+                          parent_id=pid, proc=proc)]
+        if tinfo is not None:
+            chain = (("lane_wait", t_admit, tinfo["formed"]),
+                     ("coalesce", tinfo["formed"], tinfo["coalesced"]),
+                     ("version_pin", tinfo["coalesced"], tinfo["launch"]),
+                     ("begin", tinfo["launch"], tinfo["begun"]),
+                     ("device", tinfo["begun"], tinfo["finish_start"]),
+                     ("finish", tinfo["finish_start"],
+                      tinfo["finish_end"]))
+            for name, t0, t1 in chain:
+                tags = {"version": version} if name == "version_pin" \
+                    else None
+                out.append(Span(tid, name, t0, t1, parent_id=pid,
+                                proc=proc, tags=tags))
+        out.append(Span(tid, "scatter", t_scatter, t_end, parent_id=pid,
+                        proc=proc))
+        tracer.record(out)
+        return out
 
     def _deliver(self, req: _Pending, result, span, batch_id: int,
-                 now: float) -> None:
+                 now: float, tinfo: Optional[dict] = None) -> None:
         """Scatter one request's slice out of a finished batch, enforce its
         ``min_version`` requirement, record stats, wake the ticket."""
         latency = now - req.t_submit
@@ -345,21 +428,32 @@ class QueryServer:
             self.stats.on_failure(1, req.qos)
             req.ticket._fail(e)
             return
+        traced = self.tracer is not None and req.trace is not None
+        t_scatter = time.monotonic() if traced else 0.0
         sliced = scatter(result, span)
         met = None if req.deadline is None else now <= req.deadline
         # stats BEFORE waking the ticket: a client observing its result
         # (e.g. warmup join followed by reset_stats) must never find its
         # own completion still unrecorded
         self.stats.on_complete(latency, met, req.qos)
+        trace_wire = None
+        if traced:
+            spans = self._trace_spans(req, tinfo, result.version, batch_id,
+                                      t_scatter, time.monotonic())
+            trace_wire = [s.to_wire() for s in spans]
         req.ticket._complete(
             QueryResponse.from_result(sliced, qos=req.qos,
-                                      latency_s=latency, batch_id=batch_id),
+                                      latency_s=latency, batch_id=batch_id,
+                                      trace=trace_wire),
             batch_id, latency)
 
     def _finish_batch(self, batch_id: int, batch: list, spans: list,
-                      inflight, t_launch: float) -> None:
+                      inflight, t_launch: float,
+                      tinfo: Optional[dict] = None) -> None:
         try:
             try:
+                if tinfo is not None:
+                    tinfo["finish_start"] = time.monotonic()
                 result = self.backend.finish(inflight)
             except BaseException as e:  # noqa: BLE001
                 for req in batch:
@@ -369,11 +463,14 @@ class QueryServer:
             finally:
                 self._inflight.release()
             now = time.monotonic()
+            if tinfo is not None:
+                tinfo["launch"] = t_launch
+                tinfo["finish_end"] = now
             self._batcher.observe_service_time(now - t_launch)
             self.stats.on_batch(len(batch), inflight.keys_requested,
                                 inflight.keys_deviceside, inflight.launches)
             for req, span in zip(batch, spans):
-                self._deliver(req, result, span, batch_id, now)
+                self._deliver(req, result, span, batch_id, now, tinfo)
         finally:
             # whatever path settled (or raised), this batch is no longer
             # in flight — close() must not wait on or re-fail it

@@ -21,7 +21,8 @@ def _sample_request():
                 "scalar": rng.integers(0, 2**63, 5).astype(np.uint64)},
         qos=QoSClass.RETRIEVAL,
         consistency=Consistency("pinned", 42),
-        budget_s=0.25)
+        budget_s=0.25,
+        trace={"trace_id": "deadbeefcafe0123", "parent_id": "0011223344"})
 
 
 def _sample_response():
@@ -37,7 +38,12 @@ def _sample_response():
             values=np.zeros((0, 8), dtype=np.uint8)),
     }
     return QueryResponse(version=9, tables=tables, qos=QoSClass.PREFETCH,
-                         latency_s=0.003, batch_id=12)
+                         latency_s=0.003, batch_id=12,
+                         trace=[{"trace_id": "deadbeefcafe0123",
+                                 "span_id": "aa", "parent_id": None,
+                                 "name": "serve", "proc": "shard0/r0",
+                                 "t0": 1.5, "t1": 1.75,
+                                 "tags": {"version": 9}}])
 
 
 def _sample_update():
@@ -59,6 +65,7 @@ def _assert_request_eq(got, want):
     assert got.consistency.mode == want.consistency.mode
     assert got.consistency.version == want.consistency.version
     assert got.budget_s == want.budget_s
+    assert got.trace == want.trace
     assert set(got.tables) == set(want.tables)
     for name in want.tables:
         np.testing.assert_array_equal(got.tables[name], want.tables[name])
@@ -69,6 +76,7 @@ def _assert_response_eq(got, want):
     assert got.qos is want.qos
     assert got.latency_s == pytest.approx(want.latency_s)
     assert got.batch_id == want.batch_id
+    assert got.trace == want.trace
     assert set(got.tables) == set(want.tables)
     for name, tr in want.tables.items():
         for field in ("found", "payloads", "values"):
@@ -110,6 +118,10 @@ _SAMPLES = {
     wire.KIND_SNAPSHOT: (_sample_tree(), _assert_tree_eq, None),
     wire.KIND_SHUTDOWN: ({"op": "shutdown", "dir": ".", "nested": {},
                           "arr": np.zeros(1)}, _assert_tree_eq, None),
+    wire.KIND_STATS: ({"server": {"submitted": 12, "p99_ms": 1.25,
+                                  "per_class": {"RANKING": {"shed": 0}}},
+                       "tiers": {"emb": {"lookups": 40, "hot_hits": 33}}},
+                      _assert_ok_eq, None),
     wire.KIND_RESPONSE: (_sample_response(), _assert_response_eq, None),
     wire.KIND_OK: ({"applied": 3}, _assert_ok_eq, None),
     wire.KIND_ERROR: (VersionEvictedError("version 4 evicted"),

@@ -1,6 +1,6 @@
 """Concurrency-contract analyzer for the repo's annotated invariants.
 
-Four checkers, all stdlib-``ast`` based (no jax, no numpy, no repo
+Five checkers, all stdlib-``ast`` based (no jax, no numpy, no repo
 imports — safe for a bare CI runner):
 
   guarded-by        lock-discipline linting of ``# guarded-by`` /
@@ -8,6 +8,8 @@ imports — safe for a bare CI runner):
   seqlock           ``# seqlock-read`` sections must not lock or write
   process-boundary  jax-free import graph for fabric child processes
   coverage          kernel-oracle parity + wire-codec registry gates
+  metrics-catalog   every stat-silo field bridged to a unique,
+                    documented exposition name in obs/bridge.py
 
 Run from the repo root::
 
@@ -24,6 +26,7 @@ from typing import Callable, Optional
 from . import coverage as _coverage
 from . import imports as _imports
 from . import locks as _locks
+from . import metrics as _metrics
 from .core import Violation, iter_py_files
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
@@ -50,12 +53,17 @@ def _check_coverage(repo_root: str) -> list[Violation]:
     return _coverage.check_repo(repo_root)
 
 
+def _check_metrics(repo_root: str) -> list[Violation]:
+    return _metrics.check_repo(repo_root)
+
+
 # name -> checker; the name doubles as the --rule filter (lock and
 # seqlock share a source walk, so they ship as one entry).
 CHECKERS: dict[str, Callable[[str], list[Violation]]] = {
     "locks": _check_locks,
     "process-boundary": _check_imports,
     "coverage": _check_coverage,
+    "metrics": _check_metrics,
 }
 
 # Rule ids each checker can emit, for --rule filtering.
@@ -63,6 +71,7 @@ _CHECKER_RULES: dict[str, frozenset[str]] = {
     "locks": frozenset({"guarded-by", "seqlock"}),
     "process-boundary": frozenset({"process-boundary"}),
     "coverage": frozenset({"kernel-oracle", "wire-codec"}),
+    "metrics": frozenset({"metrics-catalog"}),
 }
 
 

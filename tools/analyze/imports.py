@@ -26,6 +26,9 @@ from .core import Violation, parse_module
 # (module, function) pairs that run in a forked/spawned child process.
 CHILD_ENTRYPOINTS: tuple[tuple[str, str], ...] = (
     ("repro.serve.fabric", "_shard_server_main"),
+    # the metrics exporter must stay jax-free so shard children can serve
+    # their own /metrics endpoint
+    ("repro.obs.exporter", "main"),
 )
 FORBIDDEN_PACKAGES: tuple[str, ...] = ("jax", "jaxlib")
 FIRST_PARTY_PREFIX = "repro"

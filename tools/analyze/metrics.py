@@ -1,0 +1,202 @@
+"""Checker 5: metrics-catalog coverage.
+
+The observability bridge (``src/repro/obs/bridge.py``) maps each stat
+silo's fields to Prometheus exposition names through module-level dict
+literals.  This checker keeps that catalog honest, by ``ast`` alone (no
+imports, safe on a bare CI runner):
+
+* every field of each bridged silo dataclass (``StatsSnapshot``,
+  ``ClassSnapshot``, ``FabricCounts``, ``TierStats``) appears in its
+  ``*_METRICS`` dict — or in the checker's explicit exemption list —
+  so a counter added to a silo cannot silently stay invisible;
+* the ``VersionWindow._counters`` keys and ``WINDOW_METRICS`` agree in
+  both directions;
+* every exposition name across all catalog dicts is unique and matches
+  ``^repro_[a-z][a-z0-9_]*$``;
+* every exposition name is documented in ``docs/observability.md``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Optional
+
+from .core import Violation, parse_module
+
+RULE = "metrics-catalog"
+NAME_RE = re.compile(r"^repro_[a-z][a-z0-9_]*$")
+
+BRIDGE = os.path.join("src", "repro", "obs", "bridge.py")
+DOCS = os.path.join("docs", "observability.md")
+
+# (dict name in bridge.py, dataclass file, dataclass name, exempt fields)
+SILOS = [
+    ("SERVER_STATS_METRICS", os.path.join("src", "repro", "serve",
+     "scheduler.py"), "StatsSnapshot", {"per_class"}),
+    ("CLASS_STATS_METRICS", os.path.join("src", "repro", "serve",
+     "scheduler.py"), "ClassSnapshot", set()),
+    ("FABRIC_METRICS", os.path.join("src", "repro", "serve",
+     "fabric.py"), "FabricCounts", set()),
+    ("TIER_STATS_METRICS", os.path.join("src", "repro", "core",
+     "tiering.py"), "TierStats", set()),
+]
+# catalog dicts that carry names but map no dataclass (derived ratios,
+# VersionWindow's plain-dict counters)
+EXTRA_CATALOGS = ["TIER_DERIVED_METRICS", "WINDOW_METRICS"]
+
+
+def _parse_file(path: str) -> Optional[ast.Module]:
+    if not os.path.isfile(path):
+        return None
+    with open(path, "r", encoding="utf-8") as fh:
+        return parse_module(fh.read(), path)
+
+
+def _str_dict_literal(tree: ast.Module, name: str
+                      ) -> Optional[tuple[dict[str, str], int]]:
+    """A module-level ``NAME = {"k": "v", ...}`` literal -> (dict, line)."""
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name) and t.id == name \
+                    and isinstance(node.value, ast.Dict):
+                out: dict[str, str] = {}
+                for k, v in zip(node.value.keys, node.value.values):
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str) \
+                            and isinstance(v, ast.Constant) \
+                            and isinstance(v.value, str):
+                        out[k.value] = v.value
+                return out, node.lineno
+    return None
+
+
+def _dataclass_fields(tree: ast.Module, cls_name: str) -> Optional[set[str]]:
+    """Annotated field names of a (dataclass-style) class body."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            return {stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)}
+    return None
+
+
+def _window_counter_keys(tree: ast.Module) -> Optional[set[str]]:
+    """String keys of ``self._counters = {...}`` inside VersionWindow."""
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef)
+                and node.name == "VersionWindow"):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Assign) \
+                    and isinstance(sub.value, ast.Dict):
+                for t in sub.targets:
+                    if isinstance(t, ast.Attribute) \
+                            and t.attr == "_counters":
+                        return {k.value for k in sub.value.keys
+                                if isinstance(k, ast.Constant)
+                                and isinstance(k.value, str)}
+    return None
+
+
+def check_repo(repo_root: str) -> list[Violation]:
+    bridge_path = os.path.join(repo_root, BRIDGE)
+    out: list[Violation] = []
+    bridge = _parse_file(bridge_path)
+    if bridge is None:
+        return [Violation(path=bridge_path, line=0, rule=RULE,
+                          message="obs/bridge.py not found")]
+
+    # gather every catalog dict; remember name -> first line for dupes
+    catalogs: dict[str, tuple[dict[str, str], int]] = {}
+    for dict_name in [s[0] for s in SILOS] + EXTRA_CATALOGS:
+        got = _str_dict_literal(bridge, dict_name)
+        if got is None:
+            out.append(Violation(
+                path=bridge_path, line=0, rule=RULE,
+                message=f"obs/bridge.py has no module-level {dict_name} "
+                        f"dict literal of str -> str"))
+            continue
+        catalogs[dict_name] = got
+
+    # silo field coverage, both directions
+    for dict_name, silo_rel, cls_name, exempt in SILOS:
+        if dict_name not in catalogs:
+            continue
+        mapping, line = catalogs[dict_name]
+        silo_path = os.path.join(repo_root, silo_rel)
+        tree = _parse_file(silo_path)
+        fields = _dataclass_fields(tree, cls_name) if tree else None
+        if fields is None:
+            out.append(Violation(
+                path=silo_path, line=0, rule=RULE,
+                message=f"dataclass {cls_name} not found for {dict_name}"))
+            continue
+        for field in sorted(fields - set(mapping) - exempt):
+            out.append(Violation(
+                path=bridge_path, line=line, rule=RULE,
+                message=f"{cls_name}.{field} has no metric name in "
+                        f"{dict_name} (bridge the field or exempt it in "
+                        f"tools/analyze/metrics.py)"))
+        for field in sorted(set(mapping) - fields):
+            out.append(Violation(
+                path=bridge_path, line=line, rule=RULE,
+                message=f"{dict_name} maps {field!r}, which is not a "
+                        f"field of {cls_name}"))
+
+    # VersionWindow counters <-> WINDOW_METRICS
+    if "WINDOW_METRICS" in catalogs:
+        mapping, line = catalogs["WINDOW_METRICS"]
+        ver_path = os.path.join(repo_root, "src", "repro", "core",
+                                "versioning.py")
+        tree = _parse_file(ver_path)
+        keys = _window_counter_keys(tree) if tree else None
+        if keys is None:
+            out.append(Violation(
+                path=ver_path, line=0, rule=RULE,
+                message="VersionWindow._counters dict literal not found"))
+        else:
+            for key in sorted(keys - set(mapping)):
+                out.append(Violation(
+                    path=bridge_path, line=line, rule=RULE,
+                    message=f"VersionWindow counter {key!r} has no metric "
+                            f"name in WINDOW_METRICS"))
+            for key in sorted(set(mapping) - keys):
+                out.append(Violation(
+                    path=bridge_path, line=line, rule=RULE,
+                    message=f"WINDOW_METRICS maps {key!r}, which is not a "
+                            f"VersionWindow counter"))
+
+    # global name rules: well-formed, unique, documented
+    docs_path = os.path.join(repo_root, DOCS)
+    docs_text = None
+    if os.path.isfile(docs_path):
+        with open(docs_path, "r", encoding="utf-8") as fh:
+            docs_text = fh.read()
+    else:
+        out.append(Violation(
+            path=docs_path, line=0, rule=RULE,
+            message="docs/observability.md not found (the metric catalog "
+                    "must be documented)"))
+    seen: dict[str, str] = {}
+    for dict_name, (mapping, line) in sorted(catalogs.items()):
+        for field, name in mapping.items():
+            if not NAME_RE.match(name):
+                out.append(Violation(
+                    path=bridge_path, line=line, rule=RULE,
+                    message=f"{dict_name}[{field!r}] = {name!r} does not "
+                            f"match {NAME_RE.pattern}"))
+            if name in seen:
+                out.append(Violation(
+                    path=bridge_path, line=line, rule=RULE,
+                    message=f"metric name {name!r} in {dict_name} is "
+                            f"already used by {seen[name]}"))
+            else:
+                seen[name] = dict_name
+            if docs_text is not None and name not in docs_text:
+                out.append(Violation(
+                    path=bridge_path, line=line, rule=RULE,
+                    message=f"metric name {name!r} ({dict_name}) is not "
+                            f"documented in docs/observability.md"))
+    return out
