@@ -1,0 +1,87 @@
+"""Freshness SLO bench: the streaming online-learning loop end to end.
+
+Drives ``repro.launch.realtime``'s loop in-process (sessionized traffic
+threads querying through ``FeatureClient``/``QueryServer`` concurrently
+with the streaming trainer / profile / trending stages publishing
+deltas) and records the freshness picture through the obs registry —
+the ``repro_stream_*`` metrics land in the BENCH record's metrics
+snapshot alongside the CSV rows.
+
+Rows:
+  rt/freshness          p50 as us_per_call-style ms; p99 + samples derived
+  rt/throughput         updates/s + qps + deltas published
+  rt/acceptance         ENFORCED: zero consistency violations, zero stage
+                        errors, and freshness p99 under the SLO budget —
+                        a violation raises, so ``run.py`` records the
+                        suite as failed and exits nonzero.
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_realtime.py [--quick]
+"""
+from __future__ import annotations
+
+import sys
+from types import SimpleNamespace
+
+from benchmarks import common
+
+SLO_S = 2.0
+
+
+def _args(quick: bool) -> SimpleNamespace:
+    return SimpleNamespace(
+        n_items=500 if quick else 2000,
+        n_users=64 if quick else 256,
+        clients=2 if quick else 4,
+        requests=12 if quick else 60,
+        train_batch=32,
+        retention=50_000,
+        max_backlog=4096,
+        top_k=8,
+        ryw_every=2,
+        batch_publish_s=2.0,
+        drain_s=10.0,
+        slo_s=SLO_S,
+    )
+
+
+def main(quick: bool = False) -> None:
+    from repro.launch import realtime
+    from repro.obs.metrics import Registry
+    from repro.obs.trace import Tracer
+
+    registry = Registry()
+    tracer = Tracer(sample_rate=0.0, proc="bench_rt")
+    rc, report = realtime.drive(_args(quick), registry, tracer)
+    common.attach_metrics(registry)
+
+    common.row("rt/freshness", report["freshness_p50_ms"] * 1e3,
+               f"p50={report['freshness_p50_ms']:.1f}ms "
+               f"p99={report['freshness_p99_ms']:.1f}ms "
+               f"samples={report['freshness_samples']} "
+               f"staleness_violations={report['staleness_violations']}")
+    common.row("rt/throughput", 0.0,
+               f"updates_per_s={report['updates_per_s']:.1f} "
+               f"qps={report['qps']:.1f} "
+               f"deltas={report['deltas_published']} "
+               f"trainer_steps={report['trainer_steps']} "
+               f"events={report['events_consumed']}")
+
+    p99_ok = report["freshness_p99_ms"] < SLO_S * 1000.0
+    common.row("rt/acceptance", 0.0,
+               f"rc={rc} p99={report['freshness_p99_ms']:.1f}ms "
+               f"(budget {SLO_S * 1000:.0f}ms) "
+               f"min_version_violations={report['min_version_violations']} "
+               f"version_regressions={report['version_regressions']} "
+               f"stage_errors={report['stage_errors'] or None} "
+               f"within_slo={p99_ok}")
+    if rc != 0:
+        raise RuntimeError(
+            f"realtime loop failed consistency/liveness gates: {report}")
+    if not p99_ok:
+        raise RuntimeError(
+            f"freshness p99 {report['freshness_p99_ms']:.1f}ms over the "
+            f"{SLO_S * 1000:.0f}ms SLO budget")
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv,"
-                         "qos,fab")
+                         "qos,fab,rt")
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     ap.add_argument("--records-dir", default=repo_root,
                     help="write BENCH_<alias>.json per suite here "
@@ -30,7 +30,8 @@ def main() -> None:
                             bench_ablation, bench_batch_latency,
                             bench_vectorization, bench_consistency,
                             bench_resource, bench_multitable,
-                            bench_incremental, bench_serving)
+                            bench_incremental, bench_serving,
+                            bench_realtime)
     suites = {
         "t1": bench_scalar_tables.main,
         "t2": bench_size_sweep.main,
@@ -44,6 +45,7 @@ def main() -> None:
         "srv": bench_serving.main,
         "qos": bench_serving.main_qos,
         "fab": bench_serving.main_fabric,
+        "rt": bench_realtime.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     if args.records_dir:

@@ -433,6 +433,182 @@ class HashTable:
                     self.stats.max_chain_len,
                     ops._run_len_around(placed) + 1)
 
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
+                     *, assume_new: bool = False) -> int:
+        """Vectorized mass upsert — ``apply_delta``'s brand-new-key path.
+
+        Semantically equivalent to ``insert`` per key (last-write-wins on
+        duplicate keys) but structured in phases so insert-heavy streaming
+        deltas avoid per-key Python chain surgery:
+
+        1. probe: one ``update_batch`` masked-advance pass rewrites keys
+           already resident (skipped under ``assume_new``);
+        2. mass placement: fresh keys whose home bucket is empty — the
+           dominant case below the target load factor — land with a
+           handful of fancy-index stores, one winner per contested home;
+        3. chain append: leftovers are grouped by home bucket, each
+           group's chain is walked to its tail once, and free slots come
+           from a batch-wide sorted free-slot index (``searchsorted``)
+           instead of a fresh occupancy-window scan per key.
+
+        Lodger evictions, end-pointer variants, and linear probing keep
+        the per-key path (their placement is inherently sequential).
+        Chain variants are home-rooted, so an empty home proves the key
+        absent — phase 2 cannot create duplicates even when
+        ``assume_new`` is wrong, and phase 3's chain walk doubles as the
+        membership check.  Raises ``BuildError`` exactly where ``insert``
+        would (state stays a consistent prefix; callers fall back to
+        ``build_grow``).  Returns the number of real inserts."""
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        payloads = np.asarray(payloads, dtype=np.uint64).ravel()
+        if keys.shape != payloads.shape:
+            raise ValueError("keys/payloads must be equal-length")
+        if len(keys) == 0:
+            return 0
+        if np.any(keys == np.uint64(hc.EMPTY_KEY)):
+            raise ValueError("EMPTY_KEY (2^64-1) is reserved")
+        if np.any(payloads > np.uint64(hc.PAYLOAD_MASK)):
+            raise ValueError("payload exceeds 52 bits")
+        before = self.stats.inserts
+        # last-write-wins dedup: np.unique keeps the FIRST occurrence, so
+        # feed it the reversed array (first-in-reverse = last-in-delta)
+        ridx = np.unique(keys[::-1], return_index=True)[1]
+        sel = np.sort(np.int64(len(keys) - 1) - ridx)
+        keys, payloads = keys[sel], payloads[sel]
+        if not assume_new:
+            updated = self.update_batch(keys, payloads)
+            if updated.all():
+                return 0
+            keys, payloads = keys[~updated], payloads[~updated]
+        if self.variant == "linear":
+            # PSL-bound maintenance is per-run anyway; stats stay
+            # consistent because insert() maintains n/load_factor itself
+            for k, p in zip(keys, payloads):
+                self.insert(int(k), int(p))
+            return self.stats.inserts - before
+        ops = self._ops()
+        q_hi, q_lo = hc.key_split_np(keys)
+        homes = hc.bucket_of_np(q_hi, q_lo,
+                                self.home_capacity).astype(np.int64)
+        # phase 2: mass placement into empty homes (offset code 0 = chain
+        # end, so val_hi carries only the top payload bits)
+        cand = np.flatnonzero(~ops.occ[homes])
+        left = np.ones(len(keys), dtype=bool)
+        if cand.size:
+            win = cand[np.unique(homes[cand], return_index=True)[1]]
+            idx = homes[win]
+            pay = payloads[win]
+            self.key_hi[idx] = q_hi[win]
+            self.key_lo[idx] = q_lo[win]
+            self.val_hi[idx] = ((pay >> np.uint64(32)).astype(np.uint32)
+                                & np.uint32(hc.PAYLOAD_HI_MASK))
+            self.val_lo[idx] = (pay & np.uint64(hc.MASK32)).astype(np.uint32)
+            ops.occ[idx] = True
+            self.stats.inserts += len(win)
+            left[win] = False
+        rest = np.flatnonzero(left)
+        if rest.size:
+            self._append_chains_batch(ops, payloads, q_hi, q_lo, homes, rest)
+        gained = self.stats.inserts - before
+        self.stats.n += gained
+        self.stats.load_factor = self.stats.n / self.capacity
+        return gained
+
+    def _append_chains_batch(self, ops: "_Builder", payloads: np.ndarray,
+                             q_hi: np.ndarray, q_lo: np.ndarray,
+                             homes: np.ndarray, rest: np.ndarray) -> None:
+        """``insert_batch`` phase 3: group leftovers by home bucket, walk
+        each host chain once (upserting any key found en route), then link
+        appendees to nearest free slots claimed from one sorted free-slot
+        index shared across the whole batch."""
+        per_key = self.variant in ("coalesced", "perfect_cellar",
+                                   "linear_lodger")
+        free_slots = np.flatnonzero(~ops.occ)
+        free_taken = np.zeros(free_slots.size, dtype=bool)
+
+        def claim_nearest(ref: int, lo: int, hi: int) -> int:
+            """Nearest live free slot to ``ref`` inside ``[lo, hi]`` or -1.
+            Lazily skips entries consumed since the index was built (the
+            per-key fallback occupies slots without telling us)."""
+            lo_i = int(np.searchsorted(free_slots, lo, side="left"))
+            hi_i = int(np.searchsorted(free_slots, hi, side="right"))
+            i = int(np.searchsorted(free_slots, ref))
+            l, r = min(i - 1, hi_i - 1), max(i, lo_i)
+            while l >= lo_i or r < hi_i:
+                dl = ref - int(free_slots[l]) if l >= lo_i else -1
+                dr = int(free_slots[r]) - ref if r < hi_i else -1
+                if dr < 0 or (0 <= dl <= dr):
+                    j, l = l, l - 1
+                else:
+                    j, r = r, r + 1
+                s = int(free_slots[j])
+                if not free_taken[j] and not ops.occ[s]:
+                    free_taken[j] = True
+                    return s
+            return -1
+
+        order = rest[np.argsort(homes[rest], kind="stable")]
+        g = 0
+        while g < len(order):
+            h = int(homes[order[g]])
+            e = g
+            while e < len(order) and int(homes[order[e]]) == h:
+                e += 1
+            group = order[g:e]
+            g = e
+            if per_key or not ops.occ[h] \
+                    or ops._home_of_resident(h) != h:
+                # end-pointer/linear-scan variants and lodger evictions:
+                # the per-key path does the full surgery
+                for j in group:
+                    ops.insert(int(q_hi[j]), int(q_lo[j]),
+                               int(payloads[j]), h)
+                continue
+            # host chain: one walk both upserts any group key already on
+            # the chain (home-purity: a resident key can live nowhere
+            # else) and finds the tail to append the rest behind
+            pending = {(int(q_hi[j]), int(q_lo[j])): int(payloads[j])
+                       for j in group}
+            idx, length = h, 1
+            while True:
+                hit = pending.pop((int(self.key_hi[idx]),
+                                   int(self.key_lo[idx])), None)
+                if hit is not None:
+                    _, code = hc.unpack_value_int(int(self.val_hi[idx]),
+                                                  int(self.val_lo[idx]))
+                    vhi, vlo = hc.pack_value_int(
+                        hit, code if self.inline else 0)
+                    self.val_hi[idx] = vhi
+                    self.val_lo[idx] = vlo
+                    self.stats.updates += 1
+                nxt = ops._next_of(idx)
+                if nxt < 0:
+                    break
+                idx = nxt
+                length += 1
+            tail = idx
+            for (kh, kl), pay in pending.items():
+                if self.inline:
+                    lo = max(0, tail + hc.OFFSET_MIN)
+                    hi = min(self.capacity - 1, tail + hc.OFFSET_MAX)
+                else:
+                    lo, hi = 0, self.capacity - 1
+                f = claim_nearest(tail, lo, hi)
+                if f < 0:
+                    if self.inline:
+                        raise BuildError(
+                            f"no free bucket within ±{hc.OFFSET_MAX} of "
+                            f"{tail} (12-bit inline offset exhausted; "
+                            f"grow the table)")
+                    raise BuildError("table full (batched chain append)")
+                ops._place(f, kh, kl, pay)
+                ops._set_next(tail, f)
+                tail = f
+                length += 1
+                self.stats.inserts += 1
+                self.stats.max_chain_len = max(self.stats.max_chain_len,
+                                               length)
+
     def update(self, key: int, payload: int) -> None:
         """Strict in-place payload update; KeyError if the key is absent.
         Never relocates, so it is safe on a table shared read-only with
@@ -998,7 +1174,9 @@ def apply_delta(
     probe plus two fancy-index stores instead of a per-key Python loop
     (ROADMAP "GIL-free delta application": batch updates release the GIL
     inside numpy, so thread-pooled per-shard delta builds really overlap).
-    Only brand-new keys (placement) and deletes (chain surgery) remain
+    Brand-new keys go through ``insert_batch`` (bulk empty-home placement
+    plus grouped chain appends against a sorted free-slot index); only
+    deletes, lodger evictions, and the end-pointer variants remain
     per-key.  When a placement fails (table full, 12-bit inline offset
     exhausted, or a coalesced-variant delete) the BuildError contract kicks
     in: the current residents plus the full delta are rebuilt through
@@ -1023,19 +1201,18 @@ def apply_delta(
     try:
         if len(upsert_keys):
             if assume_new:
-                updated = np.zeros(len(upsert_keys), dtype=bool)
+                t.insert_batch(upsert_keys, upsert_payloads,
+                               assume_new=True)
             else:
                 updated = t.update_batch(upsert_keys, upsert_payloads)
-            if not updated.all():
-                # brand-new keys need placement — per-key, last-write-wins
-                # on duplicates (dict preserves first-seen insert order so
-                # the layout matches the sequential loop's)
-                fresh: dict[int, int] = {}
-                for k, p in zip(upsert_keys[~updated],
-                                upsert_payloads[~updated]):
-                    fresh[int(k)] = int(p)
-                for k, p in fresh.items():
-                    t.insert(k, p)
+                if not updated.all():
+                    # brand-new keys: vectorized mass placement (empty
+                    # homes in bulk, then grouped chain appends against a
+                    # sorted free-slot index) — last-write-wins dedup
+                    # happens inside insert_batch
+                    t.insert_batch(upsert_keys[~updated],
+                                   upsert_payloads[~updated],
+                                   assume_new=True)
         for k in delete_keys:
             t.delete(int(k))
         return t

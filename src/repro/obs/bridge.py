@@ -101,6 +101,30 @@ WINDOW_METRICS = {
     "evictions": "repro_version_window_evictions_total",
 }
 
+# stream/pipeline.StreamSnapshot (the streaming update pipeline's silo)
+STREAM_METRICS = {
+    "events_consumed": "repro_stream_events_consumed_total",
+    "trainer_steps": "repro_stream_trainer_steps_total",
+    "deltas_published": "repro_stream_deltas_published_total",
+    "rows_upserted": "repro_stream_rows_upserted_total",
+    "profile_flushes": "repro_stream_profile_flushes_total",
+    "trending_refreshes": "repro_stream_trending_refreshes_total",
+    "events_shed": "repro_stream_events_shed_total",
+    "truncations_recovered": "repro_stream_truncations_recovered_total",
+    "staleness_violations": "repro_stream_staleness_violations_total",
+    "min_version_violations": "repro_stream_min_version_violations_total",
+    "freshness_samples": "repro_stream_freshness_samples",
+    "freshness_p50_ms": "repro_stream_freshness_p50_ms",
+    "freshness_p99_ms": "repro_stream_freshness_p99_ms",
+    "updates_per_s": "repro_stream_updates_per_s",
+}
+
+# the event-append -> servable-version latency distribution (observed by
+# StreamStats.on_freshness, wired in bridge_stream_stats)
+STREAM_HISTOGRAM_METRICS = {
+    "freshness_seconds": "repro_stream_freshness_seconds",
+}
+
 
 def _emit(registry: Registry, mapping: Dict[str, str], data: Dict,
           labels: Dict[str, str]) -> None:
@@ -194,6 +218,25 @@ def bridge_version_window(registry: Registry, window
 
     def collect() -> None:
         _emit(registry, WINDOW_METRICS, window.counters(), {})
+
+    registry.register_collector(collect)
+    return collect
+
+
+def bridge_stream_stats(registry: Registry, stats
+                        ) -> Callable[[], None]:
+    """Bridge a streaming pipeline's ``StreamStats`` silo: its snapshot
+    counters at scrape time, plus every freshness sample streamed into
+    the ``repro_stream_freshness_seconds`` histogram as it is observed
+    (the silo's ``on_freshness`` hook)."""
+    hist = registry.histogram(
+        STREAM_HISTOGRAM_METRICS["freshness_seconds"],
+        help="event-append -> servable-version latency (s)")
+    stats.on_freshness = hist.observe
+
+    def collect() -> None:
+        _emit(registry, STREAM_METRICS,
+              dataclasses.asdict(stats.snapshot()), {})
 
     registry.register_collector(collect)
     return collect

@@ -28,9 +28,9 @@ Example::
     print(server.stats_snapshot().summary())     # totals + per-class
     server.close()
 
-``submit({table: keys}, ...)`` remains as a deprecation shim over the
-typed path for one release; new callers go through ``FeatureClient`` /
-``QueryRequest``.  Shedding surfaces as typed errors (``QueueFullError``,
+``submit`` takes a ``QueryRequest`` only; callers go through
+``FeatureClient`` (the PR-3 raw-dict shim served its one release and is
+gone).  Shedding surfaces as typed errors (``QueueFullError``,
 ``DeadlineError``) from ``submit``/``Ticket.result``.
 """
 from __future__ import annotations
@@ -42,25 +42,11 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 from repro.api.backends import as_backend
-from repro.api.types import (Consistency, ConsistencyError, QoSClass,
-                             QueryRequest, QueryResponse)
+from repro.api.types import (ConsistencyError, QueryRequest, QueryResponse)
 from repro.obs.trace import Span, Tracer
 from repro.serve.scheduler import (BatchPolicy, MicroBatcher, ServerStats,
                                    ServerClosedError, StatsSnapshot, Ticket,
                                    _Pending, coalesce, scatter)
-
-
-def _legacy_consistency(version: Optional[int], strict: bool,
-                        min_version: Optional[int]) -> Consistency:
-    """Map the PR-3 (version, strict) kwargs onto the typed protocol."""
-    if version is not None and min_version is not None:
-        raise ValueError("pass version= or min_version=, not both")
-    if min_version is not None:
-        return Consistency.min_version(min_version)
-    if version is not None:
-        return (Consistency.pinned(version) if strict
-                else Consistency.hinted(version))
-    return Consistency.latest()
 
 
 class QueryServer:
@@ -192,34 +178,22 @@ class QueryServer:
     # ------------------------------------------------------------------
     # client faces
     # ------------------------------------------------------------------
-    def submit(self, request, *, qos=None,
-               budget_s: Optional[float] = None,
-               version: Optional[int] = None, strict: bool = False,
-               min_version: Optional[int] = None) -> Ticket:
+    def submit(self, request: QueryRequest) -> Ticket:
         """Enqueue one request and return its ticket.
 
-        The typed face takes a ``QueryRequest`` (alone — QoS, consistency,
-        and budget travel inside it).  Passing a ``{table: keys}`` dict
-        plus kwargs is the deprecated PR-3 shim, kept for one release.
+        Takes a ``QueryRequest`` alone — QoS, consistency, and budget
+        travel inside it; callers build one through ``FeatureClient``.
+        (The PR-3 raw-dict + ``version=``/``strict=`` shim is gone.)
 
         Raises ``QueueFullError`` / ``DeadlineError`` / ``ServerClosedError``
         at admission time when the request is shed by policy."""
         if self._closed:
             raise ServerClosedError("server is closed")
-        if isinstance(request, QueryRequest):
-            if qos is not None or budget_s is not None or strict \
-                    or version is not None or min_version is not None:
-                raise ValueError("a QueryRequest already carries qos/"
-                                 "consistency/budget; drop the kwargs")
-            req = request
-        else:
-            # deprecation shim: raw dict + (version, strict) kwargs
-            req = QueryRequest(
-                tables=request,
-                qos=QoSClass.RANKING if qos is None else qos,
-                consistency=_legacy_consistency(version, strict,
-                                                min_version),
-                budget_s=budget_s)
+        if not isinstance(request, QueryRequest):
+            raise TypeError(
+                "QueryServer.submit takes a QueryRequest; raw "
+                "{table: keys} dicts go through FeatureClient.query/submit")
+        req = request
         pin_version, pin_strict = req.consistency.pin_args()
         tracer = self.tracer
         tctx = None
@@ -254,16 +228,12 @@ class QueryServer:
             tctx["t_admit"] = time.monotonic()
         return ticket
 
-    def query(self, request, *, qos=None, budget_s: Optional[float] = None,
-              version: Optional[int] = None, strict: bool = False,
-              min_version: Optional[int] = None,
+    def query(self, request: QueryRequest, *,
               timeout: Optional[float] = None) -> QueryResponse:
         """Synchronous convenience: submit + wait.  Exceptions that failed
         the micro-batch (e.g. ``VersionEvictedError`` under a pinned
         consistency) or shed the request re-raise here."""
-        return self.submit(request, qos=qos, budget_s=budget_s,
-                           version=version, strict=strict,
-                           min_version=min_version).result(timeout)
+        return self.submit(request).result(timeout)
 
     def apply_update(self, update) -> None:
         """Publish through the backend while serving continues (micro-

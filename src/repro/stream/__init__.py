@@ -1,0 +1,45 @@
+"""stream — in-process event-log subsystem and streaming update pipeline.
+
+Kafka-shaped but dependency-free: named topics, append-only partitioned
+logs, consumer groups with committed offsets, bounded retention, and
+replay-from-offset (`log.py`).  On top of it, the lambda fast path the
+paper's serving architecture assumes (`pipeline.py`): a sessionized
+traffic source (`source.py`) appends impression/click events; a
+streaming trainer consumes them in micro-batches and publishes per-step
+deltas through the FeatureService API; a windowed-EMA updater maintains
+user-profile features; and a trending-items aggregator keeps a top-k
+fallback lane fresh for cold-start users.
+
+This package is importable without jax — the launcher
+(`repro.launch.realtime`) injects the real `train_step` as a plain
+``step_fn(events) -> upserts`` callable.
+"""
+from repro.stream.log import (
+    Event,
+    EventLog,
+    OffsetTruncatedError,
+    UnknownTopicError,
+)
+from repro.stream.pipeline import (
+    ProfileEMAUpdater,
+    StreamingTrainer,
+    StreamSnapshot,
+    StreamStats,
+    TrendingAggregator,
+    VersionedPublisher,
+)
+from repro.stream.source import SessionizedSource
+
+__all__ = [
+    "Event",
+    "EventLog",
+    "OffsetTruncatedError",
+    "UnknownTopicError",
+    "ProfileEMAUpdater",
+    "SessionizedSource",
+    "StreamSnapshot",
+    "StreamStats",
+    "StreamingTrainer",
+    "TrendingAggregator",
+    "VersionedPublisher",
+]

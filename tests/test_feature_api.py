@@ -25,6 +25,12 @@ N_KEYS = 1_500
 VALUE_BYTES = 16
 
 
+def submit(server, tables, **kw):
+    """Typed-face submit: servers take QueryRequests only (the PR-3 raw
+    dict shim is gone), so every test rides FeatureClient."""
+    return FeatureClient(server).submit(tables, **kw)
+
+
 @pytest.fixture(scope="module")
 def dataset():
     rng = np.random.default_rng(7)
@@ -129,15 +135,15 @@ class TestTypesValidation:
             lane_weights={QoSClass.RANKING: 8}, start=False)
         srv.close()
 
-    def test_typed_request_rejects_kwarg_overrides(self, dataset, engine):
+    def test_submit_takes_query_requests_only(self, dataset, engine):
+        """The PR-3 raw-dict shim is gone: a bare {table: keys} dict is a
+        typed error pointing at FeatureClient, not a silent legacy path."""
         keys, _, _ = dataset
         with QueryServer(engine, start=False) as server:
-            with pytest.raises(ValueError, match="drop the kwargs"):
-                server.submit(QueryRequest(tables={"s": keys[:4]}),
-                              budget_s=0.5)
-            with pytest.raises(ValueError, match="drop the kwargs"):
-                server.submit(QueryRequest(tables={"s": keys[:4]}),
-                              strict=True)
+            with pytest.raises(TypeError, match="FeatureClient"):
+                server.submit({"s": keys[:4]})
+            ticket = server.submit(QueryRequest(tables={"s": keys[:4]}))
+            assert not ticket.done()
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +165,7 @@ class TestStatsEdgeCases:
     def test_single_request_snapshot(self, dataset, engine):
         keys, _, _ = dataset
         with QueryServer(engine, BatchPolicy(max_wait_s=0.0)) as server:
-            server.query({"s": keys[:4]}, timeout=30)
+            FeatureClient(server).query({"s": keys[:4]}, timeout=30)
             snap = server.stats_snapshot()
         assert snap.completed == 1
         assert snap.p50_ms > 0 and snap.p99_ms > 0
@@ -394,31 +400,31 @@ class TestQoSLanes:
         server = QueryServer(engine, BatchPolicy(max_queue_requests=4),
                              start=False)
         try:
-            prefetch = [server.submit({"s": keys[:8]}, qos="PREFETCH")
+            prefetch = [submit(server, {"s": keys[:8]}, qos="PREFETCH")
                         for _ in range(4)]
             # RANKING arrival evicts the NEWEST prefetch request
-            ranking = server.submit({"s": keys[:8]}, qos="RANKING")
+            ranking = submit(server, {"s": keys[:8]}, qos="RANKING")
             with pytest.raises(QueueFullError, match="evicted"):
                 prefetch[3].result(timeout=5)
             # PREFETCH arrival has nothing below it: shed outright
             with pytest.raises(QueueFullError, match="no lane below"):
-                server.submit({"s": keys[:8]}, qos="PREFETCH")
+                submit(server, {"s": keys[:8]}, qos="PREFETCH")
             # RETRIEVAL arrival evicts the next-newest prefetch
-            retrieval = server.submit({"s": keys[:8]}, qos="RETRIEVAL")
+            retrieval = submit(server, {"s": keys[:8]}, qos="RETRIEVAL")
             with pytest.raises(QueueFullError):
                 prefetch[2].result(timeout=5)
             # two more RANKING arrivals flush the remaining prefetch
             for _ in range(2):
-                server.submit({"s": keys[:8]}, qos="RANKING")
+                submit(server, {"s": keys[:8]}, qos="RANKING")
             assert server.lane_depths == {"RANKING": 3, "RETRIEVAL": 1,
                                           "PREFETCH": 0}
             # with PREFETCH empty, a RANKING arrival evicts RETRIEVAL next
-            server.submit({"s": keys[:8]}, qos="RANKING")
+            submit(server, {"s": keys[:8]}, qos="RANKING")
             with pytest.raises(QueueFullError):
                 retrieval.result(timeout=5)
             # and with nothing below RANKING queued, RANKING sheds itself
             with pytest.raises(QueueFullError, match="no lane below"):
-                server.submit({"s": keys[:8]}, qos="RANKING")
+                submit(server, {"s": keys[:8]}, qos="RANKING")
             snap = server.stats_snapshot()
             per = snap.per_class
             assert per["PREFETCH"].shed_queue_full == 5
@@ -439,10 +445,10 @@ class TestQoSLanes:
             engine, BatchPolicy(max_queue_requests=2,
                                 service_time_init_s=0.05), start=False)
         try:
-            prefetch = [server.submit({"s": keys[:8]}, qos="PREFETCH")
+            prefetch = [submit(server, {"s": keys[:8]}, qos="PREFETCH")
                         for _ in range(2)]
             with pytest.raises(DeadlineError):
-                server.submit({"s": keys[:8]}, qos="RANKING",
+                submit(server, {"s": keys[:8]}, qos="RANKING",
                               budget_s=0.001)
             assert not any(t.done() for t in prefetch)   # no victim
             assert server.stats_snapshot().per_class[
@@ -458,9 +464,9 @@ class TestQoSLanes:
         server = QueryServer(
             engine, BatchPolicy(max_batch_requests=1, max_wait_s=0.0),
             start=False)
-        r = [server.submit({"s": keys[i * 8:(i + 1) * 8]}, qos="RANKING")
+        r = [submit(server, {"s": keys[i * 8:(i + 1) * 8]}, qos="RANKING")
              for i in range(6)]
-        p = [server.submit({"s": keys[i * 8:(i + 1) * 8]}, qos="PREFETCH")
+        p = [submit(server, {"s": keys[i * 8:(i + 1) * 8]}, qos="PREFETCH")
              for i in range(6)]
         server.start()
         try:
@@ -483,9 +489,9 @@ class TestQoSLanes:
             class_policies={"PREFETCH": BatchPolicy(max_batch_requests=1,
                                                     max_wait_s=0.0)},
             start=False)
-        r = [server.submit({"s": keys[:8]}, qos="RANKING")
+        r = [submit(server, {"s": keys[:8]}, qos="RANKING")
              for _ in range(4)]
-        p = [server.submit({"s": keys[:8]}, qos="PREFETCH")
+        p = [submit(server, {"s": keys[:8]}, qos="PREFETCH")
              for _ in range(4)]
         server.start()
         try:

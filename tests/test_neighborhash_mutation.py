@@ -189,3 +189,89 @@ def test_colliding_home_chain_churn(variant):
             oracle[int(hot[i])] = int(payloads[i])
         assert_home_pure(t)
     assert_matches(t, oracle, MISSES)
+
+
+# ---------------------------------------------------------------------------
+# insert_batch: vectorized placement vs the sequential per-key loop
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant", nh.VARIANTS)
+@pytest.mark.parametrize("seed", [3, 17])
+def test_insert_batch_matches_sequential_inserts(variant, seed):
+    """Differential: insert_batch == one insert() per key against the same
+    starting table — same oracle contents, same stats.n, home-pure."""
+    keys, payloads = nh.random_kv(300, seed=seed)
+    base = nh.build_grow(keys, payloads, variant=variant, load_factor=0.6)
+    rng = np.random.default_rng(seed)
+    fresh_k = rng.integers(10**7, 2**62, 150).astype(np.uint64)
+    # mix in residents (upsert path) and an in-batch duplicate (LWW)
+    batch_k = np.concatenate([fresh_k, keys[:40], fresh_k[:5]])
+    batch_p = rng.integers(0, hc.PAYLOAD_MASK,
+                           len(batch_k)).astype(np.uint64)
+
+    vec = base.copy()
+    gained = vec.insert_batch(batch_k, batch_p)
+    seq = base.copy()
+    oracle = dict_oracle(keys, payloads)
+    for k, p in zip(batch_k, batch_p):
+        seq.insert(int(k), int(p))
+        oracle[int(k)] = int(p)
+
+    assert gained == seq.stats.n - base.stats.n
+    assert_matches(vec, oracle, MISSES)
+    assert_matches(seq, oracle, MISSES)
+    if variant in RELOCATING:
+        assert_home_pure(vec)
+
+
+@pytest.mark.parametrize("variant", RELOCATING)
+def test_insert_batch_chain_append_hot_home(variant):
+    """Every batch key homed at ONE occupied bucket: phase 2 places only
+    the chain head, the rest must go through the grouped chain-append path
+    (sorted free-slot claims) — worst case for the batched phase 3."""
+    cap = 2048
+    hot = keys_with_home(101, 20, cap)
+    payloads = np.arange(1, len(hot) + 1, dtype=np.uint64)
+    t = nh.build(np.array([], dtype=np.uint64), np.array([], dtype=np.uint64),
+                 variant=variant, capacity=cap)
+    gained = t.insert_batch(hot, payloads)
+    assert gained == len(hot)
+    assert_matches(t, dict_oracle(hot, payloads), MISSES)
+    assert_home_pure(t)
+    assert t.stats.max_chain_len >= len(hot)
+    # second batch on the same home: walk finds residents (update), only
+    # the genuinely-new tail section is appended
+    more = keys_with_home(101, 26, cap)
+    p2 = np.arange(100, 100 + len(more), dtype=np.uint64)
+    gained2 = t.insert_batch(more, p2)
+    assert gained2 == len(more) - len(hot)
+    oracle = dict_oracle(hot, payloads)
+    oracle.update(dict_oracle(more, p2))
+    assert_matches(t, oracle, MISSES)
+    assert_home_pure(t)
+
+
+def test_insert_batch_assume_new_skips_probe_but_stays_safe():
+    """assume_new=True with a key that is actually resident must not
+    corrupt the table: empty-home placement is provably-fresh-only and the
+    chain walk upserts in place."""
+    keys, payloads = nh.random_kv(200, seed=5)
+    t = nh.build_grow(keys, payloads, variant="neighborhash",
+                      load_factor=0.6)
+    # "fresh" batch that is actually 50% resident
+    batch_k = np.concatenate([keys[:100],
+                              (keys[:100] ^ np.uint64(1 << 40))])
+    batch_p = np.arange(1, len(batch_k) + 1, dtype=np.uint64)
+    t.insert_batch(batch_k, batch_p, assume_new=True)
+    oracle = dict_oracle(keys, payloads)
+    for k, p in zip(batch_k, batch_p):
+        oracle[int(k)] = int(p)
+    assert_matches(t, oracle, MISSES)
+    assert_home_pure(t)
+
+
+def test_insert_batch_full_table_raises_builderror():
+    keys = np.arange(1, 9, dtype=np.uint64)
+    t = nh.build(keys, keys, variant="neighborhash", capacity=8)
+    with pytest.raises(nh.BuildError):
+        t.insert_batch(np.arange(100, 120, dtype=np.uint64),
+                       np.arange(20, dtype=np.uint64))

@@ -232,7 +232,8 @@ class TestBridges:
         fake = tmp_path / "repo"
         for rel in ("src/repro/obs/bridge.py", "src/repro/serve/scheduler.py",
                     "src/repro/serve/fabric.py", "src/repro/core/tiering.py",
-                    "src/repro/core/versioning.py", "docs/observability.md"):
+                    "src/repro/core/versioning.py",
+                    "src/repro/stream/pipeline.py", "docs/observability.md"):
             dst = fake / rel
             dst.parent.mkdir(parents=True, exist_ok=True)
             shutil.copy(os.path.join(REPO, rel), dst)
@@ -461,7 +462,8 @@ def test_launcher_serves_metrics_and_emits_record(tmp_path):
         s.bind(("127.0.0.1", 0))
         port = s.getsockname()[1]
     record = tmp_path / "BENCH_fabric_smoke.json"
-    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env = dict(os.environ, PYTHONPATH="src",
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.launch.fabric", "--smoke",
          "--metrics-port", str(port), "--trace-sample", "0.2",

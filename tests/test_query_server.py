@@ -12,6 +12,7 @@ import types
 import numpy as np
 import pytest
 
+from repro.api import Consistency, FeatureClient
 from repro.core.engine import (EmbeddingTable, MultiTableEngine, ScalarTable,
                                VersionEvictedError)
 from repro.serve.scheduler import (BatchPolicy, DeadlineError, QueueFullError,
@@ -21,6 +22,16 @@ from repro.serve.server import QueryServer
 SHARD_BYTES = 1 << 15
 N_KEYS = 2_000
 VALUE_BYTES = 16
+
+
+def submit(server, tables, **kw):
+    """Typed-face submit: servers take QueryRequests only (the PR-3 raw
+    dict shim is gone), so every test rides FeatureClient."""
+    return FeatureClient(server).submit(tables, **kw)
+
+
+def query(server, tables, *, timeout=None, **kw):
+    return FeatureClient(server).query(tables, timeout=timeout, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -106,7 +117,7 @@ class TestScatterBack:
                 try:
                     for _ in range(6):
                         req = _mixed_request(rng, keys)
-                        res = server.query(req)
+                        res = query(server, req)
                         sq = req["s"].tolist()
                         for k, f, p in zip(sq, res["s"].found,
                                            res["s"].payloads):
@@ -140,7 +151,7 @@ class TestScatterBack:
         keys, payloads, _ = dataset
         server = QueryServer(engine, BatchPolicy(max_wait_s=0.01),
                              start=False)
-        tickets = [server.submit({"s": keys[i * 10:i * 10 + 20]})
+        tickets = [submit(server, {"s": keys[i * 10:i * 10 + 20]})
                    for i in range(10)]
         server.start()
         try:
@@ -193,7 +204,7 @@ class TestVersionPinning:
                 try:
                     for _ in range(25):
                         q = rng.choice(keys, 40)
-                        t = server.submit({"s": q})
+                        t = submit(server, {"s": q})
                         res = t.result(timeout=60)
                         vals = set(res["s"].payloads[res["s"].found]
                                    .tolist())
@@ -231,9 +242,11 @@ class TestVersionPinning:
         eng.publish_delta(3, upserts={})        # v1 evicted
         with QueryServer(eng) as server:
             with pytest.raises(VersionEvictedError):
-                server.query({"s": keys[:8]}, version=1, strict=True)
+                query(server, {"s": keys[:8]},
+                      consistency=Consistency.pinned(1))
             # non-strict re-pins instead
-            res = server.query({"s": keys[:8]}, version=1)
+            res = query(server, {"s": keys[:8]},
+                        consistency=Consistency.hinted(1))
             assert res.version == 3
 
 
@@ -244,9 +257,9 @@ class TestSheddingAndDeadlines:
                              BatchPolicy(max_queue_requests=4), start=False)
         try:
             for _ in range(4):
-                server.submit({"s": keys[:8]})
+                submit(server, {"s": keys[:8]})
             with pytest.raises(QueueFullError):
-                server.submit({"s": keys[:8]})
+                submit(server, {"s": keys[:8]})
             assert server.stats_snapshot().shed_queue_full == 1
         finally:
             server.close()
@@ -258,7 +271,7 @@ class TestSheddingAndDeadlines:
             engine, BatchPolicy(service_time_init_s=0.05), start=False)
         try:
             with pytest.raises(DeadlineError):
-                server.submit({"s": keys[:8]}, budget_s=0.001)
+                submit(server, {"s": keys[:8]}, budget_s=0.001)
             assert server.stats_snapshot().shed_deadline == 1
         finally:
             server.close()
@@ -268,7 +281,7 @@ class TestSheddingAndDeadlines:
         server = QueryServer(engine, BatchPolicy(service_time_init_s=1e-4),
                              start=False)
         try:
-            ticket = server.submit({"s": keys[:8]}, budget_s=0.01)
+            ticket = submit(server, {"s": keys[:8]}, budget_s=0.01)
             time.sleep(0.05)                 # deadline passes while queued
             server.start()
             with pytest.raises(DeadlineError):
@@ -285,7 +298,7 @@ class TestSheddingAndDeadlines:
                              BatchPolicy(max_batch_keys=500, max_wait_s=3.0),
                              start=False)
         try:
-            tickets = [server.submit({"s": keys[i * 240:(i + 1) * 240]})
+            tickets = [submit(server, {"s": keys[i * 240:(i + 1) * 240]})
                        for i in range(4)]
             server.start()
             for t in tickets:
@@ -302,7 +315,7 @@ class TestSheddingAndDeadlines:
         keys, payloads, _ = dataset
         with QueryServer(engine, BatchPolicy(max_wait_s=0.002)) as server:
             t0 = time.perf_counter()
-            res = server.query({"s": keys[:16]}, timeout=30)
+            res = query(server, {"s": keys[:16]}, timeout=30)
             assert (res["s"].payloads == payloads[:16]).all()
             assert time.perf_counter() - t0 < 10.0
 
@@ -311,7 +324,7 @@ class TestSheddingAndDeadlines:
         server = QueryServer(engine)
         server.close()
         with pytest.raises(ShedError):
-            server.submit({"s": keys[:8]})
+            submit(server, {"s": keys[:8]})
 
     def test_close_without_start_fails_queued_tickets(self, dataset,
                                                       engine):
@@ -319,7 +332,7 @@ class TestSheddingAndDeadlines:
         tickets (typed), not leave result() waiters hanging."""
         keys, _, _ = dataset
         server = QueryServer(engine, start=False)
-        ticket = server.submit({"s": keys[:8]})
+        ticket = submit(server, {"s": keys[:8]})
         server.close()
         with pytest.raises(ShedError):
             ticket.result(timeout=5)
@@ -332,7 +345,7 @@ class TestSheddingAndDeadlines:
         from repro.serve.scheduler import ServerClosedError
         keys, _, _ = dataset
         server = QueryServer(engine, start=False)
-        tickets = [server.submit({"s": keys[:8]}, qos=qos)
+        tickets = [submit(server, {"s": keys[:8]}, qos=qos)
                    for qos in ("RANKING", "RETRIEVAL", "PREFETCH")
                    for _ in range(3)]
         server.close(timeout=5)
@@ -348,7 +361,7 @@ class TestSheddingAndDeadlines:
         keys, _, _ = dataset
         backend = _SlowBackend(delay_s=2.0)
         server = QueryServer(backend, BatchPolicy(max_wait_s=0.0))
-        ticket = server.submit({"s": keys[:8]})
+        ticket = submit(server, {"s": keys[:8]})
         deadline = time.perf_counter() + 2.0
         while not backend.began and time.perf_counter() < deadline:
             time.sleep(0.001)                    # wait until it's in flight
@@ -365,7 +378,7 @@ class TestSheddingAndDeadlines:
         keys, _, _ = dataset
         backend = _SlowBackend(delay_s=0.15)
         server = QueryServer(backend, BatchPolicy(max_wait_s=0.0))
-        ticket = server.submit({"s": keys[:8]})
+        ticket = submit(server, {"s": keys[:8]})
         deadline = time.perf_counter() + 2.0
         while not backend.began and time.perf_counter() < deadline:
             time.sleep(0.001)
@@ -379,8 +392,8 @@ class TestSheddingAndDeadlines:
         requests it coalesced with are retried and served."""
         keys, payloads, _ = dataset
         server = QueryServer(engine, start=False)
-        t_bad = server.submit({"nope": keys[:4]})
-        t_good = server.submit({"s": keys[:16]})
+        t_bad = submit(server, {"nope": keys[:4]})
+        t_good = submit(server, {"s": keys[:16]})
         server.start()
         try:
             with pytest.raises(KeyError):

@@ -1,0 +1,372 @@
+"""Streaming online-learning loop: event log + delta pipeline + SLO.
+
+Three layers, matching the subsystem's own structure:
+
+1. ``EventLog`` unit tests — offset-commit/replay determinism, retention
+   truncation vs lagging consumers (typed error + recovery, not silent
+   data loss), multi-producer interleaving under threads.
+2. In-process pipeline integration (numpy ``step_fn``, no jax): the
+   sessionized source, streaming trainer, profile updater, and trending
+   aggregator run concurrently with sessionized queries; asserts ZERO
+   mixed-version batches (``QueryResponse.version`` is the one build
+   every row came from) and ZERO ``min_version`` violations, freshness
+   measured through ``StreamStats``, and graceful backlog shedding.
+3. A slow subprocess smoke of ``repro.launch.realtime --smoke``.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Consistency, ConsistencyError, FeatureClient
+from repro.core.engine import EmbeddingTable, MultiTableEngine
+from repro.serve.server import QueryServer
+from repro.stream import (EventLog, OffsetTruncatedError, ProfileEMAUpdater,
+                          SessionizedSource, StreamStats, StreamingTrainer,
+                          TrendingAggregator, UnknownTopicError,
+                          VersionedPublisher)
+
+
+# ---------------------------------------------------------------------------
+# 1. event log
+# ---------------------------------------------------------------------------
+class TestEventLog:
+    def test_offsets_dense_and_replay_deterministic(self):
+        log = EventLog()
+        log.create_topic("t", partitions=1)
+        for i in range(20):
+            log.append("t", key=i, kind="imp", payload={"i": i})
+
+        first = log.poll("t", "g", max_records=8)
+        again = log.poll("t", "g", max_records=8)
+        # poll does NOT advance the commit: replay is byte-identical
+        assert [e.offset for e in first] == [e.offset for e in again]
+        assert [e.payload for e in first] == [e.payload for e in again]
+        assert [e.offset for e in first] == list(range(8))
+
+        log.commit("t", "g", first)
+        nxt = log.poll("t", "g", max_records=8)
+        assert [e.offset for e in nxt] == list(range(8, 16))
+
+        # an explicit seek back replays the exact same prefix
+        log.commit("t", "g", nxt)
+        log.seek("t", "g", 0)
+        replay = log.poll("t", "g", max_records=20)
+        assert [e.offset for e in replay] == list(range(20))
+        assert [e.payload["i"] for e in replay] == list(range(20))
+
+    def test_consumer_groups_are_independent(self):
+        log = EventLog()
+        log.create_topic("t")
+        for i in range(10):
+            log.append("t", key=i, kind="imp")
+        a = log.poll("t", "a", max_records=10)
+        log.commit("t", "a", a)
+        assert log.backlog("t", "a") == 0
+        # group b starts from the earliest retained offset, unaffected
+        assert log.backlog("t", "b") == 10
+        b = log.poll("t", "b", max_records=10)
+        assert [e.offset for e in b] == [e.offset for e in a]
+
+    def test_retention_truncates_lagging_consumer_with_typed_error(self):
+        log = EventLog()
+        log.create_topic("t", partitions=1, retention=10)
+        log.append("t", key=0, kind="imp")
+        head = log.poll("t", "lag", max_records=1)   # pins position 0
+        log.commit("t", "lag", head)                 # committed at 1
+        for i in range(1, 40):
+            log.append("t", key=i, kind="imp")
+        assert log.earliest("t", 0) == 30            # 40 appended, keep 10
+
+        with pytest.raises(OffsetTruncatedError) as ei:
+            log.poll("t", "lag")
+        e = ei.value
+        assert (e.topic, e.partition) == ("t", 0)
+        assert e.requested == 1
+        assert e.earliest == 30
+        # recovery contract: seek to the error's earliest and keep going —
+        # the gap is explicit, never silently skipped
+        log.seek("t", "lag", e.earliest, e.partition)
+        evs = log.poll("t", "lag", max_records=100)
+        assert [ev.offset for ev in evs] == list(range(30, 40))
+
+    def test_backlog_is_bounded_by_retention(self):
+        log = EventLog()
+        log.create_topic("t", partitions=1, retention=16)
+        for i in range(1000):
+            log.append("t", key=i, kind="imp")
+        # a consumer group that never polled sees at most the retained tail
+        assert log.backlog("t", "fresh") == 16
+
+    def test_multi_producer_thread_interleaving(self):
+        log = EventLog()
+        log.create_topic("t", partitions=2)
+        n_threads, per = 4, 250
+
+        def produce(tid):
+            for i in range(per):
+                log.append("t", key=tid * per + i, kind="imp",
+                           payload={"tid": tid, "i": i})
+
+        ts = [threading.Thread(target=produce, args=(t,))
+              for t in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+        # per-partition offsets are dense 0..end-1 and every record
+        # arrives exactly once
+        total = sum(log.end_offset("t", p) for p in range(2))
+        assert total == n_threads * per
+        seen = []
+        while True:
+            evs = log.poll("t", "g", max_records=128)
+            if not evs:
+                break
+            seen.extend(evs)
+            log.commit("t", "g", evs)
+        assert len(seen) == n_threads * per
+        ids = sorted((e.payload["tid"], e.payload["i"]) for e in seen)
+        assert ids == [(t, i) for t in range(n_threads) for i in range(per)]
+        for p in range(2):
+            offs = sorted(e.offset for e in seen if e.partition == p)
+            assert offs == list(range(len(offs)))
+
+    def test_unknown_topic_and_duplicate_create(self):
+        log = EventLog()
+        with pytest.raises(UnknownTopicError):
+            log.append("nope", key=1, kind="imp")
+        with pytest.raises(UnknownTopicError):
+            log.poll("nope", "g")
+        log.create_topic("t")
+        with pytest.raises(ValueError):
+            log.create_topic("t")
+
+    def test_same_key_routes_to_same_partition(self):
+        log = EventLog()
+        log.create_topic("t", partitions=4)
+        evs = [log.append("t", key=77, kind="imp") for _ in range(5)]
+        assert len({e.partition for e in evs}) == 1
+        assert [e.offset for e in evs] == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# 2. pipeline integration (numpy step_fn — no jax in the loop)
+# ---------------------------------------------------------------------------
+N_ITEMS = 64
+N_USERS = 16
+DIM = 8
+
+
+def _engine():
+    item_keys = np.arange(1, N_ITEMS + 1, dtype=np.uint64)
+    item_vals = np.zeros((N_ITEMS, DIM * 4), dtype=np.uint8)
+    user_keys = np.arange(1, N_USERS + 1, dtype=np.uint64)
+    user_vals = np.zeros((N_USERS, DIM * 4), dtype=np.uint8)
+    trend_vals = np.zeros((1, 4 * 8), dtype=np.uint8)
+    return MultiTableEngine(embeddings=[
+        EmbeddingTable("item_table", item_keys, item_vals),
+        EmbeddingTable("user_profile", user_keys, user_vals),
+        EmbeddingTable("trending", np.asarray([1], dtype=np.uint64),
+                       trend_vals),
+    ], max_shard_bytes=1 << 16, version=1)
+
+
+def _numpy_step_fn(table=None):
+    """Stand-in trainer step: bump each touched item row (no jax)."""
+    tab = table if table is not None else np.zeros((N_ITEMS, DIM),
+                                                   dtype=np.float32)
+
+    def step_fn(events):
+        items = np.asarray([(ev.payload or {}).get("item", 0)
+                            for ev in events], dtype=np.int64)
+        rows = np.unique(items[(items >= 0) & (items < N_ITEMS)])
+        if not len(rows):
+            return None
+        tab[rows] += 1.0
+        return {"item_table": (
+            rows.astype(np.uint64) + np.uint64(1),
+            np.ascontiguousarray(tab[rows]).view(np.uint8))}
+
+    return step_fn
+
+
+class TestPipeline:
+    def test_end_to_end_consistency_and_freshness(self):
+        """The acceptance loop in miniature: concurrent sessionized
+        queries against streaming updates — zero mixed-version batches,
+        zero min_version violations, freshness actually measured."""
+        engine = _engine()
+        with QueryServer(engine) as server:
+            client = FeatureClient(server, default_budget_s=5.0)
+            log = EventLog()
+            log.create_topic("events", partitions=2, retention=10_000)
+            log.create_topic("trending", partitions=1, retention=16)
+            stats = StreamStats(slo_budget_s=30.0)
+            publisher = VersionedPublisher(client, engine.latest_version,
+                                           stats)
+            stages = [
+                StreamingTrainer(log, "events", publisher, stats,
+                                 _numpy_step_fn(), batch_events=16,
+                                 period_s=0.002),
+                ProfileEMAUpdater(log, "events", publisher, stats,
+                                  dim=DIM, period_s=0.002),
+                TrendingAggregator(log, "events", publisher, stats,
+                                   out_topic="trending", top_k=4,
+                                   period_s=0.005),
+            ]
+            for s in stages:
+                s.start()
+            src = SessionizedSource(log, "events", n_users=N_USERS,
+                                    n_items=N_ITEMS, seed=9)
+            violations = 0
+            versions = []
+            try:
+                for i in range(40):
+                    user = src.pick_user()
+                    src.emit_session(user)
+                    cons = (Consistency.min_version(publisher.version)
+                            if i % 2 == 0 else None)
+                    try:
+                        res = client.query(
+                            {"user_profile":
+                             np.asarray([user + 1], dtype=np.uint64),
+                             "trending":
+                             np.asarray([1], dtype=np.uint64)},
+                            consistency=cons, timeout=10)
+                    except ConsistencyError:
+                        violations += 1
+                        continue
+                    # one build per response: mixed versions are
+                    # unrepresentable, so `version` must be a single int
+                    # that never regresses within this thread
+                    assert isinstance(res.version, int)
+                    if cons is not None:
+                        assert res.version >= cons.version
+                    versions.append(res.version)
+                    time.sleep(0.002)
+                deadline = time.monotonic() + 10.0
+                while (time.monotonic() < deadline
+                       and log.backlog("events", "trainer") > 0
+                       and all(s.error is None for s in stages)):
+                    time.sleep(0.01)
+            finally:
+                for s in stages:
+                    s.stop()
+            assert all(s.error is None for s in stages), \
+                [repr(s.error) for s in stages]
+            snap = stats.snapshot()
+            assert violations == 0
+            assert snap.min_version_violations == 0
+            assert versions == sorted(versions), \
+                "served version regressed within a single thread"
+            assert snap.deltas_published > 0
+            assert snap.freshness_samples > 0
+            assert snap.freshness_p99_ms > 0.0
+            assert snap.staleness_violations == 0
+            # the trending fallback row is decodable
+            trow = client.query(
+                {"trending": np.asarray([1], dtype=np.uint64)},
+                timeout=10).tables["trending"]
+            assert trow.found[0]
+            items = TrendingAggregator.decode_row(trow.values[0])
+            assert len(items) == 4
+
+    def test_lagging_trainer_sheds_backlog_gracefully(self):
+        """Flood the topic past max_backlog before the trainer starts:
+        it must shed down to the cap and keep consuming — typed recovery,
+        no crash, progress continues."""
+        engine = _engine()
+        client = FeatureClient(engine)      # direct backend, no server
+        log = EventLog()
+        log.create_topic("events", partitions=2, retention=50_000)
+        stats = StreamStats()
+        publisher = VersionedPublisher(client, engine.latest_version, stats)
+        src = SessionizedSource(log, "events", n_users=N_USERS,
+                                n_items=N_ITEMS, seed=3, session_len=16)
+        while log.backlog("events", "flood") < 2000:
+            src.emit_session()
+        trainer = StreamingTrainer(log, "events", publisher, stats,
+                                   _numpy_step_fn(), batch_events=64,
+                                   max_backlog=256, period_s=0.001)
+        trainer.start()
+        try:
+            deadline = time.monotonic() + 20.0
+            while (time.monotonic() < deadline
+                   and log.backlog("events", "trainer") > 0
+                   and trainer.error is None):
+                time.sleep(0.01)
+        finally:
+            trainer.stop()
+        assert trainer.error is None, repr(trainer.error)
+        snap = stats.snapshot()
+        assert snap.events_shed > 0, "flood should have forced shedding"
+        assert snap.events_consumed > 0
+        assert snap.events_consumed <= 2 * 256 + 128, \
+            "shed-to-cap should have skipped most of the flood"
+        assert log.backlog("events", "trainer") == 0
+
+    def test_truncated_consumer_recovers_via_seek(self):
+        """Retention outruns a stopped consumer: the stage's _poll
+        recovery path seeks to earliest and counts the truncation."""
+        engine = _engine()
+        client = FeatureClient(engine)
+        log = EventLog()
+        log.create_topic("events", partitions=1, retention=32)
+        stats = StreamStats()
+        publisher = VersionedPublisher(client, engine.latest_version, stats)
+        trainer = StreamingTrainer(log, "events", publisher, stats,
+                                   _numpy_step_fn(), batch_events=8)
+        # pin the group's committed position at 0, then blow past retention
+        log.poll("events", "trainer", max_records=1)
+        for i in range(200):
+            log.append("events", key=i, kind="imp", payload={"item": 1})
+        got = trainer._poll(log, "events", "trainer", stats, 8)
+        assert got == []
+        assert stats.snapshot().truncations_recovered == 1
+        nxt = trainer._poll(log, "events", "trainer", stats, 8)
+        assert nxt and nxt[0].offset == log.earliest("events", 0)
+
+    def test_publisher_versions_are_serialized_and_monotonic(self):
+        engine = _engine()
+        client = FeatureClient(engine)
+        stats = StreamStats()
+        publisher = VersionedPublisher(client, engine.latest_version, stats)
+        versions = []
+        lock = threading.Lock()
+
+        def push(i):
+            v = publisher.publish({"item_table": (
+                np.asarray([i + 1], dtype=np.uint64),
+                np.zeros((1, DIM * 4), dtype=np.uint8))})
+            with lock:
+                versions.append(v)
+
+        ts = [threading.Thread(target=push, args=(i,)) for i in range(16)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert sorted(versions) == list(
+            range(min(versions), min(versions) + 16))
+        assert engine.latest_version == max(versions)
+
+
+# ---------------------------------------------------------------------------
+# 3. launcher smoke (subprocess)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_realtime_launcher_smoke():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.realtime", "--smoke",
+         "--drain-s", "10"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "realtime SLO report" in r.stdout

@@ -40,10 +40,13 @@ SILOS = [
      "fabric.py"), "FabricCounts", set()),
     ("TIER_STATS_METRICS", os.path.join("src", "repro", "core",
      "tiering.py"), "TierStats", set()),
+    ("STREAM_METRICS", os.path.join("src", "repro", "stream",
+     "pipeline.py"), "StreamSnapshot", set()),
 ]
 # catalog dicts that carry names but map no dataclass (derived ratios,
-# VersionWindow's plain-dict counters)
-EXTRA_CATALOGS = ["TIER_DERIVED_METRICS", "WINDOW_METRICS"]
+# VersionWindow's plain-dict counters, the freshness histogram)
+EXTRA_CATALOGS = ["TIER_DERIVED_METRICS", "WINDOW_METRICS",
+                  "STREAM_HISTOGRAM_METRICS"]
 
 
 def _parse_file(path: str) -> Optional[ast.Module]:
