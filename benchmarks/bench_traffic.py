@@ -1,0 +1,235 @@
+"""Adaptive control plane vs static BatchPolicy sweep under a flash crowd.
+
+The ROADMAP acceptance bar for the traffic harness: **the adaptive
+controller config beats every static config in the sweep on RANKING
+p99-under-burst**.  Every config replays the *identical* seeded schedule
+(zipfian keys, mixed-QoS sessions, TWO 4x flash crowds) open-loop
+against a fresh server, so the offered load is byte-identical and only
+the serving policy differs.  The scored window is the REPEAT crowd: a
+static config relives the same collapse in every crowd, while the
+controller pays its adaptation transient once in the first crowd and
+holds the found operating point through the second — which is the
+steady-state claim an online control plane actually makes.
+
+The backend service cost is modeled, not measured: each micro-batch
+costs ``BASE_S + PER_KEY_S*keys + QUAD_S*keys**2``.  The fixed launch
+overhead punishes tiny batches (per-launch cost dominates, capacity
+collapses under the burst -> queue growth -> deadline sheds) and the
+quadratic term punishes huge ones (gather cost superlinear in batch
+span, the way TLB/cache pressure makes real wide gathers: one
+backlog-sized collect costs 100ms+, poisons the admission EWMA, and
+RANKING starts shedding at admission).  Peak throughput sits at
+``keys ~= sqrt(BASE_S / QUAD_S)`` — an *interior* optimum no corner of
+the close-rule grid can reach, and a moving target the controller has
+to find online from live stats.
+
+The metric is goodput-aware: a shed or failed request counts at
+``CEILING_S`` (4x the RANKING budget), so shedding RANKING cannot
+masquerade as a p99 win.
+
+Rows::
+
+  traffic/static_<name>       RANKING burst p99 per static config
+  traffic/adaptive            same for the controller run
+  traffic/adaptive_acceptance ENFORCED: adaptive_beats_all=1 (raises if
+                              any static config is at least as good, so
+                              run.py records the failure)
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_traffic.py [--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api.backends import StoreBackend
+from repro.api.types import QoSClass
+from repro.core.hybrid_store import HybridKVStore
+from repro.obs.bridge import (bridge_controller, bridge_server_stats,
+                              bridge_traffic_stats)
+from repro.obs.metrics import Registry
+from repro.serve.scheduler import BatchPolicy
+from repro.serve.server import QueryServer
+from repro.traffic import (AdaptiveController, ControllerConfig, FlashCrowd,
+                           OpenLoopDriver, QoSMix, RequestShape,
+                           TrafficPattern, burst_p99_ms, burst_windows,
+                           generate_schedule)
+
+from benchmarks import common
+
+TABLE = "item_attr"
+RANK_BUDGET_S = 0.100
+CEILING_S = 4 * RANK_BUDGET_S      # shed/failed penalty in the p99
+# modeled service cost per micro-batch: launch overhead + per-key stream
+# + superlinear span penalty (throughput-optimal batch ~= 4096 keys)
+BASE_S = 8e-3
+PER_KEY_S = 1.2e-6
+QUAD_S = BASE_S / 4096 ** 2
+
+
+class ThrottledStoreBackend(StoreBackend):
+    """StoreBackend with a deterministic service-cost model on finish().
+    The sleep releases the GIL, so the server's two pipeline workers
+    overlap service exactly like real device launches would.  The
+    inflight object passes through unchanged — the server introspects it
+    for coalesce stats (``keys_requested``/``keys_deviceside``/
+    ``launches``)."""
+
+    def finish(self, inflight):
+        k = inflight.keys_requested
+        time.sleep(BASE_S + PER_KEY_S * k + QUAD_S * k * k)
+        return super().finish(inflight)
+
+
+def _pattern(quick: bool) -> TrafficPattern:
+    # TWO identical flash crowds: the controller pays its adaptation
+    # transient in the first, then holds the found operating point; the
+    # acceptance metric is the REPEAT crowd, which every static config
+    # faces exactly as cold as the first
+    duration = 7.0 if quick else 10.0
+    scale = duration / 7.0
+    bursts = (FlashCrowd(2.0 * scale, 1.5 * scale, 4.0),
+              FlashCrowd(4.5 * scale, 1.5 * scale, 4.0))
+    shapes = {
+        QoSClass.RANKING: RequestShape(((TABLE, 96),),
+                                       budget_s=RANK_BUDGET_S),
+        QoSClass.RETRIEVAL: RequestShape(((TABLE, 128),), budget_s=0.200),
+        QoSClass.PREFETCH: RequestShape(((TABLE, 192),), budget_s=None),
+    }
+    return TrafficPattern(
+        duration_s=duration,
+        base_session_rate=125.0,          # ~500 req/s base, ~2000 in burst
+        seed=42, vocab=20_000, zipf_skew=1.1,
+        bursts=bursts,
+        mix=QoSMix(ranking=2.0, retrieval=1.0, prefetch=1.0),
+        requests_per_session=(2, 6), think_time_s=0.030,
+        shapes=shapes)
+
+
+def _policy(max_keys: int, wait_s: float) -> BatchPolicy:
+    # max_batch_requests tied to max_batch_keys so the key budget is
+    # always the binding close rule (the knob under test); the smallest
+    # request is 96 keys, so keys/96 requests can never be collected
+    return BatchPolicy(max_batch_keys=max_keys,
+                       max_batch_requests=max(max_keys // 96, 4),
+                       max_wait_s=wait_s)
+
+
+# the corner grid: both close-rule knobs at both extremes.  tiny caps
+# starve the launch-overhead amortization; huge caps allow backlog-sized
+# collects into the quadratic regime; the slow wait buys occupancy with
+# a latency floor of ~wait against a 50ms budget.
+STATIC_SWEEP = {
+    "tiny_fast": _policy(512, 4e-4),
+    "tiny_slow": _policy(512, 2e-2),
+    "huge_fast": _policy(49_152, 4e-4),
+    "huge_slow": _policy(49_152, 2e-2),
+}
+# the adaptive run starts FROM the worst corner and must climb out
+ADAPTIVE_START = _policy(512, 4e-4)
+CONTROLLER = ControllerConfig(min_batch_keys=256, max_batch_keys=16_384,
+                              min_wait_s=2e-4, max_wait_s=6e-3,
+                              min_samples=12)
+
+
+def _run_config(pattern, schedule, policy, *, adaptive: bool,
+                registry=None) -> dict:
+    rng = np.random.default_rng(7)
+    keys = np.arange(pattern.vocab, dtype=np.uint64)
+    values = rng.integers(0, 255, (pattern.vocab, 32), dtype=np.uint8)
+    store = HybridKVStore(keys, values, hot_fraction=0.1)
+    backend = ThrottledStoreBackend({TABLE: store})
+    server = QueryServer(backend, policy)
+    driver = OpenLoopDriver(server, pattern, keys={TABLE: keys},
+                            schedule=schedule, reapers=8)
+    controller = None
+    if adaptive:
+        controller = AdaptiveController(
+            server, {QoSClass.RANKING: RANK_BUDGET_S,
+                     QoSClass.RETRIEVAL: 0.200},
+            config=CONTROLLER, stores=(store,))
+    if registry is not None:
+        bridge_server_stats(registry, server.stats_snapshot)
+        bridge_traffic_stats(registry, driver.stats.snapshot)
+        if controller is not None:
+            bridge_controller(registry, controller)
+    try:
+        if controller is not None:
+            controller.start(period_s=0.15)
+        snap = driver.run()
+    finally:
+        if controller is not None:
+            controller.stop()
+        server.close()
+        store.close()
+    windows = burst_windows(pattern)
+    rank = snap.per_class[QoSClass.RANKING.name]
+    return {
+        # per-crowd RANKING goodput p99: [0] = first (cold for everyone),
+        # [-1] = repeat (the acceptance window)
+        "burst_p99_ms": [burst_p99_ms(driver.samples, [w],
+                                      qos=QoSClass.RANKING,
+                                      ceiling_s=CEILING_S)
+                         for w in windows],
+        "offered": snap.offered,
+        "rank_shed": rank.shed,
+        "rank_attainment": rank.attainment,
+        "dispatch_lag_ms": snap.dispatch_lag_ms,
+        "controller": controller.decisions() if controller else None,
+    }
+
+
+def main(quick: bool = False) -> None:
+    pattern = _pattern(quick)
+    schedule = generate_schedule(pattern)
+    registry = Registry()
+
+    statics = {}
+    for name, policy in STATIC_SWEEP.items():
+        res = _run_config(pattern, schedule, policy, adaptive=False)
+        statics[name] = res
+        first, repeat = res["burst_p99_ms"][0], res["burst_p99_ms"][-1]
+        common.row(f"traffic/static_{name}", repeat * 1e3,
+                   f"repeat_burst_p99_ms={repeat:.2f} "
+                   f"first_burst_p99_ms={first:.2f} "
+                   f"rank_shed={res['rank_shed']} "
+                   f"attain={res['rank_attainment']:.3f} "
+                   f"keys={policy.max_batch_keys} "
+                   f"wait_ms={policy.max_wait_s * 1e3:g}")
+
+    res = _run_config(pattern, schedule, ADAPTIVE_START, adaptive=True,
+                      registry=registry)
+    ctl = res["controller"]
+    lanes = ctl["lanes"]["RANKING"]
+    first, repeat = res["burst_p99_ms"][0], res["burst_p99_ms"][-1]
+    common.row("traffic/adaptive", repeat * 1e3,
+               f"repeat_burst_p99_ms={repeat:.2f} "
+               f"first_burst_p99_ms={first:.2f} "
+               f"rank_shed={res['rank_shed']} "
+               f"attain={res['rank_attainment']:.3f} "
+               f"final_keys={lanes['max_batch_keys']} "
+               f"final_reqs={lanes['max_batch_requests']} "
+               f"final_wait_ms={lanes['max_wait_ms']:g} "
+               f"grows={ctl['grows']} shrinks={ctl['shrinks']}")
+    common.attach_metrics(registry)
+
+    best_name = min(statics, key=lambda n: statics[n]["burst_p99_ms"][-1])
+    best = statics[best_name]["burst_p99_ms"][-1]
+    ok = repeat < best
+    common.row("traffic/adaptive_acceptance", 0.0,
+               f"adaptive_beats_all={int(ok)} "
+               f"adaptive_p99_ms={repeat:.2f} "
+               f"best_static={best_name} "
+               f"best_static_p99_ms={best:.2f} "
+               f"margin={best / max(repeat, 1e-9):.2f}x")
+    if not ok:
+        raise RuntimeError(
+            f"adaptive config did not beat the static sweep: adaptive "
+            f"RANKING repeat-burst p99 {repeat:.2f}ms vs best "
+            f"static {best_name} {best:.2f}ms")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

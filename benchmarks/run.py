@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: t1,t2,t3,t4,f9,f10,t5,mt,inc,srv,"
-                         "qos,fab,rt")
+                         "qos,fab,rt,tr")
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     ap.add_argument("--records-dir", default=repo_root,
                     help="write BENCH_<alias>.json per suite here "
@@ -31,7 +31,7 @@ def main() -> None:
                             bench_vectorization, bench_consistency,
                             bench_resource, bench_multitable,
                             bench_incremental, bench_serving,
-                            bench_realtime)
+                            bench_realtime, bench_traffic)
     suites = {
         "t1": bench_scalar_tables.main,
         "t2": bench_size_sweep.main,
@@ -46,7 +46,10 @@ def main() -> None:
         "qos": bench_serving.main_qos,
         "fab": bench_serving.main_fabric,
         "rt": bench_realtime.main,
+        "tr": bench_traffic.main,
     }
+    # record-file name overrides (where the alias is too cryptic on disk)
+    record_names = {"tr": "traffic"}
     only = set(args.only.split(",")) if args.only else set(suites)
     if args.records_dir:
         os.makedirs(args.records_dir, exist_ok=True)
@@ -74,7 +77,9 @@ def main() -> None:
                       "metrics": common.drain_metrics()}
             if error:
                 record["error"] = error
-            path = os.path.join(args.records_dir, f"BENCH_{key}.json")
+            path = os.path.join(
+                args.records_dir,
+                f"BENCH_{record_names.get(key, key)}.json")
             with open(path, "w") as f:
                 json.dump(record, f, indent=1)
         print(f"# {key} done in {duration:.1f}s", file=sys.stderr)

@@ -264,6 +264,18 @@ class StoreBackend:
             self.stores[name].compact(
                 min_garbage_fraction=self.compact_threshold)
 
+    def set_compact_threshold(self, threshold: float) -> None:
+        """Retune the post-delta compaction trigger at runtime (the
+        adaptive controller relaxes it under serve pressure) and push it
+        down to every store's async-compaction loop.  Same validation as
+        the constructor argument."""
+        if not 0.0 < threshold <= 1.0:
+            raise ValueError(f"compact_threshold must be in (0, 1], got "
+                             f"{threshold}")
+        self.compact_threshold = float(threshold)
+        for store in self.stores.values():
+            store.set_compaction_threshold(threshold)
+
     def bump_version(self, version: int) -> None:
         """Adopt a newer version with no local data change.  A sharded
         fleet needs this: a fleet-wide delta may route zero rows to some

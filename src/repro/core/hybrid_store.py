@@ -202,6 +202,10 @@ class HybridKVStore:
         self._evict_stop = threading.Event()
         self._compact_thread: Optional[threading.Thread] = None  # guarded-by: _threads_lock
         self._compact_stop = threading.Event()
+        # retunable at runtime (set_compaction_threshold): the async
+        # compaction loop re-reads it each tick — a benign racy float,
+        # each pass uses whichever value it observed
+        self._compact_threshold = 0.3
 
     # ------------------------------------------------------------------
     # read path
@@ -233,9 +237,15 @@ class HybridKVStore:
                 found, out, cold, hot_slots = self._probe_and_gather(keys)
         # LRU touch only AFTER the read validated: a discarded torn attempt
         # must leave no side effects, or a bogus recency stamp would keep
-        # the wrong entry hot through the next eviction scan
+        # the wrong entry hot through the next eviction scan.  The array is
+        # re-snapshotted and the slots re-clipped because set_hot_fraction
+        # may have swapped in a shorter array since the gather; a stamp
+        # landing in the superseded array is the same benign lost-touch
+        # race the unguarded write already accepts
         if len(hot_slots):
-            self._hot_last_access[hot_slots] = self._clock
+            last_access = self._hot_last_access
+            last_access[np.clip(hot_slots, 0,
+                                last_access.shape[0] - 1)] = self._clock
         n_cold = int(cold.sum())
         n_hot = int(found.sum()) - n_cold
         with self._stats_lock:
@@ -269,6 +279,11 @@ class HybridKVStore:
         # step out of range before the seqlock check ever runs
         index = self.index
         cold_file = self._cold
+        # the hot arrays are swappable too (set_hot_fraction resizes
+        # them), so they get the same one-object-per-attempt treatment:
+        # clip against the snapshotted array's own length, never against
+        # self.hot_capacity, which may already describe the replacement
+        hot_values = self._hot_values
         out = np.zeros((len(keys), self.value_bytes), dtype=np.uint8)
         found, payloads = index.lookup_host_batch(keys)
         cold = found & ((payloads & np.uint64(TIER_MASK)) != 0)
@@ -280,8 +295,8 @@ class HybridKVStore:
         hot_slots = np.empty(0, dtype=np.int64)
         if hot.any():
             hot_slots = np.clip(payloads[hot].astype(np.int64), 0,
-                                self.hot_capacity - 1)
-            out[hot] = self._hot_values[hot_slots]
+                                hot_values.shape[0] - 1)
+            out[hot] = hot_values[hot_slots]
         if cold.any():
             slots = np.clip(
                 (payloads[cold] & np.uint64(SLOT_MASK)).astype(np.int64),
@@ -503,14 +518,99 @@ class HybridKVStore:
                     "cold_file_bytes": new_rows * self.value_bytes,
                     "garbage_fraction_before": frac}
 
+    # ------------------------------------------------------------------
+    # runtime knobs (traffic/controller.py actuates these)
+    # ------------------------------------------------------------------
+    @property
+    def compaction_threshold(self) -> float:
+        return self._compact_threshold
+
+    def set_compaction_threshold(self, threshold: float) -> None:
+        """Retune the async-compaction trigger at runtime.  Validated like
+        the ``start_async_compaction`` argument it replaces; the running
+        loop picks the new value up on its next tick (benign racy float —
+        a pass in flight finishes under the value it observed)."""
+        if not 0.0 < threshold <= 1.0:
+            raise ValueError(f"threshold must be in (0, 1], got {threshold}")
+        self._compact_threshold = float(threshold)
+
+    @property
+    def hot_fraction(self) -> float:
+        """Current hot-tier capacity as a fraction of the row count."""
+        return self.hot_capacity / max(self.n, 1)
+
+    def set_hot_fraction(self, fraction: float) -> dict:
+        """Resize the hot tier to ``fraction`` of the current row count
+        while serving.
+
+        Runs under the update lock inside a seqlock odd window, like every
+        other tier move: readers that gathered from the superseded arrays
+        retry.  Growing allocates replacement arrays and extends the free
+        list; shrinking first demotes every occupant above the new
+        capacity exactly like ``maintain`` (flip the tier bit back to the
+        cold home slot — the cold copy is authoritative, no data moves).
+        Returns ``{"hot_capacity": ..., "evicted": ...}``."""
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(f"fraction must be in [0, 1], got {fraction}")
+        with self._lock:
+            self._check_writable()
+            new_cap = max(int(round(self.n * fraction)), 1)
+            if new_cap == self.hot_capacity:
+                return {"hot_capacity": new_cap, "evicted": 0}
+            evicted = 0
+            self._write_seq += 1
+            try:
+                if new_cap > self.hot_capacity:
+                    grow = new_cap - self.hot_capacity
+                    self._hot_values = np.vstack(
+                        [self._hot_values,
+                         np.zeros((grow, self.value_bytes), dtype=np.uint8)])
+                    self._hot_last_access = np.concatenate(
+                        [self._hot_last_access,
+                         np.zeros(grow, dtype=np.int64)])
+                    self._hot_key = np.concatenate(
+                        [self._hot_key,
+                         np.full(grow, hc.EMPTY_KEY, dtype=np.uint64)])
+                    # new slots on top of the free list, highest first
+                    # (matches the build-time free-list order)
+                    self._hot_free.extend(
+                        range(new_cap - 1, self.hot_capacity - 1, -1))
+                else:
+                    doomed = np.flatnonzero(
+                        self._hot_key[new_cap:] != np.uint64(hc.EMPTY_KEY)
+                    ) + new_cap
+                    for slot in doomed:
+                        key = int(self._hot_key[int(slot)])
+                        cold_slot = self._cold_slot_of_key_order[key]
+                        self._set_payload(
+                            key, np.uint64(TIER_MASK | cold_slot))
+                        evicted += 1
+                        with self._stats_lock:
+                            self.stats.evictions += 1
+                    # fresh (copied) arrays, not views: an in-flight reader
+                    # still holds the old full-size array and must keep
+                    # seeing a self-consistent object until its seqlock
+                    # check rejects the attempt
+                    self._hot_values = self._hot_values[:new_cap].copy()
+                    self._hot_last_access = \
+                        self._hot_last_access[:new_cap].copy()
+                    self._hot_key = self._hot_key[:new_cap].copy()
+                    self._hot_free = [s for s in self._hot_free
+                                      if s < new_cap]
+                self.hot_capacity = new_cap
+            finally:
+                self._write_seq += 1
+            return {"hot_capacity": new_cap, "evicted": evicted}
+
     def start_async_compaction(self, threshold: float = 0.3,
                                period_s: float = 0.01):
         """Background reclamation, modeled on the async-eviction thread:
         every ``period_s`` the garbage fraction is checked and a compaction
         pass runs once it reaches ``threshold``.  Queries keep flowing
-        throughout (lock-free seqlock reads)."""
-        if not 0.0 < threshold <= 1.0:
-            raise ValueError(f"threshold must be in (0, 1], got {threshold}")
+        throughout (lock-free seqlock reads).  The threshold stays
+        retunable while the thread runs (``set_compaction_threshold``) —
+        the loop re-reads it every tick."""
+        self.set_compaction_threshold(threshold)
 
         def loop():
             while not self._compact_stop.wait(period_s):
@@ -518,9 +618,10 @@ class HybridKVStore:
                 # counters independently could pair a fresh garbage_bytes
                 # with a stale cold_file_bytes mid-supersede and trigger
                 # (or skip) a pass on a fraction that never existed
+                threshold_now = self._compact_threshold
                 garbage, total = self._garbage_state()
-                if total and garbage / total >= threshold:
-                    self.compact(min_garbage_fraction=threshold)
+                if total and garbage / total >= threshold_now:
+                    self.compact(min_garbage_fraction=threshold_now)
         with self._threads_lock:
             if self._compact_thread is not None:
                 return

@@ -35,6 +35,7 @@ SERVER_STATS_METRICS = {
     "launches": "repro_server_launches_total",
     "keys_requested": "repro_server_keys_requested_total",
     "keys_deviceside": "repro_server_keys_deviceside_total",
+    "service_sum_ms": "repro_server_service_time_ms_total",
     "deadline_hits": "repro_server_deadline_hits_total",
     "deadline_misses": "repro_server_deadline_misses_total",
     "p50_ms": "repro_server_latency_p50_ms",
@@ -51,6 +52,7 @@ CLASS_STATS_METRICS = {
     "failed": "repro_server_class_requests_failed_total",
     "shed_queue_full": "repro_server_class_shed_queue_full_total",
     "shed_deadline": "repro_server_class_shed_deadline_total",
+    "latency_sum_ms": "repro_server_class_latency_sum_ms_total",
     "p50_ms": "repro_server_class_latency_p50_ms",
     "p99_ms": "repro_server_class_latency_p99_ms",
     "shed_rate": "repro_server_class_shed_rate",
@@ -123,6 +125,53 @@ STREAM_METRICS = {
 # StreamStats.on_freshness, wired in bridge_stream_stats)
 STREAM_HISTOGRAM_METRICS = {
     "freshness_seconds": "repro_stream_freshness_seconds",
+}
+
+# traffic/driver.TrafficSnapshot (one load-generator run's totals)
+TRAFFIC_METRICS = {
+    "offered": "repro_traffic_requests_offered_total",
+    "completed": "repro_traffic_requests_completed_total",
+    "shed": "repro_traffic_requests_shed_total",
+    "failed": "repro_traffic_requests_failed_total",
+    "slo_hits": "repro_traffic_slo_hits_total",
+    "slo_misses": "repro_traffic_slo_misses_total",
+    "attainment": "repro_traffic_slo_attainment",
+    "offered_rps": "repro_traffic_offered_rps",
+    "dispatch_lag_ms": "repro_traffic_dispatch_lag_ms",
+    "p50_ms": "repro_traffic_latency_p50_ms",
+    "p99_ms": "repro_traffic_latency_p99_ms",
+}
+
+# traffic/driver.ClassTraffic (per-QoS slice; label: qos)
+TRAFFIC_CLASS_METRICS = {
+    "offered": "repro_traffic_class_requests_offered_total",
+    "completed": "repro_traffic_class_requests_completed_total",
+    "shed": "repro_traffic_class_requests_shed_total",
+    "failed": "repro_traffic_class_requests_failed_total",
+    "slo_hits": "repro_traffic_class_slo_hits_total",
+    "slo_misses": "repro_traffic_class_slo_misses_total",
+    "attainment": "repro_traffic_class_slo_attainment",
+    "p50_ms": "repro_traffic_class_latency_p50_ms",
+    "p99_ms": "repro_traffic_class_latency_p99_ms",
+}
+
+# traffic/controller.ControllerSnapshot (the adaptive control plane)
+CONTROLLER_METRICS = {
+    "ticks": "repro_traffic_ctl_ticks_total",
+    "grows": "repro_traffic_ctl_grows_total",
+    "shrinks": "repro_traffic_ctl_shrinks_total",
+    "holds": "repro_traffic_ctl_holds_total",
+    "hot_adjustments": "repro_traffic_ctl_hot_adjustments_total",
+    "compact_adjustments": "repro_traffic_ctl_compact_adjustments_total",
+    "hot_fraction": "repro_traffic_ctl_hot_fraction",
+    "compact_threshold": "repro_traffic_ctl_compact_threshold",
+}
+
+# traffic/controller.LaneKnobs (per-lane live close rules; label: qos)
+LANE_KNOB_METRICS = {
+    "max_batch_keys": "repro_traffic_ctl_lane_max_batch_keys",
+    "max_batch_requests": "repro_traffic_ctl_lane_max_batch_requests",
+    "max_wait_ms": "repro_traffic_ctl_lane_max_wait_ms",
 }
 
 
@@ -237,6 +286,50 @@ def bridge_stream_stats(registry: Registry, stats
     def collect() -> None:
         _emit(registry, STREAM_METRICS,
               dataclasses.asdict(stats.snapshot()), {})
+
+    registry.register_collector(collect)
+    return collect
+
+
+def bridge_traffic_stats(registry: Registry,
+                         snapshot_fn: Callable[[], object],
+                         labels: Optional[Dict[str, str]] = None
+                         ) -> Callable[[], None]:
+    """Bridge a load-generator run's ``TrafficStats`` (``snapshot_fn``
+    returning a ``TrafficSnapshot``/dict): run totals plus the per-QoS
+    slices under the ``qos`` label — offered load and SLO attainment as
+    the *client* saw them, the counterpart to the server-side silo."""
+    fixed = dict(labels or {})
+
+    def collect() -> None:
+        snap = snapshot_fn()
+        if snap is None:
+            return
+        data = _as_dict(snap)
+        _emit(registry, TRAFFIC_METRICS, data, fixed)
+        for qos, cls in (data.get("per_class") or {}).items():
+            _emit(registry, TRAFFIC_CLASS_METRICS, _as_dict(cls),
+                  {**fixed, "qos": str(qos)})
+
+    registry.register_collector(collect)
+    return collect
+
+
+def bridge_controller(registry: Registry, controller,
+                      labels: Optional[Dict[str, str]] = None
+                      ) -> Callable[[], None]:
+    """Bridge an ``AdaptiveController``: decision counters, store knobs,
+    and each lane's live close rules under the ``qos`` label — a scrape
+    shows where the control plane has steered the serving config."""
+    fixed = dict(labels or {})
+
+    def collect() -> None:
+        snap = controller.snapshot()
+        data = _as_dict(snap)
+        _emit(registry, CONTROLLER_METRICS, data, fixed)
+        for qos, knobs in (data.get("per_lane") or {}).items():
+            _emit(registry, LANE_KNOB_METRICS, _as_dict(knobs),
+                  {**fixed, "qos": str(qos)})
 
     registry.register_collector(collect)
     return collect

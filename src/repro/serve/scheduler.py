@@ -125,6 +125,10 @@ class ClassSnapshot:
     failed: int = 0
     shed_queue_full: int = 0
     shed_deadline: int = 0
+    # cumulative completed-request latency: unlike the reservoir
+    # percentiles this is delta-able, so monitors (and the traffic
+    # controller) can derive a true *interval* mean latency
+    latency_sum_ms: float = 0.0
     p50_ms: float = float("nan")
     p99_ms: float = float("nan")
     shed_rate: float = 0.0
@@ -145,6 +149,10 @@ class StatsSnapshot:
     launches: int = 0
     keys_requested: int = 0
     keys_deviceside: int = 0
+    # cumulative begin->finish wall time across micro-batches; with
+    # ``batches`` it yields a delta-able *interval* mean service time
+    # per batch (reservoir percentiles can't be deltaed)
+    service_sum_ms: float = 0.0
     deadline_hits: int = 0
     deadline_misses: int = 0
     p50_ms: float = float("nan")
@@ -221,18 +229,21 @@ class ServerStats:
                 self._cls[qos].shed_deadline += 1
 
     def on_batch(self, n_requests: int, keys_requested: int,
-                 keys_deviceside: int, launches: int) -> None:
+                 keys_deviceside: int, launches: int,
+                 service_s: float = 0.0) -> None:
         with self._lock:
             self._c.batches += 1
             self._c.launches += launches
             self._c.keys_requested += keys_requested
             self._c.keys_deviceside += keys_deviceside
+            self._c.service_sum_ms += service_s * 1e3
 
     def on_complete(self, latency_s: float, deadline_met: Optional[bool],
                     qos: QoSClass = QoSClass.RANKING) -> None:
         with self._lock:
             self._c.completed += 1
             self._cls[qos].completed += 1
+            self._cls[qos].latency_sum_ms += latency_s * 1e3
             if deadline_met is not None:
                 if deadline_met:
                     self._c.deadline_hits += 1
@@ -395,6 +406,33 @@ def scatter(result: QueryResult,
 # ---------------------------------------------------------------------------
 # the micro-batcher
 # ---------------------------------------------------------------------------
+# only the close rules are lane-scoped; the admission bound, EWMA params,
+# and reservoir stay global
+LANE_POLICY_FIELDS = ("max_batch_keys", "max_batch_requests", "max_wait_s")
+
+
+def _check_lane_policy(q: QoSClass, pol, base: BatchPolicy) -> None:
+    """A lane policy may differ from the base only on the close rules.
+    A value deliberately set on a non-lane field (differing from both the
+    base policy and the dataclass default) would be silently ignored —
+    reject it instead.  Shared by construction-time ``class_policies`` and
+    runtime ``set_lane_policy`` so a retune can't smuggle in a global."""
+    if not isinstance(pol, BatchPolicy):
+        raise ValueError(f"class policy for {q.name} must be a "
+                         f"BatchPolicy, got {type(pol).__name__}")
+    defaults = BatchPolicy()
+    for f in dataclasses.fields(BatchPolicy):
+        if f.name in LANE_POLICY_FIELDS:
+            continue
+        v = getattr(pol, f.name)
+        if v != getattr(defaults, f.name) \
+                and v != getattr(base, f.name):
+            raise ValueError(
+                f"class policy for {q.name} sets {f.name}={v}, but "
+                f"only {LANE_POLICY_FIELDS} are per-lane; the rest are "
+                f"global (set them on the server's base policy)")
+
+
 class _Lane:
     """One QoS class's admission queue + service credit (smooth WRR)."""
 
@@ -426,27 +464,9 @@ class MicroBatcher:
                                  f"got {w}")
             weights[q] = float(w)
         overrides = {}
-        # only the close rules are lane-scoped; the admission bound, EWMA
-        # params, and reservoir stay global.  A value deliberately set on
-        # a non-lane field (differing from both the base policy and the
-        # dataclass default) would be silently ignored — reject it instead
-        lane_fields = ("max_batch_keys", "max_batch_requests", "max_wait_s")
-        defaults = BatchPolicy()
         for name, pol in (class_policies or {}).items():
             q = QoSClass.parse(name)
-            if not isinstance(pol, BatchPolicy):
-                raise ValueError(f"class policy for {q.name} must be a "
-                                 f"BatchPolicy, got {type(pol).__name__}")
-            for f in dataclasses.fields(BatchPolicy):
-                if f.name in lane_fields:
-                    continue
-                v = getattr(pol, f.name)
-                if v != getattr(defaults, f.name) \
-                        and v != getattr(policy, f.name):
-                    raise ValueError(
-                        f"class policy for {q.name} sets {f.name}={v}, but "
-                        f"only {lane_fields} are per-lane; the rest are "
-                        f"global (set them on the server's base policy)")
+            _check_lane_policy(q, pol, policy)
             overrides[q] = pol
         # priority order: RANKING first (smaller enum value = higher class)
         self._lanes = {q: _Lane(q, overrides.get(q, policy), weights[q])
@@ -497,6 +517,26 @@ class MicroBatcher:
     def lane_depths(self) -> dict[str, int]:
         with self._cond:
             return {q.name: len(l.queue) for q, l in self._lanes.items()}
+
+    # -- runtime retuning (traffic/controller.py) ----------------------
+    def lane_policy(self, qos) -> BatchPolicy:
+        with self._cond:
+            return self._lanes[QoSClass.parse(qos)].policy
+
+    def lane_policies(self) -> dict[str, BatchPolicy]:
+        with self._cond:
+            return {q.name: l.policy for q, l in self._lanes.items()}
+
+    def set_lane_policy(self, qos, policy: BatchPolicy) -> None:
+        """Swap one lane's close rules at runtime.  Same validation as
+        construction-time ``class_policies`` (lane fields only); wakes the
+        forming wait so a shrunk ``max_wait_s`` takes effect on the batch
+        currently forming, not one batch late."""
+        q = QoSClass.parse(qos)
+        _check_lane_policy(q, policy, self.policy)
+        with self._cond:
+            self._lanes[q].policy = policy
+            self._cond.notify_all()
 
     # ------------------------------------------------------------------
     def _evict_below(self, qos: QoSClass) -> bool:  # lock-held: _cond

@@ -35,6 +35,7 @@ gone).  Shedding surfaces as typed errors (``QueueFullError``,
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import threading
 import time
@@ -259,6 +260,32 @@ class QueryServer:
         return self._batcher.lane_depths()
 
     # ------------------------------------------------------------------
+    # runtime retuning (traffic/controller.py closes the loop here)
+    # ------------------------------------------------------------------
+    def lane_policies(self) -> dict[str, BatchPolicy]:
+        """The live per-lane close rules (post any runtime retunes)."""
+        return self._batcher.lane_policies()
+
+    def retune_lane(self, qos, **changes) -> BatchPolicy:
+        """Retune one lane's close rules while serving.
+
+        ``changes`` may touch only the lane-scoped fields
+        (``max_batch_keys``, ``max_batch_requests``, ``max_wait_s``);
+        the new policy is rebuilt through ``BatchPolicy`` so its
+        ``__post_init__`` validation is the oracle — a bad knob raises
+        here and the lane keeps its old policy.  Single-writer by
+        design (one controller per server); returns the applied policy."""
+        lane_fields = {"max_batch_keys", "max_batch_requests", "max_wait_s"}
+        unknown = set(changes) - lane_fields
+        if unknown:
+            raise ValueError(f"retune_lane can only change "
+                             f"{sorted(lane_fields)}, got {sorted(unknown)}")
+        current = self._batcher.lane_policy(qos)
+        new = dataclasses.replace(current, **changes)
+        self._batcher.set_lane_policy(qos, new)
+        return new
+
+    # ------------------------------------------------------------------
     # scheduler pipeline
     # ------------------------------------------------------------------
     def _run(self) -> None:
@@ -438,7 +465,8 @@ class QueryServer:
                 tinfo["finish_end"] = now
             self._batcher.observe_service_time(now - t_launch)
             self.stats.on_batch(len(batch), inflight.keys_requested,
-                                inflight.keys_deviceside, inflight.launches)
+                                inflight.keys_deviceside, inflight.launches,
+                                service_s=now - t_launch)
             for req, span in zip(batch, spans):
                 self._deliver(req, result, span, batch_id, now, tinfo)
         finally:

@@ -17,6 +17,8 @@ from repro.core import neighborhash as nh
 from repro.core.engine import EmbeddingTable, MultiTableEngine
 from repro.core.hybrid_store import HybridKVStore, TIER_MASK
 
+from conftest import subprocess_env
+
 
 def _store(n=200, vb=16, hot_fraction=0.2, seed=0, **kw):
     rng = np.random.default_rng(seed)
@@ -504,8 +506,7 @@ def test_bench_resource_compaction_acceptance():
         [sys.executable, "benchmarks/bench_resource.py", "--compaction",
          "--quick"],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env("src:."))
     assert r.returncode == 0, r.stderr[-3000:]
     rows = {ln.split(",")[0]: ln for ln in r.stdout.splitlines()}
     on = rows.get("t5_compaction_on", "")

@@ -1,6 +1,5 @@
 """Distributed batch-query: routing properties + shard_map lookup on a real
 multi-device (host-platform) mesh via subprocess."""
-import os
 import subprocess
 import sys
 import textwrap
@@ -19,6 +18,8 @@ except ImportError:          # image has no hypothesis: use the shim
 from repro.core import distributed as dist
 from repro.core import hashcore as hc
 from repro.core import neighborhash as nh
+
+from conftest import subprocess_env
 
 
 class TestRouting:
@@ -129,7 +130,5 @@ def test_distributed_lookup_8_devices():
     """The paper's route->all_to_all->lookup->merge protocol on 8 shards."""
     r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+                       env=subprocess_env())
     assert "MULTIDEV_OK" in r.stdout, r.stderr[-3000:]

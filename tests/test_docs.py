@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+from conftest import subprocess_env
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -54,7 +56,6 @@ def test_readme_quickstart_snippet_runs():
         [sys.executable, os.path.join("tools", "check_docs.py"),
          "--snippet"],
         capture_output=True, text=True, timeout=600, cwd=REPO,
-        env={"PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env(None))
     assert r.returncode == 0, r.stderr[-3000:]
     assert "snippet OK" in r.stdout

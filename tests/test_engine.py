@@ -1,6 +1,5 @@
 """MultiTableEngine end-to-end: fused == independent, dedup, pipeline,
 engine-level strong-version pinning (ISSUE 1 tentpole acceptance)."""
-import os
 import subprocess
 import sys
 
@@ -13,6 +12,8 @@ from repro.core.engine import (EmbeddingTable, MultiTableEngine, QueryResult,
                                ScalarTable)
 from repro.core.hybrid_store import HybridKVStore
 from repro.data.synthetic import zipf_ids
+
+from conftest import subprocess_env
 
 SHARD_BYTES = 1 << 17
 
@@ -178,9 +179,7 @@ def test_bench_multitable_runs_to_completion():
     r = subprocess.run(
         [sys.executable, "benchmarks/bench_multitable.py"],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin",
-             "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env("src:."))
     assert r.returncode == 0, r.stderr[-3000:]
     assert "multitable/naive" in r.stdout
     assert "multitable/fused" in r.stdout

@@ -3,7 +3,6 @@ backends (engine / store / cluster), QoS lanes with weighted service and
 class-aware shed order, consistency modes incl. ``min_version``
 read-your-writes, constructor validation, and stats edge cases."""
 import math
-import os
 import subprocess
 import sys
 import threading
@@ -20,6 +19,8 @@ from repro.core.hybrid_store import HybridKVStore
 from repro.serve.scheduler import (BatchPolicy, QueueFullError,
                                    ServerClosedError)
 from repro.serve.server import QueryServer
+
+from conftest import subprocess_env
 
 N_KEYS = 1_500
 VALUE_BYTES = 16
@@ -610,8 +611,7 @@ def test_bench_qos_acceptance():
     r = subprocess.run(
         [sys.executable, "benchmarks/bench_serving.py", "--qos"],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env("src:."))
     assert r.returncode == 0, r.stderr[-3000:]
     line = [ln for ln in r.stdout.splitlines()
             if ln.startswith("serving/qos_acceptance")]

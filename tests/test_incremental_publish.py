@@ -2,7 +2,6 @@
 ``MultiTableEngine.publish_delta`` copy-on-writes only touched shards,
 retained versions stay bitwise intact, interleaved delta publishes + queries
 never mix versions, and the train step emits per-step deltas."""
-import os
 import subprocess
 import sys
 
@@ -11,6 +10,8 @@ import pytest
 
 from repro.core.engine import (EmbeddingTable, MultiTableEngine, ScalarTable,
                                VersionEvictedError)
+
+from conftest import subprocess_env
 
 SHARD_BYTES = 1 << 14
 
@@ -252,9 +253,7 @@ def test_bench_incremental_meets_speedup_floor():
     r = subprocess.run(
         [sys.executable, "benchmarks/bench_incremental.py"],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin",
-             "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env("src:."))
     assert r.returncode == 0, r.stderr[-3000:]
     assert "incremental/full_publish" in r.stdout
     row = next(line for line in r.stdout.splitlines()

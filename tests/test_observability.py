@@ -32,6 +32,8 @@ from repro.obs.bridge import (CLASS_STATS_METRICS, FABRIC_METRICS,
 from repro.obs.metrics import Counter, Gauge, Histogram, Registry
 from repro.obs.trace import Span, Tracer, sort_timeline
 
+from conftest import subprocess_env
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -233,7 +235,10 @@ class TestBridges:
         for rel in ("src/repro/obs/bridge.py", "src/repro/serve/scheduler.py",
                     "src/repro/serve/fabric.py", "src/repro/core/tiering.py",
                     "src/repro/core/versioning.py",
-                    "src/repro/stream/pipeline.py", "docs/observability.md"):
+                    "src/repro/stream/pipeline.py",
+                    "src/repro/traffic/driver.py",
+                    "src/repro/traffic/controller.py",
+                    "docs/observability.md"):
             dst = fake / rel
             dst.parent.mkdir(parents=True, exist_ok=True)
             shutil.copy(os.path.join(REPO, rel), dst)
@@ -462,8 +467,7 @@ def test_launcher_serves_metrics_and_emits_record(tmp_path):
         s.bind(("127.0.0.1", 0))
         port = s.getsockname()[1]
     record = tmp_path / "BENCH_fabric_smoke.json"
-    env = dict(os.environ, PYTHONPATH="src",
-               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    env = subprocess_env(inherit=True)
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.launch.fabric", "--smoke",
          "--metrics-port", str(port), "--trace-sample", "0.2",

@@ -1,7 +1,6 @@
 """Optimization-path correctness (§Perf variants must equal baselines):
 sparse embedding training, a2a/psum16 serving lookups, grad accumulation,
 flash-decode.  Multi-device checks run in subprocesses (8 host devices)."""
-import os
 import subprocess
 import sys
 import textwrap
@@ -20,6 +19,8 @@ from repro.models import common as cm
 from repro.models import recsys as rec
 from repro.train import optimizer as opt
 from repro.train import train_step as ts
+
+from conftest import subprocess_env
 
 
 @pytest.fixture(scope="module")
@@ -113,9 +114,7 @@ SERVE_SCRIPT = textwrap.dedent("""
 def test_serving_lookup_paths_8dev():
     r = subprocess.run([sys.executable, "-c", SERVE_SCRIPT],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+                       env=subprocess_env())
     assert "SERVE_PATHS_OK" in r.stdout, r.stderr[-3000:]
 
 
@@ -157,7 +156,5 @@ def test_flash_decode_matches_prefill_8dev():
     reproduce the prefill logits."""
     r = subprocess.run([sys.executable, "-c", FLASH_SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+                       env=subprocess_env())
     assert "FLASH_DECODE_OK" in r.stdout, r.stderr[-3000:]

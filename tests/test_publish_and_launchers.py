@@ -1,5 +1,4 @@
 """Delta publishing end-to-end + launcher (train/serve CLI) integration."""
-import os
 import subprocess
 import sys
 
@@ -10,6 +9,8 @@ from repro.core.publish import DeltaPublisher
 from repro.core.sharding import TableSpec, plan_shards
 from repro.core.versioning import ConsistentBatchClient, Generation, \
     ShardReplica
+
+from conftest import subprocess_env
 
 
 class TestDeltaPublisher:
@@ -63,8 +64,7 @@ def _run(mod, *args):
     return subprocess.run(
         [sys.executable, "-m", mod, *args],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env())
 
 
 @pytest.mark.slow

@@ -19,6 +19,8 @@ from repro.serve.scheduler import (BatchPolicy, DeadlineError, QueueFullError,
                                    ShedError)
 from repro.serve.server import QueryServer
 
+from conftest import subprocess_env
+
 SHARD_BYTES = 1 << 15
 N_KEYS = 2_000
 VALUE_BYTES = 16
@@ -480,8 +482,7 @@ def test_serve_concurrent_example_stress():
     r = subprocess.run(
         [sys.executable, "examples/serve_concurrent.py"],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env())
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout
     assert "future-version leaks: 0" in r.stdout
@@ -501,8 +502,7 @@ def test_bench_serving_acceptance():
     r = subprocess.run(
         [sys.executable, "benchmarks/bench_serving.py"],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env("src:."))
     assert r.returncode == 0, r.stderr[-3000:]
     line = [ln for ln in r.stdout.splitlines()
             if ln.startswith("serving/acceptance_8clients")]

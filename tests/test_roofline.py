@@ -1,7 +1,6 @@
 """Roofline analyzer: HLO shape parsing, collective accounting, and the
 empirical facts the methodology rests on (cost_analysis is per-device; scan
 bodies are counted once)."""
-import os
 import subprocess
 import sys
 import textwrap
@@ -12,6 +11,8 @@ import pytest
 from repro.roofline import analysis
 
 from repro.core import compat
+
+from conftest import subprocess_env
 
 
 def test_shape_bytes():
@@ -110,7 +111,5 @@ VERIFY_SCRIPT = textwrap.dedent("""
 def test_cost_analysis_conventions():
     r = subprocess.run([sys.executable, "-c", VERIFY_SCRIPT],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+                       env=subprocess_env())
     assert "VERIFY_OK" in r.stdout, r.stderr[-2000:]

@@ -13,7 +13,6 @@ Three layers, matching the subsystem's own structure:
    measured through ``StreamStats``, and graceful backlog shedding.
 3. A slow subprocess smoke of ``repro.launch.realtime --smoke``.
 """
-import os
 import subprocess
 import sys
 import threading
@@ -29,6 +28,8 @@ from repro.stream import (EventLog, OffsetTruncatedError, ProfileEMAUpdater,
                           SessionizedSource, StreamStats, StreamingTrainer,
                           TrendingAggregator, UnknownTopicError,
                           VersionedPublisher)
+
+from conftest import subprocess_env
 
 
 # ---------------------------------------------------------------------------
@@ -366,7 +367,6 @@ def test_realtime_launcher_smoke():
         [sys.executable, "-m", "repro.launch.realtime", "--smoke",
          "--drain-s", "10"],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        env=subprocess_env())
     assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
     assert "realtime SLO report" in r.stdout

@@ -1,0 +1,637 @@
+"""Deterministic tests for the traffic harness + adaptive control plane.
+
+Three layers, none timing-flaky:
+
+  - **loadgen**: the schedule is a pure function of a seeded
+    ``TrafficPattern`` — empirical zipf frequencies are checked against
+    the analytic pmf, reproducibility is byte-exact, and the QoS mix /
+    request shapes / burst windows match the pattern.  No clocks at all.
+  - **driver**: replayed against fake servers (instant tickets) with a
+    compressed ``time_scale``, so accounting (offered/completed/shed,
+    SLO attainment, burst goodput-p99 slicing) is exercised without a
+    real backend.
+  - **controller**: decisions are pure functions of stats *deltas* —
+    synthetic ``StatsSnapshot`` sequences injected via ``stats_fn`` step
+    :meth:`AdaptiveController.tick` directly: grow/shrink direction,
+    hysteresis holds, cooldown, bound clamps, follower lanes, and store
+    knobs, no background thread and no sleeps.
+
+The 4x-overload stress (RANKING defends its SLO strictly better than
+PREFETCH) runs a real ``QueryServer`` for ~2s; the full bench acceptance
+(adaptive beats every static config) is the ``slow``-marked subprocess.
+"""
+from __future__ import annotations
+
+import dataclasses
+import subprocess
+import sys
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+from repro.api.types import QoSClass
+from repro.serve.scheduler import (BatchPolicy, ClassSnapshot, ShedError,
+                                   StatsSnapshot)
+from repro.traffic import (AdaptiveController, ControllerConfig,
+                           DiurnalCurve, FlashCrowd, OpenLoopDriver,
+                           QoSMix, RequestShape, Sample, TrafficPattern,
+                           TrafficStats, ZipfianPopularity, burst_p99_ms,
+                           burst_windows, generate_schedule,
+                           offered_per_window, slo_report)
+
+
+# ---------------------------------------------------------------------------
+# loadgen: distributions
+# ---------------------------------------------------------------------------
+def test_zipf_empirical_matches_analytic_pmf():
+    zipf = ZipfianPopularity(vocab=500, skew=1.1)
+    rng = np.random.default_rng(123)
+    n = 200_000
+    ranks = zipf.sample(rng, n)
+    assert ranks.min() >= 0 and ranks.max() < 500
+    empirical = np.bincount(ranks, minlength=500) / n
+    pmf = zipf.pmf()
+    # total-variation distance between empirical and analytic; at 200k
+    # draws over 500 ranks this concentrates well below 0.02
+    tv = 0.5 * np.abs(empirical - pmf).sum()
+    assert tv < 0.02, tv
+    # rank-frequency law: head rank is the hottest, tail rank the coldest
+    assert empirical[0] == empirical.max()
+    assert pmf[0] / pmf[-1] == pytest.approx(500 ** 1.1, rel=1e-9)
+
+
+def test_zipf_skew_zero_is_uniform():
+    zipf = ZipfianPopularity(vocab=64, skew=0.0)
+    assert np.allclose(zipf.pmf(), 1.0 / 64)
+
+
+def test_zipf_validation():
+    with pytest.raises(ValueError):
+        ZipfianPopularity(vocab=0)
+    with pytest.raises(ValueError):
+        ZipfianPopularity(vocab=10, skew=-0.5)
+
+
+def test_diurnal_curve_trough_and_peak():
+    curve = DiurnalCurve(period_s=100.0, peak_to_trough=4.0, phase_frac=0.0)
+    assert curve.multiplier(0.0) == pytest.approx(1.0)
+    assert curve.multiplier(50.0) == pytest.approx(4.0)
+    assert curve.multiplier(100.0) == pytest.approx(1.0)
+
+
+def _pattern(**overrides) -> TrafficPattern:
+    base = dict(duration_s=4.0, base_session_rate=120.0, seed=7,
+                vocab=2_000, zipf_skew=1.1,
+                bursts=(FlashCrowd(1.0, 1.0, 4.0),),
+                mix=QoSMix(ranking=2.0, retrieval=1.0, prefetch=1.0),
+                requests_per_session=(2, 5), think_time_s=0.010)
+    base.update(overrides)
+    return TrafficPattern(**base)
+
+
+def test_schedule_reproducible_and_seed_sensitive():
+    a = generate_schedule(_pattern())
+    b = generate_schedule(_pattern())
+    assert len(a) == len(b) > 500
+    for ea, eb in zip(a, b):
+        assert (ea.t_s, ea.session, ea.qos, ea.budget_s) \
+            == (eb.t_s, eb.session, eb.qos, eb.budget_s)
+        assert ea.ranks.keys() == eb.ranks.keys()
+        for name in ea.ranks:
+            assert np.array_equal(ea.ranks[name], eb.ranks[name])
+    c = generate_schedule(_pattern(seed=8))
+    assert [e.t_s for e in a] != [e.t_s for e in c]
+
+
+def test_schedule_sorted_and_sessions_start_inside_run():
+    pattern = _pattern()
+    events = generate_schedule(pattern)
+    ts = [e.t_s for e in events]
+    assert ts == sorted(ts)
+    first_seen = {}
+    for e in events:
+        first_seen.setdefault(e.session, e.t_s)
+    # sessions *start* inside the run; think-time tails may spill past it
+    assert all(t < pattern.duration_s for t in first_seen.values())
+
+
+def test_qos_mix_fractions_and_shapes():
+    pattern = _pattern()
+    events = generate_schedule(pattern)
+    fracs = pattern.mix.fractions()
+    shapes = pattern.resolved_shapes()
+    counts = {q: 0 for q in QoSClass}
+    for e in events:
+        counts[e.qos] += 1
+        shape = shapes[e.qos]
+        assert e.budget_s == shape.budget_s
+        assert e.n_keys == sum(n for _, n in shape.tables)
+    n = len(events)
+    for q in QoSClass:
+        assert counts[q] / n == pytest.approx(fracs[q], abs=0.03)
+
+
+def test_qos_mix_zero_weight_class_absent():
+    pattern = _pattern(mix=QoSMix(ranking=1.0, retrieval=1.0, prefetch=0.0))
+    events = generate_schedule(pattern)
+    assert events
+    assert all(e.qos is not QoSClass.PREFETCH for e in events)
+
+
+def test_flash_crowd_elevates_offered_rate():
+    pattern = _pattern(duration_s=6.0, bursts=(FlashCrowd(2.0, 2.0, 4.0),),
+                       think_time_s=0.0)
+    assert pattern.rate(1.0) == pytest.approx(120.0)
+    assert pattern.rate(3.0) == pytest.approx(480.0)
+    events = generate_schedule(pattern)
+    rps = offered_per_window(events, 1.0)
+    inside = rps[2:4].mean()
+    outside = np.concatenate([rps[:2], rps[4:6]]).mean()
+    # Poisson noise on ~hundreds of arrivals/bin leaves a 4x step obvious
+    assert inside > 2.5 * outside, (inside, outside)
+
+
+def test_burst_windows_clip_to_run():
+    pattern = _pattern(duration_s=3.0,
+                       bursts=(FlashCrowd(1.0, 1.0, 2.0),
+                               FlashCrowd(2.5, 4.0, 2.0),
+                               FlashCrowd(5.0, 1.0, 2.0)))
+    assert burst_windows(pattern) == [(1.0, 2.0), (2.5, 3.0)]
+
+
+def test_offered_per_window_validation():
+    with pytest.raises(ValueError):
+        offered_per_window([], 0.0)
+    assert offered_per_window([], 1.0).size == 0
+
+
+def test_pattern_validation():
+    with pytest.raises(ValueError):
+        _pattern(duration_s=0.0)
+    with pytest.raises(ValueError):
+        _pattern(requests_per_session=(3, 2))
+    with pytest.raises(ValueError):
+        FlashCrowd(1.0, 1.0, 0.5)
+    with pytest.raises(ValueError):
+        QoSMix(ranking=0.0, retrieval=0.0, prefetch=0.0)
+    with pytest.raises(ValueError):
+        RequestShape(())
+
+
+# ---------------------------------------------------------------------------
+# driver: accounting against fake servers
+# ---------------------------------------------------------------------------
+class _FakeTicket:
+    def __init__(self, resp):
+        self._resp = resp
+
+    def result(self, timeout=None):
+        if isinstance(self._resp, Exception):
+            raise self._resp
+        return self._resp
+
+
+class _FakeServer:
+    """Settles every ticket instantly; optionally sheds one QoS class."""
+
+    def __init__(self, shed_qos=(), latency_s=0.005):
+        self.shed_qos = set(shed_qos)
+        self.latency_s = latency_s
+        self.requests = []
+
+    def submit(self, request):
+        self.requests.append(request)
+        if request.qos in self.shed_qos:
+            raise ShedError("lane full")
+        return _FakeTicket(SimpleNamespace(latency_s=self.latency_s))
+
+
+def test_traffic_stats_attainment_counts_sheds_as_misses():
+    stats = TrafficStats()
+    now = time.monotonic()
+    for _ in range(4):
+        stats.on_offer(QoSClass.RANKING, 0.0, now)
+    stats.on_outcome(QoSClass.RANKING, "completed", 0.010, True)
+    stats.on_outcome(QoSClass.RANKING, "completed", 0.090, False)
+    stats.on_outcome(QoSClass.RANKING, "shed", float("nan"), False)
+    stats.on_outcome(QoSClass.RANKING, "failed", float("nan"), False)
+    snap = stats.snapshot()
+    assert (snap.offered, snap.completed, snap.shed, snap.failed) \
+        == (4, 2, 1, 1)
+    assert snap.attainment == pytest.approx(0.25)
+    cls = snap.per_class[QoSClass.RANKING.name]
+    assert (cls.slo_hits, cls.slo_misses) == (1, 3)
+
+
+def test_burst_p99_goodput_penalty_math():
+    win = [(1.0, 2.0)]
+    mk = lambda t, out, lat: Sample(t_s=t, qos=QoSClass.RANKING,  # noqa: E731
+                                    outcome=out, latency_s=lat,
+                                    budget_s=0.05)
+    samples = ([mk(1.1, "completed", 0.010)] * 98
+               + [mk(1.2, "shed", float("nan"))]
+               + [mk(1.3, "completed", 9.9)]          # capped at ceiling
+               + [mk(0.5, "completed", 5.0)]          # outside the window
+               + [Sample(t_s=1.5, qos=QoSClass.PREFETCH, outcome="shed",
+                         latency_s=float("nan"), budget_s=None)])
+    p99 = burst_p99_ms(samples, win, qos=QoSClass.RANKING, ceiling_s=0.2)
+    expected = float(np.percentile([0.010] * 98 + [0.2, 0.2], 99.0) * 1e3)
+    assert p99 == pytest.approx(expected)
+    # all-shed must score the full penalty, not look like a latency win
+    sheds = [mk(1.1, "shed", float("nan"))] * 10
+    assert burst_p99_ms(sheds, win, ceiling_s=0.2) \
+        == pytest.approx(200.0)
+
+
+def test_driver_replays_full_schedule_open_loop():
+    pattern = _pattern(duration_s=1.0, base_session_rate=80.0,
+                       bursts=(FlashCrowd(0.3, 0.4, 4.0),))
+    server = _FakeServer(shed_qos={QoSClass.PREFETCH})
+    keys = {"item_attr": np.arange(pattern.vocab, dtype=np.uint64) + 1000}
+    driver = OpenLoopDriver(server, pattern, keys=keys,
+                            time_scale=0.05, reapers=2)
+    snap = driver.run()
+    n = len(driver.schedule)
+    assert n > 100
+    assert snap.offered == n
+    assert snap.completed + snap.shed + snap.failed == n
+    assert snap.failed == 0
+    # exactly the shed class shed; everything else completed
+    assert snap.shed == snap.per_class[QoSClass.PREFETCH.name].offered
+    assert snap.per_class[QoSClass.RANKING.name].shed == 0
+    assert len(driver.samples) == n
+    # latency comes from the server's own measurement, not reap wall time
+    assert snap.per_class[QoSClass.RANKING.name].p99_ms \
+        == pytest.approx(5.0)
+    # ranks map through the provided key universe
+    assert all(t.min() >= 1000
+               for r in server.requests for t in r.tables.values())
+    report = slo_report(pattern, snap, driver.samples)
+    assert report["offered"] == n
+    assert set(report["burst"]) == {q.name for q in QoSClass}
+    assert report["per_class"][QoSClass.PREFETCH.name]["attainment"] == 0.0
+
+
+def test_driver_validation():
+    with pytest.raises(ValueError):
+        OpenLoopDriver(_FakeServer(), _pattern(), time_scale=0.0)
+    with pytest.raises(ValueError):
+        OpenLoopDriver(_FakeServer(), _pattern(), reapers=0)
+
+
+# ---------------------------------------------------------------------------
+# controller: decisions from injected stats sequences
+# ---------------------------------------------------------------------------
+START_POLICY = BatchPolicy(max_batch_keys=512, max_batch_requests=5,
+                           max_wait_s=1e-3)
+
+
+class _FakeLaneServer:
+    """Holds real ``BatchPolicy`` objects per lane — the validation
+    oracle stays in the loop — without a scheduler behind them."""
+
+    def __init__(self, policy=START_POLICY):
+        self._pol = {q.name: policy for q in QoSClass}
+
+    def lane_policies(self):
+        return dict(self._pol)
+
+    def retune_lane(self, qos, **changes):
+        pol = dataclasses.replace(self._pol[qos.name], **changes)
+        self._pol[qos.name] = pol
+        return pol
+
+
+def _snap(submitted=0, completed=0, shed=0, lat_sum_ms=0.0,
+          batches=0, keys_requested=0, svc_sum_ms=0.0):
+    """Synthetic cumulative snapshot with the activity on RANKING."""
+    per_class = {q.name: ClassSnapshot() for q in QoSClass}
+    per_class[QoSClass.RANKING.name] = ClassSnapshot(
+        submitted=submitted, completed=completed, shed_deadline=shed,
+        latency_sum_ms=lat_sum_ms)
+    return StatsSnapshot(submitted=submitted, completed=completed,
+                         batches=batches, keys_requested=keys_requested,
+                         service_sum_ms=svc_sum_ms, per_class=per_class)
+
+
+def _controller(seq, server=None, *, config=None, budget_s=0.100,
+                stores=()):
+    """Controller whose stats_fn walks ``seq`` (constructor eats seq[0])."""
+    it = iter(seq)
+    return AdaptiveController(server or _FakeLaneServer(),
+                              {QoSClass.RANKING: budget_s},
+                              config=config or ControllerConfig(
+                                  min_samples=10),
+                              stores=stores,
+                              stats_fn=lambda: next(it))
+
+
+def test_grow_on_slack_when_cap_binding():
+    server = _FakeLaneServer()
+    # interval: 100 completions at mean 10ms (low water is 25ms), no
+    # sheds, batches run at full key occupancy -> the cap binds -> grow
+    ctl = _controller([_snap(),
+                       _snap(submitted=100, completed=100, lat_sum_ms=1000.0,
+                             batches=10, keys_requested=5120,
+                             svc_sum_ms=50.0)], server)
+    rec = ctl.tick()
+    lane = rec["lanes"][QoSClass.RANKING.name]
+    assert lane["action"] == "grow", lane
+    pol = server.lane_policies()[QoSClass.RANKING.name]
+    assert pol.max_batch_keys == round(512 * 1.4)
+    assert pol.max_wait_s == pytest.approx(1e-3 * 1.4)
+    # the request cap scales with the key cap at the initial 512/5 shape
+    assert pol.max_batch_requests == round(pol.max_batch_keys * 5 / 512)
+
+
+def test_hold_on_slack_when_cap_not_binding():
+    server = _FakeLaneServer()
+    # same slack, but batches average 100 keys against a 512 cap: growing
+    # an unbinding cap would just park the knobs somewhere untested
+    ctl = _controller([_snap(),
+                       _snap(submitted=100, completed=100, lat_sum_ms=1000.0,
+                             batches=10, keys_requested=1000,
+                             svc_sum_ms=50.0)], server)
+    rec = ctl.tick()
+    lane = rec["lanes"][QoSClass.RANKING.name]
+    assert lane["action"] == "hold" and "not binding" in lane["reason"]
+    assert server.lane_policies()[QoSClass.RANKING.name] == START_POLICY
+
+
+def test_shrink_on_pressure_with_expensive_batches():
+    server = _FakeLaneServer()
+    # mean latency 90ms of a 100ms budget + batches costing 60ms each
+    # (over svc_high_frac): the far side of the optimum -> shrink
+    ctl = _controller([_snap(),
+                       _snap(submitted=100, completed=100, lat_sum_ms=9000.0,
+                             batches=10, keys_requested=5120,
+                             svc_sum_ms=600.0)], server)
+    rec = ctl.tick()
+    assert rec["lanes"][QoSClass.RANKING.name]["action"] == "shrink"
+    pol = server.lane_policies()[QoSClass.RANKING.name]
+    assert pol.max_batch_keys == round(512 * 0.6)
+    assert pol.max_wait_s == pytest.approx(1e-3 * 0.6)
+
+
+def test_grow_on_pressure_with_cheap_batches():
+    server = _FakeLaneServer()
+    # 10% interval shed with 5ms batches: capacity starvation on the
+    # near side of the optimum — amortize, don't shrink into collapse
+    ctl = _controller([_snap(),
+                       _snap(submitted=100, completed=90, shed=10,
+                             lat_sum_ms=900.0, batches=20,
+                             keys_requested=2000, svc_sum_ms=100.0)],
+                      server)
+    rec = ctl.tick()
+    lane = rec["lanes"][QoSClass.RANKING.name]
+    assert lane["action"] == "grow" and "cheap" in lane["reason"]
+    assert server.lane_policies()[QoSClass.RANKING.name].max_batch_keys \
+        == round(512 * 1.4)
+
+
+def test_stalled_interval_counts_as_expensive():
+    server = _FakeLaneServer()
+    # sheds but not one finished batch all interval: a wide collect is
+    # stalling the pipeline; growing it further would be the wrong move
+    ctl = _controller([_snap(),
+                       _snap(submitted=100, completed=0, shed=50)],
+                      server)
+    rec = ctl.tick()
+    lane = rec["lanes"][QoSClass.RANKING.name]
+    assert lane["action"] == "shrink" and "svc none" in lane["reason"]
+
+
+def test_hold_in_band_and_on_thin_interval():
+    server = _FakeLaneServer()
+    # mean 40ms sits inside [25, 60]ms of a 100ms budget -> hold; then an
+    # interval with fewer than min_samples submissions -> hold
+    ctl = _controller([_snap(),
+                       _snap(submitted=100, completed=100, lat_sum_ms=4000.0,
+                             batches=10, keys_requested=5120,
+                             svc_sum_ms=50.0),
+                       _snap(submitted=105, completed=105, lat_sum_ms=4025.0,
+                             batches=11, keys_requested=5220,
+                             svc_sum_ms=55.0)], server)
+    assert ctl.tick()["lanes"][QoSClass.RANKING.name]["reason"] == "in band"
+    assert ctl.tick()["lanes"][QoSClass.RANKING.name]["reason"] \
+        == "too few interval samples"
+    assert server.lane_policies()[QoSClass.RANKING.name] == START_POLICY
+
+
+def test_cooldown_holds_after_action():
+    server = _FakeLaneServer()
+    pressure = lambda k: _snap(submitted=100 * k, completed=90 * k,  # noqa: E731
+                               shed=10 * k, lat_sum_ms=900.0 * k,
+                               batches=20 * k, keys_requested=2000 * k,
+                               svc_sum_ms=100.0 * k)
+    cfg = ControllerConfig(min_samples=10, cooldown_ticks=2)
+    ctl = _controller([pressure(k) for k in range(5)], server, config=cfg)
+    assert ctl.tick()["lanes"]["RANKING"]["action"] == "grow"
+    assert ctl.tick()["lanes"]["RANKING"]["reason"] == "cooldown"
+    assert ctl.tick()["lanes"]["RANKING"]["reason"] == "cooldown"
+    assert ctl.tick()["lanes"]["RANKING"]["action"] == "grow"
+
+
+def test_knobs_clamp_at_bounds():
+    cfg = ControllerConfig(min_samples=10, min_batch_keys=256,
+                           max_batch_keys=2048, min_wait_s=5e-4,
+                           max_wait_s=2e-3)
+    server = _FakeLaneServer()
+    grow = lambda k: _snap(submitted=100 * k, completed=90 * k,  # noqa: E731
+                           shed=10 * k, lat_sum_ms=900.0 * k,
+                           batches=20 * k, keys_requested=2000 * k,
+                           svc_sum_ms=100.0 * k)
+    ctl = _controller([grow(k) for k in range(12)], server, config=cfg)
+    for _ in range(11):
+        ctl.tick()
+    pol = server.lane_policies()[QoSClass.RANKING.name]
+    assert pol.max_batch_keys == 2048
+    assert pol.max_wait_s == pytest.approx(2e-3)
+
+    server2 = _FakeLaneServer()
+    shrink = lambda k: _snap(submitted=100 * k, completed=100 * k,  # noqa: E731
+                             lat_sum_ms=9000.0 * k, batches=10 * k,
+                             keys_requested=5120 * k,
+                             svc_sum_ms=600.0 * k)
+    ctl2 = _controller([shrink(k) for k in range(12)], server2, config=cfg)
+    for _ in range(11):
+        ctl2.tick()
+    pol = server2.lane_policies()[QoSClass.RANKING.name]
+    assert pol.max_batch_keys == 256
+    assert pol.max_wait_s == pytest.approx(5e-4)
+    assert pol.max_batch_requests >= 1
+
+
+def test_convergence_knobs_settle_once_in_band():
+    """Pressure-grow until the band is reached, then the knobs freeze —
+    the hysteresis dead band prevents tail-chasing oscillation."""
+    server = _FakeLaneServer()
+    tot = dict(submitted=0, completed=0, shed=0, lat_sum_ms=0.0,
+               batches=0, keys_requested=0, svc_sum_ms=0.0)
+
+    def add(**delta):           # counters are cumulative: accumulate
+        for k, v in delta.items():
+            tot[k] += v
+        return _snap(**tot)
+
+    seq = [_snap()]
+    for _ in range(4):        # capacity starvation: grow phase
+        seq.append(add(submitted=100, completed=90, shed=10,
+                       lat_sum_ms=900.0, batches=20,
+                       keys_requested=2000, svc_sum_ms=100.0))
+    for _ in range(4):        # recovered: interval mean 40ms, in band
+        seq.append(add(submitted=100, completed=100, lat_sum_ms=4000.0,
+                       batches=10, keys_requested=5120, svc_sum_ms=50.0))
+    ctl = _controller(seq, server)
+    trail = []
+    for _ in range(8):
+        ctl.tick()
+        trail.append(server.lane_policies()[QoSClass.RANKING.name]
+                     .max_batch_keys)
+    assert trail[:4] == sorted(trail[:4])      # monotone approach
+    assert trail[3] > START_POLICY.max_batch_keys
+    assert len(set(trail[3:])) == 1            # settled, no oscillation
+    snap = ctl.snapshot()
+    assert snap.ticks == 8 and snap.grows == 4 and snap.holds == 4
+    lanes = ctl.decisions()["lanes"][QoSClass.RANKING.name]
+    assert lanes["max_batch_keys"] == trail[-1]
+    assert lanes["max_batch_requests"] \
+        == round(trail[-1] * 5 / 512)
+
+
+def test_budgetless_lanes_follow_widest_controlled_lane():
+    server = _FakeLaneServer()
+    ctl = _controller([_snap(),
+                       _snap(submitted=100, completed=90, shed=10,
+                             lat_sum_ms=900.0, batches=20,
+                             keys_requested=2000, svc_sum_ms=100.0)],
+                      server)
+    rec = ctl.tick()
+    follow = rec["lanes"][QoSClass.PREFETCH.name]
+    assert follow["action"] == "follow"
+    rank = server.lane_policies()[QoSClass.RANKING.name]
+    pre = server.lane_policies()[QoSClass.PREFETCH.name]
+    assert (pre.max_batch_keys, pre.max_wait_s) \
+        == (rank.max_batch_keys, rank.max_wait_s)
+
+
+class _FakeStore:
+    def __init__(self, hot_fraction=0.10, compaction_threshold=0.40):
+        self.hot_fraction = hot_fraction
+        self.compaction_threshold = compaction_threshold
+        self.tiers = SimpleNamespace(hot_hits=0, cold_misses=0)
+
+    def set_hot_fraction(self, f):
+        self.hot_fraction = f
+
+    def set_compaction_threshold(self, t):
+        self.compaction_threshold = t
+
+    def stats_snapshot(self):
+        return self.tiers
+
+
+def test_store_knobs_hot_fraction_chases_hit_rate():
+    store = _FakeStore()
+    ctl = _controller([_snap(), _snap(), _snap()], stores=(store,))
+    cfg = ctl.config
+    store.tiers = SimpleNamespace(hot_hits=30, cold_misses=70)
+    out = ctl.tick()["stores"]
+    assert out["hit_rate"] == pytest.approx(0.30)
+    assert store.hot_fraction == pytest.approx(0.10 + cfg.hot_step)
+    # calm tick (no pressure): threshold pinned to the tight calm value
+    assert store.compaction_threshold == pytest.approx(cfg.compact_calm)
+    # near-perfect hit rate gives hot memory back
+    store.tiers = SimpleNamespace(hot_hits=130, cold_misses=70)
+    ctl.tick()
+    assert store.hot_fraction == pytest.approx(0.10)
+
+
+def test_controller_validation():
+    with pytest.raises(ValueError):
+        AdaptiveController(_FakeLaneServer(), {})
+    with pytest.raises(ValueError):
+        AdaptiveController(_FakeLaneServer(), {QoSClass.RANKING: 0.0})
+    for bad in (dict(lat_low_frac=0.7, lat_high_frac=0.6),
+                dict(svc_high_frac=0.0), dict(bind_frac=1.5),
+                dict(grow_factor=0.9), dict(shrink_factor=1.1),
+                dict(min_batch_keys=4096, max_batch_keys=512),
+                dict(min_wait_s=0.0)):
+        with pytest.raises(ValueError):
+            ControllerConfig(**bad)
+
+
+# ---------------------------------------------------------------------------
+# 4x-overload stress: the deadline lane defends its SLO
+# ---------------------------------------------------------------------------
+def test_overload_ranking_beats_prefetch():
+    """Under a 4x flash crowd past server capacity, the weighted lanes +
+    deadline-aware close must keep the budget lane (RANKING) strictly
+    ahead of the best-effort lane (PREFETCH) — the QoS regression the
+    harness exists to catch."""
+    from repro.api.backends import StoreBackend
+    from repro.core.hybrid_store import HybridKVStore
+    from repro.serve.server import QueryServer
+
+    class SlowStoreBackend(StoreBackend):
+        # fixed 8ms service per micro-batch: with the 4-request close
+        # rule below, capacity is ~1000 req/s — the crowd offers more
+        def finish(self, inflight):
+            time.sleep(8e-3)
+            return super().finish(inflight)
+
+    pattern = TrafficPattern(
+        duration_s=2.0, base_session_rate=100.0, seed=3, vocab=2_000,
+        bursts=(FlashCrowd(0.4, 1.2, 4.0),),
+        mix=QoSMix(ranking=1.0, retrieval=0.0, prefetch=1.0),
+        requests_per_session=(2, 4), think_time_s=0.010,
+        shapes={
+            QoSClass.RANKING: RequestShape((("t", 32),), budget_s=0.080),
+            QoSClass.PREFETCH: RequestShape((("t", 32),), budget_s=None),
+        })
+    keys = np.arange(pattern.vocab, dtype=np.uint64)
+    rng = np.random.default_rng(5)
+    values = rng.integers(0, 255, (pattern.vocab, 8), dtype=np.uint8)
+    store = HybridKVStore(keys, values, hot_fraction=0.25)
+    server = QueryServer(SlowStoreBackend({"t": store}),
+                         BatchPolicy(max_batch_keys=256,
+                                     max_batch_requests=4,
+                                     max_wait_s=1e-3))
+    driver = OpenLoopDriver(server, pattern, keys={"t": keys}, reapers=4)
+    try:
+        snap = driver.run()
+    finally:
+        server.close()
+        store.close()
+    windows = burst_windows(pattern)
+    rank_p99 = burst_p99_ms(driver.samples, windows,
+                            qos=QoSClass.RANKING, ceiling_s=0.5)
+    pre_p99 = burst_p99_ms(driver.samples, windows,
+                           qos=QoSClass.PREFETCH, ceiling_s=0.5)
+    rank = snap.per_class[QoSClass.RANKING.name]
+    pre = snap.per_class[QoSClass.PREFETCH.name]
+    assert rank.offered > 100 and pre.offered > 100
+    assert rank_p99 < pre_p99, (rank_p99, pre_p99)
+    assert rank.p50_ms < pre.p50_ms, (rank.p50_ms, pre.p50_ms)
+    # shedding lands on the lane with no user staring at it
+    assert rank.shed / rank.offered < pre.shed / pre.offered, \
+        (rank.shed, rank.offered, pre.shed, pre.offered)
+
+
+# ---------------------------------------------------------------------------
+# the full acceptance, as CI runs it
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_bench_traffic_adaptive_beats_statics():
+    r = subprocess.run(
+        [sys.executable, "benchmarks/bench_traffic.py", "--quick"],
+        capture_output=True, text=True, timeout=600,
+        env=subprocess_env("src:."))
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("traffic/adaptive_acceptance")]
+    assert line, r.stdout[-2000:]
+    assert "adaptive_beats_all=1" in line[0], line[0]

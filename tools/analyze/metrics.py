@@ -42,6 +42,14 @@ SILOS = [
      "tiering.py"), "TierStats", set()),
     ("STREAM_METRICS", os.path.join("src", "repro", "stream",
      "pipeline.py"), "StreamSnapshot", set()),
+    ("TRAFFIC_METRICS", os.path.join("src", "repro", "traffic",
+     "driver.py"), "TrafficSnapshot", {"per_class"}),
+    ("TRAFFIC_CLASS_METRICS", os.path.join("src", "repro", "traffic",
+     "driver.py"), "ClassTraffic", set()),
+    ("CONTROLLER_METRICS", os.path.join("src", "repro", "traffic",
+     "controller.py"), "ControllerSnapshot", {"per_lane"}),
+    ("LANE_KNOB_METRICS", os.path.join("src", "repro", "traffic",
+     "controller.py"), "LaneKnobs", set()),
 ]
 # catalog dicts that carry names but map no dataclass (derived ratios,
 # VersionWindow's plain-dict counters, the freshness histogram)
